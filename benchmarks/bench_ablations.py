@@ -1,0 +1,53 @@
+"""Paper Figures 3 / 5 / 6: fringe size s, candidate count r, and the
+score cache — quality stays, runtime drops (StackOverflow hypergraph)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import metrics
+from repro.core.hype import HypeParams, hype_partition
+
+from .common import dataset, emit
+
+
+def run(k: int = 32):
+    hg = dataset("stackoverflow")
+
+    # Fig 3: fringe size sweep
+    for s in (2, 10, 50, 200):
+        t0 = time.perf_counter()
+        a = hype_partition(hg, k, HypeParams(seed=0, s=s))
+        dt = time.perf_counter() - t0
+        emit(f"ablation/fringe_s{s}", dt * 1e6,
+             f"km1={metrics.k_minus_1(hg, a)}")
+
+    # Fig 5: candidate count sweep (r=2 should be best or near-best)
+    for r in (1, 2, 4, 8):
+        t0 = time.perf_counter()
+        a = hype_partition(hg, k, HypeParams(seed=0, r=r))
+        dt = time.perf_counter() - t0
+        emit(f"ablation/candidates_r{r}", dt * 1e6,
+             f"km1={metrics.k_minus_1(hg, a)}")
+
+    # Fig 6: lazy score cache on/off
+    for cache in (True, False):
+        t0 = time.perf_counter()
+        a, st = hype_partition(hg, k, HypeParams(seed=0, use_cache=cache),
+                               return_stats=True)
+        dt = time.perf_counter() - t0
+        emit(f"ablation/cache_{'on' if cache else 'off'}", dt * 1e6,
+             f"km1={metrics.k_minus_1(hg, a)};"
+             f"score_computations={st.score_computations}")
+
+    # Eq.1-literal vs universe external-neighbors score (paper ambiguity;
+    # DESIGN.md §3)
+    for mode in ("universe", "eq1"):
+        t0 = time.perf_counter()
+        a = hype_partition(hg, k, HypeParams(seed=0, dext_mode=mode))
+        dt = time.perf_counter() - t0
+        emit(f"ablation/dext_{mode}", dt * 1e6,
+             f"km1={metrics.k_minus_1(hg, a)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode, so
+wall-times are NOT TPU-indicative; we report (a) correctness deltas vs
+the jnp oracle and (b) the oracle's XLA-CPU time as the reference number.
+The derived column carries the analytic FLOPs of the call so the roofline
+table can place each kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hype_score.ops import hype_scores
+from repro.kernels.hype_score.ref import hype_scores_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.neighbor_agg.ops import neighbor_agg
+from repro.kernels.neighbor_agg.ref import neighbor_agg_ref
+
+from .common import emit, timed
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # flash attention
+    B, S, H, D = 1, 512, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    ref, t_ref = timed(lambda: jax.block_until_ready(
+        attention_ref(q, k, v)), repeats=3)
+    out = flash_attention(q, k, v)
+    err = float(jnp.abs(out - ref).max())
+    flops = 4 * B * H * S * S * D
+    emit("kernel/flash_attention/ref_xla", t_ref * 1e6,
+         f"maxerr={err:.2e};flops={flops}")
+
+    # hype_score
+    nbrs = jnp.asarray(rng.integers(-1, 10_000, size=(4096, 64)), jnp.int32)
+    fringe = jnp.asarray(rng.choice(10_000, 10, replace=False), jnp.int32)
+    ref2, t2 = timed(lambda: jax.block_until_ready(
+        hype_scores_ref(nbrs, fringe)), repeats=5)
+    out2 = hype_scores(nbrs, fringe)
+    emit("kernel/hype_score/ref_xla", t2 * 1e6,
+         f"exact={bool((out2 == ref2).all())};cmp={4096 * 64 * 10}")
+
+    # embedding bag
+    table = jnp.asarray(rng.normal(size=(65536, 128)), jnp.float32)
+    ids = jnp.asarray(rng.integers(-1, 65536, size=(1024, 8)), jnp.int32)
+    ref3, t3 = timed(lambda: jax.block_until_ready(
+        embedding_bag_ref(table, ids)), repeats=5)
+    out3 = embedding_bag(table, ids)
+    emit("kernel/embedding_bag/ref_xla", t3 * 1e6,
+         f"maxerr={float(jnp.abs(out3 - ref3).max()):.2e};"
+         f"rows={1024 * 8}")
+
+    # neighbor agg
+    x = jnp.asarray(rng.normal(size=(4096, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 128)) * 0.1, jnp.float32)
+    nb = jnp.asarray(rng.integers(-1, 4096, size=(512, 15)), jnp.int32)
+    ref4, t4 = timed(lambda: jax.block_until_ready(
+        neighbor_agg_ref(x, nb, w)), repeats=5)
+    out4 = neighbor_agg(x, nb, w)
+    emit("kernel/neighbor_agg/ref_xla", t4 * 1e6,
+         f"maxerr={float(jnp.abs(out4 - ref4).max()):.2e};"
+         f"flops={512 * 128 * 128 * 2}")
+
+
+if __name__ == "__main__":
+    run()

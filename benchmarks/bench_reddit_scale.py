@@ -1,0 +1,40 @@
+"""Paper Figure 10 analog: the largest hypergraph (reddit-like), k=128 —
+HYPE quality AND runtime vs streaming MinMax. Also the k-independence of
+HYPE's runtime (paper §IV-A)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import metrics
+from repro.core.partition_api import partition
+
+from .common import dataset, emit
+
+
+def run():
+    hg = dataset("reddit")
+    emit("reddit/stats", 0.0,
+         f"n={hg.n};m={hg.m};pins={hg.n_pins}")
+    res = {}
+    for m in ("hype", "minmax_nb", "minmax_eb"):
+        t0 = time.perf_counter()
+        a = partition(hg, 128, m, seed=0)
+        dt = time.perf_counter() - t0
+        km1 = metrics.k_minus_1(hg, a)
+        res[m] = (km1, dt)
+        emit(f"reddit/k128/{m}", dt * 1e6, f"km1={km1}")
+    h, mm = res["hype"][0], res["minmax_eb"][0]
+    emit("reddit/k128/hype_vs_minmax_eb", 0.0,
+         f"improvement={100 * (1 - h / max(mm, 1)):.1f}%")
+
+    # runtime vs k: HYPE flat, MinMax grows (paper Fig 9b)
+    for k in (2, 32, 128):
+        for m in ("hype", "minmax_nb"):
+            t0 = time.perf_counter()
+            partition(hg, k, m, seed=0)
+            dt = time.perf_counter() - t0
+            emit(f"reddit/runtime_vs_k/{m}/k{k}", dt * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

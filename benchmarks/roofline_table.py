@@ -1,0 +1,60 @@
+"""Render the §Roofline table from artifacts/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = "artifacts/dryrun"
+
+
+def load_records(mesh="single"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render(mesh="single") -> str:
+    """Re-derives the roofline from the stored per-device costs so that
+    MODEL_FLOPS refinements apply without recompiling."""
+    from repro.launch.roofline import model_flops, roofline_report
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | bound | "
+        "useful_ratio | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    n_dev = 512 if mesh == "multi" else 256
+    for r in load_records(mesh):
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"SKIP | — | — |")
+            continue
+        c = r["cost_per_device"]
+        mf = model_flops(r["arch"], r["shape"], r.get("meta", {}))
+        rf = roofline_report(
+            flops_per_device=c["flops"], bytes_per_device=c["bytes"],
+            collective_wire_bytes=c["wire"], n_devices=n_dev,
+            model_flops_global=mf)
+        ur = rf.get("useful_flops_ratio")
+        fr = rf.get("roofline_fraction")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['bound']} | "
+            + (f"{ur:.3f}" if ur is not None else "—") + " | "
+            + (f"{fr:.4f}" if fr is not None else "—") + " |")
+    return "\n".join(rows)
+
+
+def run():
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        if recs:
+            print(f"\n## Roofline ({mesh}-pod mesh)\n")
+            print(render(mesh))
+
+
+if __name__ == "__main__":
+    run()

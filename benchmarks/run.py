@@ -1,0 +1,37 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick mode
+    BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Mapping to the paper:
+  bench_partition_quality  -> Fig 7, 8, 9 (quality/runtime/balance vs k)
+  bench_ablations          -> Fig 3 (s), Fig 5 (r), Fig 6 (cache)
+  bench_reddit_scale       -> Fig 10 + runtime-vs-k claims
+  bench_beyond_paper       -> §VI future work + HYPE-driven placement
+  bench_kernels            -> Pallas kernel oracles
+  roofline_table           -> EXPERIMENTS.md §Roofline source
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from . import (bench_ablations, bench_beyond_paper, bench_kernels,
+                   bench_partition_quality, bench_reddit_scale,
+                   roofline_table)
+    print("name,us_per_call,derived")
+    bench_partition_quality.run()
+    bench_ablations.run()
+    bench_reddit_scale.run()
+    bench_beyond_paper.run()
+    bench_kernels.run()
+    roofline_table.run()
+    print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""HYPE-partitioned embedding tables for distributed recsys serving.
+
+    PYTHONPATH=src python examples/partition_embedding_tables.py
+
+The paper's motivating application (§I: "minimizing the number of
+transactions in distributed data placement"): embedding rows co-accessed
+by one query form a hyperedge; HYPE places rows so queries touch few
+shards. Demonstrates the full path: co-access log -> hypergraph -> HYPE ->
+RowPlacement -> shard_map all-to-all lookup, and compares remote-lookup
+traffic vs hash placement.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.partitioned_embedding import (RowPlacement, assemble_bags,
+                                              distributed_lookup,
+                                              partition_rows_hype,
+                                              route_queries)
+
+
+def main():
+    k, vocab, d, bag = 8, 4096, 64, 16
+    rng = np.random.default_rng(0)
+
+    # co-access log: queries touch correlated row neighborhoods
+    n_q = 3000
+    centers = rng.integers(0, vocab, n_q)
+    queries = [np.unique((centers[i] + rng.geometric(0.08, bag)) % vocab)
+               for i in range(n_q)]
+
+    print("partitioning rows with HYPE (co-access hypergraph) ...")
+    asg_hype = partition_rows_hype(vocab, queries, k, seed=0)
+    asg_hash = (np.arange(vocab) * 2654435761 % vocab % k).astype(np.int32)
+
+    table = rng.normal(size=(vocab, d)).astype(np.float32)
+    mesh = jax.make_mesh((k,), ("devices",))
+
+    for name, asg in (("hype", asg_hype), ("hash", asg_hash)):
+        pl_ = RowPlacement.from_assignment(asg, k)
+        tables = jnp.asarray(pl_.shard_table(table))
+
+        # placement metrics under AFFINITY routing: each query is served
+        # by the shard owning most of its rows (this is the (k-1)-style
+        # objective HYPE optimizes: shards touched per query)
+        touched, remote = [], []
+        for i in range(n_q):
+            counts = np.bincount(pl_.owner[queries[i]], minlength=k)
+            touched.append(int((counts > 0).sum()))
+            remote.append(1.0 - counts.max() / max(counts.sum(), 1))
+        print(f"{name:5s}: shards touched/query = {np.mean(touched):.2f}, "
+              f"remote-lookup fraction (affinity-routed) = "
+              f"{np.mean(remote):.3f}")
+
+        # run one real distributed lookup round-trip on shard 0
+        ids = np.full((4, bag), -1, np.int64)
+        for r in range(4):
+            q = queries[rng.integers(0, n_q)]
+            ids[r, :min(len(q), bag)] = q[:bag]
+        reqs, backs = [], []
+        for shard in range(k):
+            req, back, _ = route_queries(pl_, ids, shard, q_max=bag)
+            reqs.append(req)
+            backs.append(back)
+        resp = distributed_lookup(tables, jnp.asarray(np.stack(reqs)), mesh)
+        out0 = np.asarray(assemble_bags(resp[0], jnp.asarray(backs[0]),
+                                        (4, bag)))
+        valid = ids >= 0
+        vecs = table[np.where(valid, ids, 0)] * valid[..., None]
+        expect = vecs.sum(1) / np.maximum(valid.sum(1), 1)[:, None]
+        assert np.allclose(out0, expect, atol=1e-5), "lookup mismatch"
+
+    print("\nHYPE placement clusters each query's rows on few shards; "
+          "hash placement scatters every query across ~all shards.")
+
+
+if __name__ == "__main__":
+    main()

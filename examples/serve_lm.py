@@ -1,0 +1,76 @@
+"""Batched LM serving demo: prefill + decode with KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Runs continuous batched decoding for a small model: prefill a batch of
+prompts, then decode tokens step by step with the rolling/linear cache —
+the same serve_step the dry-run lowers for decode_32k / long_500k.
+Verifies decode logits match the full-forward oracle.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (TransformerConfig, forward,
+                                      init_params, prefill, serve_step)
+
+
+def main():
+    cfg = TransformerConfig(
+        name="serve-demo", n_layers=4, d_model=256, n_heads=8, n_kv_heads=2,
+        d_head=32, d_ff=1024, vocab=4096, window=64, remat=False,
+        dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S, new_tokens = 8, 48, 32
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    prefill_j = jax.jit(lambda p, t: prefill(p, t, cfg))
+    decode_j = jax.jit(lambda p, c, t: serve_step(p, c, t, cfg))
+
+    t0 = time.perf_counter()
+    cache, logits = prefill_j(params, prompts)
+    cache = dict(cache)
+    # extend rolling buffer to full window if prompt shorter
+    Skv = cfg.window
+    if cache["k"].shape[2] < Skv:
+        pad = Skv - cache["k"].shape[2]
+        cache["k"] = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0)))
+        cache["v"] = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0)))
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    # greedy decode
+    out_tokens = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for _ in range(new_tokens):
+        out_tokens.append(tok)
+        logits, cache = decode_j(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"prefill {B}x{S} in {t_prefill * 1e3:.1f} ms; "
+          f"decoded {new_tokens} tokens/seq in {t_decode * 1e3:.1f} ms "
+          f"({B * new_tokens / t_decode:.0f} tok/s)")
+
+    # correctness: first decoded step == oracle next-token from full fwd
+    x, _ = forward(params, prompts, cfg)
+    oracle = jnp.argmax(x[:, -1] @ params["lm_head"], -1)
+    match = float((gen[:, 0] == oracle).mean())
+    print(f"decode vs full-forward argmax agreement: {match:.2f}")
+    assert match == 1.0
+
+
+if __name__ == "__main__":
+    main()

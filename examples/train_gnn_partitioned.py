@@ -1,0 +1,145 @@
+"""End-to-end driver: HYPE-partitioned distributed GNN training.
+
+    PYTHONPATH=src python examples/train_gnn_partitioned.py [--steps 300]
+
+The paper's technique doing its actual job:
+  1. generate a community-structured graph;
+  2. build its neighborhood hypergraph and partition nodes with HYPE;
+  3. train a GraphSAGE node classifier for a few hundred steps where every
+     layer's aggregation runs through the shard_map halo exchange
+     (all-to-all volume set by partition quality);
+  4. report the learned accuracy and the traffic savings vs random
+     placement.
+
+Runs on this container's CPU with 8 simulated devices.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hype import HypeParams
+from repro.core.minmax import random_partition
+from repro.dist.partitioned_gnn import (build_partitioned_graph,
+                                        graph_to_hypergraph, halo_aggregate,
+                                        partition_graph_hype,
+                                        scatter_to_parts)
+from repro.models.common import softmax_cross_entropy
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+def community_graph(n, n_comm, deg, rng):
+    """Graph with contiguous planted communities + weak global edges."""
+    block = n // n_comm
+    comm = np.arange(n) // block
+    comm = np.minimum(comm, n_comm - 1)
+    src = rng.integers(0, n, n * deg)
+    local = rng.random(n * deg) < 0.985
+    near = (src + rng.integers(1, max(block // 4, 2), n * deg)) % n
+    far = rng.integers(0, n, n * deg)
+    dst = np.where(local, near, far)
+    keep = src != dst
+    return src[keep].astype(np.int32), dst[keep].astype(np.int32), comm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--k", type=int, default=8)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    n, k, d, n_classes = args.n, args.k, 64, 8
+    src, dst, comm = community_graph(n, 16, 8, rng)
+    print(f"graph: n={n} edges={src.size}")
+
+    # --- HYPE placement (boundary all-gather exchange) ---
+    t0 = time.perf_counter()
+    asg = partition_graph_hype(n, src, dst, k, seed=0)
+    pg = build_partitioned_graph(n, src, dst, asg, k, mode="allgather")
+    pg_rand = build_partitioned_graph(
+        n, src, dst,
+        random_partition(graph_to_hypergraph(n, src, dst), k, seed=0), k,
+        mode="allgather")
+    rf_h = pg.stats["remote_edge_frac"]
+    rf_r = pg_rand.stats["remote_edge_frac"]
+    print(f"HYPE placement in {time.perf_counter() - t0:.1f}s: "
+          f"remote-edge fraction {rf_h:.2f} vs random {rf_r:.2f} "
+          f"({rf_h / max(rf_r, 1e-9):.2f}x cross-device message traffic); "
+          f"boundary B_max {pg.s_max} vs {pg_rand.s_max}")
+
+    mesh = jax.make_mesh((k,), ("devices",))
+
+    # features carry community signal + noise; labels = community % classes
+    proto = rng.normal(size=(16, d)).astype(np.float32)
+    x = (proto[comm] + rng.normal(size=(n, d)) * 1.0).astype(np.float32)
+    labels = (comm % n_classes).astype(np.int32)
+
+    xp = jnp.asarray(scatter_to_parts(pg, x))
+    yp = jnp.asarray(scatter_to_parts(pg, labels[:, None].astype(np.float32))
+                     )[..., 0].astype(jnp.int32)
+    maskp = jnp.asarray(pg.node_mask)
+    pga = {k2: jnp.asarray(getattr(pg, k2)) for k2 in
+           ("send_idx", "edge_src_local", "edge_dst_local", "edge_mask")}
+
+    # --- 2-layer GraphSAGE on the partitioned layout ---
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    params = {
+        "w1s": jax.random.normal(ks[0], (d, 64)) * 0.1,
+        "w1n": jax.random.normal(ks[1], (d, 64)) * 0.1,
+        "w2s": jax.random.normal(ks[2], (64, 64)) * 0.1,
+        "w2n": jax.random.normal(ks[3], (64, 64)) * 0.1,
+        "dec": jax.random.normal(ks[4], (64, n_classes)) * 0.1,
+    }
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps,
+                          weight_decay=0.0)
+    opt = init_adamw(params, opt_cfg)
+
+    def loss_fn(p, xp):
+        agg1 = halo_aggregate(pga, xp, lambda h: h, mesh, mode="allgather")
+        h = jax.nn.relu(xp @ p["w1s"] + agg1 @ p["w1n"])
+        agg2 = halo_aggregate(pga, h, lambda h: h, mesh, mode="allgather")
+        h2 = jax.nn.relu(h @ p["w2s"] + agg2 @ p["w2n"])
+        logits = h2 @ p["dec"]
+        m = maskp.astype(jnp.float32)
+        return softmax_cross_entropy(logits, yp, mask=m)
+
+    @jax.jit
+    def step(p, opt, xp):
+        loss, g = jax.value_and_grad(loss_fn)(p, xp)
+        p, opt, stats = adamw_update(g, opt, p, opt_cfg)
+        return p, opt, loss
+
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        params, opt, loss = step(params, opt, xp)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(loss):.4f}")
+    dt = time.perf_counter() - t0
+    print(f"trained {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.1f} steps/s)")
+
+    # accuracy
+    agg1 = halo_aggregate(pga, xp, lambda h: h, mesh, mode="allgather")
+    h = jax.nn.relu(xp @ params["w1s"] + agg1 @ params["w1n"])
+    agg2 = halo_aggregate(pga, h, lambda h: h, mesh, mode="allgather")
+    h2 = jax.nn.relu(h @ params["w2s"] + agg2 @ params["w2n"])
+    pred = jnp.argmax(h2 @ params["dec"], -1)
+    acc = float((jnp.where(maskp, pred == yp, False)).sum()
+                / maskp.sum())
+    print(f"train accuracy: {acc:.3f} (classes={n_classes})")
+    assert acc > 0.5, "should be well above chance"
+
+
+if __name__ == "__main__":
+    main()

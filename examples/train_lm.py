@@ -1,0 +1,72 @@
+"""Train a small LM with the full production stack on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--dim 256]
+
+Exercises: mesh + sharded train step, grad accumulation, AdamW with
+cosine schedule, deterministic shard-aware data stream, fault-tolerant
+driver with async checkpointing — the same code paths the dry-run proves
+at 512 devices, here on 8 simulated CPU devices.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import LM_RULES, make_constrain
+from repro.models.transformer import TransformerConfig, init_params, lm_loss
+from repro.train.fault_tolerance import FTConfig, run_training
+from repro.train.optimizer import AdamWConfig, init_adamw
+from repro.train.train_loop import make_train_step, split_microbatches
+from repro.data.pipeline import TokenStream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=2)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = TransformerConfig(
+        name="demo", n_layers=args.layers, d_model=args.dim,
+        n_heads=8, n_kv_heads=4, d_head=args.dim // 8, d_ff=args.dim * 4,
+        vocab=4096, remat=False, dtype=jnp.float32,
+        constrain=make_constrain(mesh, LM_RULES))
+    print(f"model: {cfg.params_dense / 1e6:.1f}M params")
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    opt = init_adamw(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(lambda p, b: lm_loss(p, b, cfg),
+                                      opt_cfg, accum_steps=args.accum))
+
+    stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=0)
+
+    def batch_at(step):
+        b = stream.batch_at(step)
+        return split_microbatches(
+            {k: jnp.asarray(v) for k, v in b.items()}, args.accum)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir, mesh:
+        res = run_training(step_fn, (params, opt), None, args.steps,
+                           FTConfig(ckpt_dir=ckpt_dir, ckpt_every=50),
+                           batch_at=batch_at)
+    losses = [m["loss"] for m in res.metrics_history]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{res.steps_done} steps")
+    assert losses[-1] < losses[0] - 0.5
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Architecture registry: ``get_arch(arch_id)`` -> ArchDef.
+
+Ten assigned architectures + the paper's own partitioning workload
+(``hype_paper``). Each ArchDef exposes exact full-scale configs, reduced
+smoke configs, per-shape input specs, and step builders. See base.py.
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "schnet": "repro.configs.schnet",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "two-tower-retrieval": "repro.configs.two_tower_retrieval",
+    "hype_paper": "repro.configs.hype_paper",
+}
+
+ARCH_IDS = [a for a in _MODULES if a != "hype_paper"]
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH

@@ -1,0 +1,52 @@
+"""ArchDef: the uniform interface every architecture config implements.
+
+An ArchDef carries:
+  * ``build_cfg(reduced, constrain)``   — model config (exact numbers from
+    the public source, or a tiny same-family config for CPU smoke tests);
+  * ``shapes``                          — shape-name -> ShapeSpec;
+  * ``input_specs(shape, reduced)``     — ShapeDtypeStruct stand-ins for
+    every model input (global, unsharded logical shapes);
+  * ``step_kind(shape)``                — train | prefill | decode | serve
+    | retrieve (decode/serve lower serve_step, NOT train_step);
+  * ``skip(shape)``                     — reason string if the (arch,shape)
+    cell is skipped (e.g. long_500k on pure full-attention archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                      # train|prefill|decode|serve|retrieve
+    meta: Mapping                  # family-specific numbers
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    family: str                    # lm | gnn | recsys
+    build_cfg: Callable            # (reduced, constrain) -> model config
+    shapes: Mapping[str, ShapeSpec]
+    input_specs: Callable          # (shape_name, reduced) -> dict of SDS
+    skip: Callable = lambda shape: None
+    # family knobs used by the launch harness
+    accum_steps: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+    def step_kind(self, shape: str) -> str:
+        return self.shapes[shape].kind
+
+
+def round_up(x: int, mult: int) -> int:
+    return int(math.ceil(x / mult) * mult)

@@ -1,0 +1,23 @@
+"""The paper's own workload: HYPE partitioning runs (not a neural arch).
+
+Exposes the benchmark configurations used in EXPERIMENTS.md — dataset
+generators at the paper's Table II scales and the algorithm parameter
+grid (k, s, r, caching) of Figures 3-10.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HypePaperConfig:
+    datasets: tuple = ("github", "stackoverflow", "reddit")
+    ks: tuple = (2, 4, 8, 16, 32, 64, 128)
+    s: int = 10
+    r: int = 2
+    use_cache: bool = True
+    methods: tuple = ("hype", "minmax_nb", "minmax_eb", "shp", "multilevel",
+                      "random")
+
+
+ARCH = HypePaperConfig()

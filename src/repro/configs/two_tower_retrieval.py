@@ -1,0 +1,58 @@
+"""two-tower-retrieval [recsys] embed_dim=256 tower_mlp=1024-512-256
+interaction=dot — sampled-softmax retrieval [RecSys'19 (YouTube);
+unverified].
+
+Shapes:
+  train_batch     batch=65,536               (training)
+  serve_p99       batch=512                  (online inference)
+  serve_bulk      batch=262,144              (offline scoring)
+  retrieval_cand  batch=1 n_cand=1,000,000   (retrieval scoring)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.recsys import TwoTowerConfig
+from .base import ArchDef, ShapeSpec, sds
+
+SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", {"batch": 65_536}),
+    "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262_144}),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieve",
+                                {"batch": 1, "n_cand": 1_048_576}),
+}
+
+_FULL = dict(embed_dim=256, tower_dims=(1024, 512, 256), n_fields=4,
+             bag_size=8, user_vocab=16_777_216, item_vocab=16_777_216)
+_RED = dict(embed_dim=16, tower_dims=(64, 32, 16), n_fields=4, bag_size=4,
+            user_vocab=1024, item_vocab=1024)
+
+
+def build_cfg(reduced: bool = False, constrain=None) -> TwoTowerConfig:
+    kw = _RED if reduced else _FULL
+    extra = {} if constrain is None else {"constrain": constrain}
+    return TwoTowerConfig(name="two-tower-retrieval", **kw, **extra)
+
+
+def input_specs(shape_name: str, reduced: bool = False):
+    cfg = build_cfg(reduced)
+    meta = SHAPES[shape_name].meta
+    B = 32 if reduced else meta["batch"]
+    ids = (B, cfg.n_fields, cfg.bag_size)
+    if shape_name == "train_batch":
+        return {"user_ids": sds(ids, jnp.int32),
+                "item_ids": sds(ids, jnp.int32),
+                "item_logq": sds((B,), jnp.float32)}
+    if shape_name in ("serve_p99", "serve_bulk"):
+        return {"user_ids": sds(ids, jnp.int32),
+                "item_ids": sds(ids, jnp.int32)}
+    n_cand = 2048 if reduced else meta["n_cand"]
+    out_dim = cfg.tower_dims[-1]
+    return {"user_ids": sds((B, cfg.n_fields, cfg.bag_size), jnp.int32),
+            "cand_embs": sds((n_cand, out_dim), jnp.float32)}
+
+
+ARCH = ArchDef(arch_id="two-tower-retrieval", family="recsys",
+               build_cfg=build_cfg, shapes=SHAPES, input_specs=input_specs,
+               notes="embedding tables are the HYPE placement target")

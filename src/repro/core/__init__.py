@@ -1,0 +1,9 @@
+# The paper's primary contribution: HYPE hypergraph partitioning.
+#   hypergraph.py    — dual-CSR hypergraph structure + flip trick
+#   hype.py          — faithful Alg. 1-3 engine (s/r/caching opts)
+#   hype_jax.py      — jittable JAX engine + parallel k-way growth
+#   minmax.py        — streaming MinMax EB/NB baseline (NIPS'15)
+#   shp.py           — Social-Hash-style swap baseline (VLDB'17)
+#   multilevel.py    — mini-hMETIS (coarsen/bisect/FM) baseline
+#   metrics.py       — (k-1), cut, SOED, imbalance, replication
+#   partition_api.py — unified partition(hg, k, method) entry point

@@ -1,0 +1,398 @@
+"""JAX-native HYPE: TPU-adapted neighborhood expansion.
+
+Two engines, both pure ``jax.lax`` control flow (jit-compatible, runs on
+TPU/CPU, differentiably irrelevant but shardable):
+
+1. ``hype_jax_partition`` — a faithful sequential HYPE on *dense padded*
+   CSR arrays. One ``lax.while_loop`` iteration moves one vertex, exactly
+   like Algorithm 1-3 with the s/r/caching optimizations. Used to
+   cross-validate the numpy engine and to run the partitioner on-device.
+
+2. ``hype_parallel_partition`` — the paper's §VI future-work direction
+   ("grow the k core sets in parallel"), realized as a TPU-native batched
+   expansion: all k cores take one growth step per iteration; candidate
+   scoring is vectorized over (partition, candidate) with masked segment
+   ops; collisions (two cores wanting the same vertex) are resolved by
+   priority = (lower current core size, lower score). This turns HYPE's
+   inner loop into dense matrix work that maps onto the MXU, which is the
+   hardware-adaptation story for this paper (see DESIGN.md).
+
+Hardware adaptation note: the paper's per-vertex heap + hash-set machinery
+is CPU-idiomatic and does not map to TPU. The JAX engines replace
+  * the active-edge min-heap        -> masked argmin over edge-size vector,
+  * hash-set neighbor dedup         -> boolean membership vectors,
+  * the lazy score cache            -> a score vector updated with
+                                       ``.at[].set`` under a staleness mask.
+Both engines operate on hypergraphs padded to (n, max_deg) / (m, max_size).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hypergraph import Hypergraph
+
+_INF = jnp.float32(3.4e38)
+
+
+class PaddedHypergraph(NamedTuple):
+    """Dense padded views of a hypergraph (device-resident).
+
+    ``n``/``m`` are recovered from static array shapes so the structure is
+    a plain jit-able pytree of arrays.
+    """
+    v2e: jax.Array        # (n, max_deg) int32, -1 padded
+    e2v: jax.Array        # (m, max_size) int32, -1 padded
+    edge_sizes: jax.Array  # (m,) int32
+
+    @property
+    def n(self) -> int:
+        return self.v2e.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.e2v.shape[0]
+
+    @classmethod
+    def from_hypergraph(cls, hg: Hypergraph) -> "PaddedHypergraph":
+        max_deg = max(1, int(hg.vertex_degrees.max()) if hg.n else 1)
+        max_size = max(1, int(hg.edge_sizes.max()) if hg.m else 1)
+        v2e = np.full((hg.n, max_deg), -1, dtype=np.int32)
+        e2v = np.full((hg.m, max_size), -1, dtype=np.int32)
+        for v in range(hg.n):
+            es = hg.vertex_edges(v)
+            v2e[v, :es.size] = es
+        for e in range(hg.m):
+            ps = hg.edge_pins(e)
+            e2v[e, :ps.size] = ps
+        return cls(v2e=jnp.asarray(v2e), e2v=jnp.asarray(e2v),
+                   edge_sizes=jnp.asarray(hg.edge_sizes, dtype=jnp.int32))
+
+
+def _neighbor_mask(ph: PaddedHypergraph, v: jax.Array) -> jax.Array:
+    """Boolean N(v) membership vector of shape (n,)."""
+    es = ph.v2e[v]                                    # (max_deg,)
+    valid_e = es >= 0
+    pins = ph.e2v[jnp.where(valid_e, es, 0)]          # (max_deg, max_size)
+    pins = jnp.where(valid_e[:, None] & (pins >= 0), pins, ph.n)
+    mask = jnp.zeros(ph.n + 1, dtype=bool).at[pins.reshape(-1)].set(True)
+    mask = mask[:ph.n].at[v].set(False)
+    return mask
+
+
+def _d_ext(ph: PaddedHypergraph, v: jax.Array, in_fringe: jax.Array,
+           assignment: jax.Array) -> jax.Array:
+    """|N(v) ∩ V'| — external-neighbors score (see hype.py docstring)."""
+    nb = _neighbor_mask(ph, v)
+    external = nb & (~in_fringe) & (assignment < 0)
+    return jnp.sum(external).astype(jnp.float32)
+
+
+class _SeqState(NamedTuple):
+    assignment: jax.Array    # (n,) int32, -1 unassigned
+    in_fringe: jax.Array     # (n,) bool
+    fringe: jax.Array        # (s,) int32, -1 empty slots
+    cache: jax.Array         # (n,) float32, <0 = missing
+    edge_active: jax.Array   # (m,) bool  (incident to current core)
+    core_size: jax.Array     # () int32
+    rand_key: jax.Array
+
+
+def _seq_grow(ph: PaddedHypergraph, state: _SeqState, part: int,
+              target: jax.Array, s: int, r: int) -> _SeqState:
+    """Grow core set `part` to `target` vertices (one while_loop)."""
+    n, m = ph.n, ph.m
+
+    def pick_random_unassigned(key, assignment, in_fringe):
+        key, sub = jax.random.split(key)
+        avail = (assignment < 0) & (~in_fringe)
+        p = avail.astype(jnp.float32)
+        idx = jnp.argmax(p * jax.random.uniform(sub, (n,), minval=0.5, maxval=1.0))
+        return key, jnp.where(jnp.any(avail), idx, -1).astype(jnp.int32)
+
+    def add_to_core(st: _SeqState, v: jax.Array) -> _SeqState:
+        assignment = st.assignment.at[v].set(part)
+        in_fringe = st.in_fringe.at[v].set(False)
+        es = ph.v2e[v]
+        edge_active = st.edge_active.at[jnp.where(es >= 0, es, 0)].set(
+            st.edge_active[jnp.where(es >= 0, es, 0)] | (es >= 0))
+        return st._replace(assignment=assignment, in_fringe=in_fringe,
+                           edge_active=edge_active,
+                           core_size=st.core_size + 1)
+
+    def upd8_fringe(st: _SeqState) -> _SeqState:
+        # --- candidate selection: r vertices from smallest active edges ---
+        # An edge is usable if active and has >=1 pin in the universe.
+        pins_univ = (st.assignment[jnp.where(ph.e2v >= 0, ph.e2v, 0)] < 0) \
+            & (~st.in_fringe[jnp.where(ph.e2v >= 0, ph.e2v, 0)]) & (ph.e2v >= 0)
+        edge_live = st.edge_active & jnp.any(pins_univ, axis=1)
+        sizes = jnp.where(edge_live, ph.edge_sizes, jnp.iinfo(jnp.int32).max)
+
+        def take_candidate(carry, _):
+            cand, cand_cnt, taken = carry
+            # smallest live edge with a pin not yet taken this round
+            pin_ok = pins_univ & (~taken[jnp.where(ph.e2v >= 0, ph.e2v, 0)])
+            live = edge_live & jnp.any(pin_ok, axis=1)
+            e = jnp.argmin(jnp.where(live, sizes, jnp.iinfo(jnp.int32).max))
+            any_live = jnp.any(live)
+            row_ok = pin_ok[e]
+            j = jnp.argmax(row_ok)
+            v = jnp.where(any_live & row_ok[j], ph.e2v[e, j], -1)
+            cand = cand.at[cand_cnt].set(jnp.where(v >= 0, v, -1))
+            cand_cnt = cand_cnt + (v >= 0).astype(jnp.int32)
+            taken = taken.at[jnp.where(v >= 0, v, n)].set(True)
+            return (cand, cand_cnt, taken), None
+
+        taken0 = jnp.zeros(n + 1, dtype=bool)
+        (cand, _, _), _ = jax.lax.scan(
+            take_candidate, (jnp.full((r,), -1, jnp.int32), jnp.int32(0), taken0),
+            None, length=r)
+
+        # --- update cache for candidates (lazy) ---
+        def upd_cache(cache, v):
+            miss = (v >= 0) & (cache[jnp.where(v >= 0, v, 0)] < 0)
+            sc = jax.lax.cond(
+                miss,
+                lambda: _d_ext(ph, jnp.where(v >= 0, v, 0), st.in_fringe,
+                               st.assignment),
+                lambda: jnp.float32(0))
+            return jax.lax.cond(
+                miss, lambda c: c.at[v].set(sc), lambda c: c, cache), None
+        cache, _ = jax.lax.scan(upd_cache, st.cache, cand)
+
+        # --- fringe = top-s smallest scores of fringe ∪ candidates ---
+        pool = jnp.concatenate([st.fringe, cand])                   # (s+r,)
+        valid = pool >= 0
+        # dedup (candidates are never in fringe by construction)
+        scores = jnp.where(valid, cache[jnp.where(valid, pool, 0)], _INF)
+        order = jnp.argsort(scores)
+        pool_sorted = pool[order]
+        new_fringe = pool_sorted[:s]
+        evicted = pool_sorted[s:]
+        in_fringe = st.in_fringe
+        in_fringe = in_fringe.at[jnp.where(evicted >= 0, evicted, 0)].set(
+            in_fringe[jnp.where(evicted >= 0, evicted, 0)] & (evicted < 0))
+        in_fringe = in_fringe.at[jnp.where(new_fringe >= 0, new_fringe, 0)].set(
+            in_fringe[jnp.where(new_fringe >= 0, new_fringe, 0)] | (new_fringe >= 0))
+        st = st._replace(cache=cache, fringe=new_fringe, in_fringe=in_fringe)
+
+        # --- random restart if fringe empty ---
+        def restart(st: _SeqState) -> _SeqState:
+            key, v = pick_random_unassigned(st.rand_key, st.assignment,
+                                            st.in_fringe)
+            fr = st.fringe.at[0].set(v)
+            inf = st.in_fringe.at[jnp.where(v >= 0, v, 0)].set(
+                st.in_fringe[jnp.where(v >= 0, v, 0)] | (v >= 0))
+            cache = st.cache.at[jnp.where(v >= 0, v, 0)].set(
+                jnp.where(v >= 0, jnp.float32(0), st.cache[0]))
+            return st._replace(fringe=fr, in_fringe=inf, rand_key=key,
+                               cache=cache)
+        return jax.lax.cond(jnp.all(st.fringe < 0), restart, lambda x: x, st)
+
+    def upd8_core(st: _SeqState) -> _SeqState:
+        scores = jnp.where(st.fringe >= 0,
+                           st.cache[jnp.where(st.fringe >= 0, st.fringe, 0)],
+                           _INF)
+        i = jnp.argmin(scores)
+        v = st.fringe[i]
+        st = st._replace(fringe=st.fringe.at[i].set(-1))
+        return jax.lax.cond(v >= 0, lambda s_: add_to_core(s_, v),
+                            lambda s_: s_, st)
+
+    def body(st: _SeqState) -> _SeqState:
+        return upd8_core(upd8_fringe(st))
+
+    def cond(st: _SeqState):
+        return st.core_size < target
+
+    # seed vertex
+    key, seed_v = pick_random_unassigned(state.rand_key, state.assignment,
+                                         state.in_fringe)
+    state = state._replace(rand_key=key, core_size=jnp.int32(0),
+                           cache=jnp.full((n,), -1.0, jnp.float32),
+                           edge_active=jnp.zeros((m,), bool),
+                           fringe=jnp.full((s,), -1, jnp.int32))
+    state = jax.lax.cond(seed_v >= 0,
+                         lambda s_: add_to_core(s_, seed_v),
+                         lambda s_: s_, state)
+    return jax.lax.while_loop(cond, body, state)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "s", "r"))
+def _hype_jax_impl(ph: PaddedHypergraph, k: int, s: int, r: int,
+                   seed: jax.Array) -> jax.Array:
+    n = ph.n
+    base, rem = divmod(n, k)
+    state = _SeqState(
+        assignment=jnp.full((n,), -1, jnp.int32),
+        in_fringe=jnp.zeros((n,), bool),
+        fringe=jnp.full((s,), -1, jnp.int32),
+        cache=jnp.full((n,), -1.0, jnp.float32),
+        edge_active=jnp.zeros((ph.m,), bool),
+        core_size=jnp.int32(0),
+        rand_key=jax.random.PRNGKey(seed),
+    )
+    for i in range(k - 1):
+        target = jnp.int32(base + (1 if i < rem else 0))
+        state = _seq_grow(ph, state, i, target, s, r)
+        # release fringe
+        fr = state.fringe
+        in_fringe = state.in_fringe.at[jnp.where(fr >= 0, fr, 0)].set(
+            state.in_fringe[jnp.where(fr >= 0, fr, 0)] & (fr < 0))
+        state = state._replace(in_fringe=in_fringe,
+                               fringe=jnp.full((s,), -1, jnp.int32))
+    # last partition absorbs the remainder
+    assignment = jnp.where(state.assignment < 0, k - 1, state.assignment)
+    return assignment
+
+
+def hype_jax_partition(hg: Hypergraph, k: int, *, s: int = 10, r: int = 2,
+                       seed: int = 0) -> np.ndarray:
+    """Sequential HYPE as a single jitted JAX program."""
+    ph = PaddedHypergraph.from_hypergraph(hg)
+    return np.asarray(_hype_jax_impl(ph, k, s, r, seed))
+
+
+# --------------------------------------------------------------------------- #
+# Parallel k-way growth (paper §VI future work — beyond-paper contribution)
+# --------------------------------------------------------------------------- #
+
+@functools.partial(jax.jit, static_argnames=("k", "c"))
+def _parallel_impl(ph: PaddedHypergraph, k: int, c: int, seed: jax.Array):
+    """All k cores grow simultaneously; one step assigns <= k vertices.
+
+    Per step, every partition scores ``c`` candidate vertices drawn from its
+    smallest active hyperedges (vectorized over partitions), picks its best,
+    and collisions are resolved in favor of the smaller core. Vertices whose
+    partitions lost a collision retry next step.
+    """
+    n, m = ph.n, ph.m
+    base, rem = divmod(n, k)
+    targets = jnp.asarray([base + (1 if i < rem else 0) for i in range(k)],
+                          dtype=jnp.int32)
+
+    key = jax.random.PRNGKey(seed)
+    key, sub = jax.random.split(key)
+    seeds = jax.random.choice(sub, n, shape=(k,), replace=False)
+    assignment = jnp.full((n,), -1, jnp.int32).at[seeds].set(
+        jnp.arange(k, dtype=jnp.int32))
+    core_sizes = jnp.ones((k,), jnp.int32)
+    # edge_owner_active[p, e]: edge e incident to core p
+    edge_active = jnp.zeros((k, m), bool)
+    es0 = ph.v2e[seeds]                                  # (k, max_deg)
+    edge_active = edge_active.at[
+        jnp.arange(k)[:, None], jnp.where(es0 >= 0, es0, m)].set(
+            True, mode="drop")
+
+    e2v_safe = jnp.where(ph.e2v >= 0, ph.e2v, 0)
+    e2v_valid = ph.e2v >= 0
+
+    def step(carry):
+        assignment, core_sizes, edge_active, key, stall = carry
+        unassigned = assignment < 0
+
+        # (k, m): live edges per partition
+        pin_univ = unassigned[e2v_safe] & e2v_valid       # (m, max_size)
+        edge_has_univ = jnp.any(pin_univ, axis=1)         # (m,)
+        live = edge_active & edge_has_univ[None, :]       # (k, m)
+        sizes = jnp.where(live, ph.edge_sizes[None, :],
+                          jnp.iinfo(jnp.int32).max)       # (k, m)
+
+        # c candidates per partition from the c smallest live edges
+        neg_sz, eidx = jax.lax.top_k(-sizes, c)           # (k, c)
+        has_edge = neg_sz > -jnp.iinfo(jnp.int32).max
+        # first universe pin of each selected edge
+        rows = pin_univ[eidx]                              # (k, c, max_size)
+        j = jnp.argmax(rows, axis=-1)                      # (k, c)
+        cand = jnp.where(has_edge & jnp.take_along_axis(rows, j[..., None],
+                                                        axis=-1)[..., 0],
+                         ph.e2v[eidx, j], -1)              # (k, c)
+
+        # score candidates: d_ext = |N(v) ∩ V'| (no fringe in parallel mode)
+        def score_one(v):
+            nb = _neighbor_mask(ph, jnp.where(v >= 0, v, 0))
+            sc = jnp.sum(nb & unassigned).astype(jnp.float32)
+            return jnp.where(v >= 0, sc, _INF)
+        scores = jax.vmap(jax.vmap(score_one))(cand)       # (k, c)
+
+        # each partition picks its best candidate
+        bi = jnp.argmin(scores, axis=1)                    # (k,)
+        pick = cand[jnp.arange(k), bi]                     # (k,)
+        pick_score = scores[jnp.arange(k), bi]
+        full = core_sizes >= targets
+        want = (pick >= 0) & (~full)
+        # collision resolution: smaller core wins, then lower score
+        prio = core_sizes.astype(jnp.float32) * 1e6 + pick_score
+        prio = jnp.where(want, prio, _INF)
+        best_for_v = jnp.full((n + 1,), _INF).at[
+            jnp.where(want, pick, n)].min(prio)
+        win = want & (prio <= best_for_v[jnp.where(want, pick, n)])
+        # break exact ties by partition id: lowest id wins
+        first_p = jnp.full((n + 1,), k, jnp.int32).at[
+            jnp.where(win, pick, n)].min(
+                jnp.where(win, jnp.arange(k, dtype=jnp.int32), k))
+        win = win & (first_p[jnp.where(win, pick, n)] == jnp.arange(k))
+
+        assignment = assignment.at[jnp.where(win, pick, n)].set(
+            jnp.arange(k, dtype=jnp.int32), mode="drop")
+        core_sizes = core_sizes + win.astype(jnp.int32)
+        # activate edges of newly added vertices
+        es = ph.v2e[jnp.where(win, pick, 0)]               # (k, max_deg)
+        upd = (es >= 0) & win[:, None]
+        edge_active = edge_active.at[
+            jnp.arange(k)[:, None], jnp.where(upd, es, m)].set(
+                True, mode="drop")
+
+        # stall detection: if nobody won but vertices remain, pick random
+        # vertices for the emptiest non-full partitions.
+        any_win = jnp.any(win)
+        key, sub = jax.random.split(key)
+
+        def rescue(args):
+            assignment, core_sizes, edge_active = args
+            p = jnp.argmin(jnp.where(full, jnp.iinfo(jnp.int32).max,
+                                     core_sizes))
+            avail = assignment < 0
+            v = jnp.argmax(avail.astype(jnp.float32)
+                           * jax.random.uniform(sub, (n,), minval=0.5,
+                                                maxval=1.0))
+            ok = jnp.any(avail)
+            assignment = assignment.at[v].set(
+                jnp.where(ok, p.astype(jnp.int32), assignment[v]))
+            core_sizes = core_sizes.at[p].add(ok.astype(jnp.int32))
+            es = ph.v2e[v]
+            upd = (es >= 0) & ok
+            edge_active = edge_active.at[p, jnp.where(upd, es, m)].set(
+                True, mode="drop")
+            return assignment, core_sizes, edge_active
+
+        assignment, core_sizes, edge_active = jax.lax.cond(
+            any_win, lambda a: a, rescue,
+            (assignment, core_sizes, edge_active))
+        return assignment, core_sizes, edge_active, key, jnp.int32(0)
+
+    def cond(carry):
+        assignment, core_sizes, *_ = carry
+        return jnp.any(assignment < 0) & jnp.any(core_sizes < targets)
+
+    carry = (assignment, core_sizes, edge_active, key, jnp.int32(0))
+    assignment, core_sizes, *_ = jax.lax.while_loop(cond, step, carry)
+    # distribute leftovers by per-partition deficit (keeps balance exact)
+    deficit = jnp.maximum(targets - core_sizes, 0)
+    bounds = jnp.cumsum(deficit)
+    rank = jnp.cumsum((assignment < 0).astype(jnp.int32)) - 1
+    part_for_rank = jnp.searchsorted(bounds, rank, side="right")
+    part_for_rank = jnp.minimum(part_for_rank, k - 1).astype(jnp.int32)
+    assignment = jnp.where(assignment < 0, part_for_rank, assignment)
+    return assignment
+
+
+def hype_parallel_partition(hg: Hypergraph, k: int, *, candidates: int = 4,
+                            seed: int = 0) -> np.ndarray:
+    """Parallel k-way neighborhood expansion (beyond-paper, TPU-native)."""
+    ph = PaddedHypergraph.from_hypergraph(hg)
+    return np.asarray(_parallel_impl(ph, k, candidates, seed))

@@ -1,0 +1,155 @@
+"""Hypergraph data structure (CSR in both directions).
+
+A hypergraph G = (V, E) with |V| = n vertices and |E| = m hyperedges is
+stored as two CSR structures:
+
+  * ``v2e``: for each vertex, the list of incident hyperedge ids.
+  * ``e2v``: for each hyperedge, the list of member vertex ids (its "pins").
+
+A *pin* is one (vertex, hyperedge) incidence. ``n_pins`` equals the paper's
+"#Edges" column in Table II.
+
+All arrays are plain numpy so the structure can scale to hundreds of
+millions of pins on a single host; JAX-facing code converts the (small,
+padded) views it needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Hypergraph:
+    n: int                     # number of vertices
+    m: int                     # number of hyperedges
+    v2e_indptr: np.ndarray     # (n+1,) int64
+    v2e_indices: np.ndarray    # (n_pins,) int32/int64 hyperedge ids
+    e2v_indptr: np.ndarray     # (m+1,) int64
+    e2v_indices: np.ndarray    # (n_pins,) int32/int64 vertex ids
+
+    # ------------------------------------------------------------------ #
+    # Constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_pins(cls, n: int, m: int, vertex_ids: np.ndarray,
+                  edge_ids: np.ndarray) -> "Hypergraph":
+        """Build from parallel pin arrays (vertex_ids[i] ∈ edge edge_ids[i])."""
+        vertex_ids = np.asarray(vertex_ids, dtype=np.int64)
+        edge_ids = np.asarray(edge_ids, dtype=np.int64)
+        if vertex_ids.shape != edge_ids.shape:
+            raise ValueError("pin arrays must be parallel")
+        if vertex_ids.size and (vertex_ids.min() < 0 or vertex_ids.max() >= n):
+            raise ValueError("vertex id out of range")
+        if edge_ids.size and (edge_ids.min() < 0 or edge_ids.max() >= m):
+            raise ValueError("edge id out of range")
+
+        # de-duplicate pins (a vertex may appear at most once per hyperedge)
+        key = edge_ids * np.int64(n) + vertex_ids
+        _, uniq = np.unique(key, return_index=True)
+        vertex_ids, edge_ids = vertex_ids[uniq], edge_ids[uniq]
+
+        idx_dtype = np.int32 if max(n, m) < 2**31 else np.int64
+
+        # e2v CSR: sort pins by edge id
+        order = np.argsort(edge_ids, kind="stable")
+        e2v_indices = vertex_ids[order].astype(idx_dtype)
+        e2v_indptr = np.zeros(m + 1, dtype=np.int64)
+        np.add.at(e2v_indptr, edge_ids + 1, 1)
+        np.cumsum(e2v_indptr, out=e2v_indptr)
+
+        # v2e CSR: sort pins by vertex id
+        order = np.argsort(vertex_ids, kind="stable")
+        v2e_indices = edge_ids[order].astype(idx_dtype)
+        v2e_indptr = np.zeros(n + 1, dtype=np.int64)
+        np.add.at(v2e_indptr, vertex_ids + 1, 1)
+        np.cumsum(v2e_indptr, out=v2e_indptr)
+
+        return cls(n=n, m=m, v2e_indptr=v2e_indptr, v2e_indices=v2e_indices,
+                   e2v_indptr=e2v_indptr, e2v_indices=e2v_indices)
+
+    @classmethod
+    def from_edge_lists(cls, n: int, edges: Sequence[Iterable[int]]) -> "Hypergraph":
+        """Build from a list of hyperedges, each an iterable of vertex ids."""
+        edge_ids, vertex_ids = [], []
+        for e, pins in enumerate(edges):
+            for v in pins:
+                edge_ids.append(e)
+                vertex_ids.append(v)
+        return cls.from_pins(n, len(edges),
+                             np.asarray(vertex_ids, dtype=np.int64),
+                             np.asarray(edge_ids, dtype=np.int64))
+
+    # ------------------------------------------------------------------ #
+    # Properties / views
+    # ------------------------------------------------------------------ #
+    @property
+    def n_pins(self) -> int:
+        return int(self.e2v_indices.shape[0])
+
+    @property
+    def edge_sizes(self) -> np.ndarray:
+        return np.diff(self.e2v_indptr)
+
+    @property
+    def vertex_degrees(self) -> np.ndarray:
+        return np.diff(self.v2e_indptr)
+
+    def edge_pins(self, e: int) -> np.ndarray:
+        return self.e2v_indices[self.e2v_indptr[e]:self.e2v_indptr[e + 1]]
+
+    def vertex_edges(self, v: int) -> np.ndarray:
+        return self.v2e_indices[self.v2e_indptr[v]:self.v2e_indptr[v + 1]]
+
+    def neighbors(self, v: int) -> np.ndarray:
+        """Unique neighbor set N(v). O(sum of incident edge sizes)."""
+        es = self.vertex_edges(v)
+        if es.size == 0:
+            return np.empty(0, dtype=self.e2v_indices.dtype)
+        parts = [self.edge_pins(int(e)) for e in es]
+        nb = np.unique(np.concatenate(parts))
+        return nb[nb != v]
+
+    # ------------------------------------------------------------------ #
+    # Transformations
+    # ------------------------------------------------------------------ #
+    def flip(self) -> "Hypergraph":
+        """Swap roles of vertices and hyperedges (paper §III-C).
+
+        Flipping twice is the identity (up to pin ordering). Used for
+        perfect hyperedge balancing: balance vertices in the flipped graph.
+        """
+        return Hypergraph(n=self.m, m=self.n,
+                          v2e_indptr=self.e2v_indptr, v2e_indices=self.e2v_indices,
+                          e2v_indptr=self.v2e_indptr, e2v_indices=self.v2e_indices)
+
+    def validate(self) -> None:
+        assert self.v2e_indptr.shape == (self.n + 1,)
+        assert self.e2v_indptr.shape == (self.m + 1,)
+        assert self.v2e_indptr[-1] == self.v2e_indices.shape[0]
+        assert self.e2v_indptr[-1] == self.e2v_indices.shape[0]
+        assert self.v2e_indices.shape == self.e2v_indices.shape
+        if self.e2v_indices.size:
+            assert self.e2v_indices.min() >= 0
+            assert self.e2v_indices.max() < self.n
+        if self.v2e_indices.size:
+            assert self.v2e_indices.min() >= 0
+            assert self.v2e_indices.max() < self.m
+
+    def stats(self) -> dict:
+        es, vd = self.edge_sizes, self.vertex_degrees
+        return {
+            "n_vertices": self.n,
+            "n_hyperedges": self.m,
+            "n_pins": self.n_pins,
+            "max_edge_size": int(es.max()) if self.m else 0,
+            "mean_edge_size": float(es.mean()) if self.m else 0.0,
+            "max_vertex_degree": int(vd.max()) if self.n else 0,
+            "mean_vertex_degree": float(vd.mean()) if self.n else 0.0,
+        }
+
+    # Sorted-by-size edge order (ascending); HYPE sorts hyperedges once.
+    def edges_by_size(self) -> np.ndarray:
+        return np.argsort(self.edge_sizes, kind="stable")

@@ -1,0 +1,213 @@
+"""Mini multilevel hypergraph partitioner (group (I) stand-in for hMETIS).
+
+Recursive multilevel bisection:
+  1. *Coarsen*: heavy-connectivity pair matching over small hyperedges
+     (ring pairs inside each edge accumulate connectivity weight; greedy
+     matching on the heaviest pairs), iterated until the graph is small.
+  2. *Initial bisection*: weighted greedy fill from a random order.
+  3. *Uncoarsen + FM refinement*: project the bipartition back one level at
+     a time and run Fiduccia-Mattheyses-style positive-gain passes.
+  4. Recurse on the two halves for k-way.
+
+hMETIS itself is closed-source; this rendition reproduces its algorithmic
+family (multilevel recursive bisection, paper §IV "group (I)") at the small
+/medium scales where the paper reports it is competitive — and like the
+original it is expected to fail (here: be prohibitively slow) on massive
+hypergraphs, which the benchmarks demonstrate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .hypergraph import Hypergraph
+
+_MAX_MATCH_EDGE = 64      # only edges this small contribute matching pairs
+_COARSEST = 160           # stop coarsening below this many vertices
+_EPS = 0.05               # bisection balance tolerance
+
+
+def _pair_weights(hg: Hypergraph):
+    """Connectivity weight per vertex pair from ring pairs in small edges."""
+    sizes = hg.edge_sizes
+    keep = (sizes >= 2) & (sizes <= _MAX_MATCH_EDGE)
+    us, vs, ws = [], [], []
+    eids = np.flatnonzero(keep)
+    for e in eids:
+        pins = hg.edge_pins(int(e)).astype(np.int64)
+        nxt = np.roll(pins, -1)
+        us.append(pins)
+        vs.append(nxt)
+        ws.append(np.full(pins.size, 1.0 / (pins.size - 1)))
+    if not us:
+        return (np.empty(0, np.int64),) * 2 + (np.empty(0, np.float64),)
+    u = np.concatenate(us); v = np.concatenate(vs); w = np.concatenate(ws)
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    key = lo * np.int64(hg.n) + hi
+    uk, inv = np.unique(key, return_inverse=True)
+    wsum = np.zeros(uk.size)
+    np.add.at(wsum, inv, w)
+    return uk // hg.n, uk % hg.n, wsum
+
+
+def _coarsen_once(hg: Hypergraph, vweights: np.ndarray):
+    u, v, w = _pair_weights(hg)
+    order = np.argsort(-w, kind="stable")
+    matched = np.full(hg.n, -1, dtype=np.int64)
+    for i in order:
+        a, b = int(u[i]), int(v[i])
+        if matched[a] < 0 and matched[b] < 0 and a != b:
+            matched[a], matched[b] = b, a
+    # build coarse ids
+    cid = np.full(hg.n, -1, dtype=np.int64)
+    nxt = 0
+    for x in range(hg.n):
+        if cid[x] >= 0:
+            continue
+        cid[x] = nxt
+        if matched[x] >= 0:
+            cid[matched[x]] = nxt
+        nxt += 1
+    if nxt >= hg.n:   # no contraction happened
+        return None
+    # rebuild pins under the contraction map
+    edge_of_pin = np.repeat(np.arange(hg.m, dtype=np.int64), hg.edge_sizes)
+    cpins = cid[hg.e2v_indices]
+    chg = Hypergraph.from_pins(nxt, hg.m, cpins, edge_of_pin)
+    cw = np.zeros(nxt)
+    np.add.at(cw, cid, vweights)
+    return chg, cw, cid
+
+
+def _fm_refine(hg: Hypergraph, side: np.ndarray, vweights: np.ndarray,
+               target_a: float, passes: int = 3) -> np.ndarray:
+    """2-way FM-style refinement of boolean ``side`` (True = side B)."""
+    side = side.copy()
+    edge_of_pin = np.repeat(np.arange(hg.m, dtype=np.int64), hg.edge_sizes)
+    for _ in range(passes):
+        cntB = np.zeros(hg.m, dtype=np.int64)
+        np.add.at(cntB, edge_of_pin, side[hg.e2v_indices].astype(np.int64))
+        cntA = hg.edge_sizes - cntB
+        # gain of moving v out of its side
+        gA = np.zeros(hg.n, dtype=np.int64)   # gain if v in A moves to B
+        gB = np.zeros(hg.n, dtype=np.int64)
+        np.add.at(gA, hg.e2v_indices,
+                  (cntB[edge_of_pin] > 0).astype(np.int64)
+                  - (cntA[edge_of_pin] > 1).astype(np.int64))
+        np.add.at(gB, hg.e2v_indices,
+                  (cntA[edge_of_pin] > 0).astype(np.int64)
+                  - (cntB[edge_of_pin] > 1).astype(np.int64))
+        gain = np.where(side, gB, gA)
+        order = np.argsort(-gain, kind="stable")
+        wA = float(vweights[~side].sum())
+        total = float(vweights.sum())
+        lo, hi = target_a - _EPS * total, target_a + _EPS * total
+        moved_any = False
+        locked = np.zeros(hg.n, dtype=bool)
+        for v in order:
+            v = int(v)
+            if gain[v] <= 0:
+                break
+            if locked[v]:
+                continue
+            wv = float(vweights[v])
+            if side[v]:     # B -> A
+                if wA + wv > hi:
+                    continue
+                wA += wv
+            else:           # A -> B
+                if wA - wv < lo:
+                    continue
+                wA -= wv
+            # verify gain is still correct w.r.t. current counts
+            es = hg.vertex_edges(v)
+            if side[v]:
+                g = int((cntA[es] > 0).sum() - (cntB[es] > 1).sum())
+            else:
+                g = int((cntB[es] > 0).sum() - (cntA[es] > 1).sum())
+            if g <= 0:
+                if side[v]:
+                    wA -= wv
+                else:
+                    wA += wv
+                continue
+            if side[v]:
+                cntB[es] -= 1
+                cntA[es] += 1
+            else:
+                cntA[es] -= 1
+                cntB[es] += 1
+            side[v] = ~side[v]
+            locked[v] = True
+            moved_any = True
+        if not moved_any:
+            break
+    return side
+
+
+def _bisect(hg: Hypergraph, vweights: np.ndarray, frac_a: float,
+            rng: np.random.Generator) -> np.ndarray:
+    """Multilevel 2-way split. Returns bool array (True = side B)."""
+    levels = []
+    cur, curw = hg, vweights
+    while cur.n > _COARSEST:
+        res = _coarsen_once(cur, curw)
+        if res is None:
+            break
+        chg, cw, cid = res
+        levels.append((cur, curw, cid))
+        cur, curw = chg, cw
+    # initial partition at coarsest: greedy weighted fill
+    total = float(curw.sum())
+    target_a = frac_a * total
+    order = rng.permutation(cur.n)
+    side = np.zeros(cur.n, dtype=bool)
+    acc = 0.0
+    for v in order:
+        if acc + curw[v] <= target_a:
+            acc += curw[v]
+        else:
+            side[v] = True
+    side = _fm_refine(cur, side, curw, target_a)
+    # uncoarsen
+    while levels:
+        fine, finew, cid = levels.pop()
+        side = side[cid]
+        side = _fm_refine(fine, side, finew, frac_a * float(finew.sum()))
+    return side
+
+
+def _sub_hypergraph(hg: Hypergraph, mask: np.ndarray):
+    new_id = np.cumsum(mask) - 1
+    edge_of_pin = np.repeat(np.arange(hg.m, dtype=np.int64), hg.edge_sizes)
+    keep = mask[hg.e2v_indices]
+    vp = new_id[hg.e2v_indices[keep]]
+    ep = edge_of_pin[keep]
+    # re-number edges compactly, drop edges with < 2 remaining pins
+    ue, inv = np.unique(ep, return_inverse=True)
+    cnt = np.bincount(inv)
+    keep_e = cnt[inv] >= 2
+    ue2, inv2 = np.unique(inv[keep_e], return_inverse=True)
+    sub = Hypergraph.from_pins(int(mask.sum()), int(ue2.size),
+                               vp[keep_e], inv2)
+    return sub, np.flatnonzero(mask)
+
+
+def multilevel_partition(hg: Hypergraph, k: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    assignment = np.zeros(hg.n, dtype=np.int32)
+    vweights = np.ones(hg.n)
+
+    def rec(sub: Hypergraph, ids: np.ndarray, w: np.ndarray, kk: int, base: int):
+        if kk == 1 or sub.n == 0:
+            assignment[ids] = base
+            return
+        k1 = kk // 2
+        side = _bisect(sub, w, k1 / kk, rng)
+        maskA = ~side
+        subA, la = _sub_hypergraph(sub, maskA)
+        subB, lb = _sub_hypergraph(sub, side)
+        rec(subA, ids[la], w[maskA], k1, base)
+        rec(subB, ids[lb], w[side], kk - k1, base + k1)
+
+    rec(hg, np.arange(hg.n, dtype=np.int64), vweights, k, 0)
+    return assignment

@@ -1,0 +1,53 @@
+"""Unified partitioning API — the framework's entry point.
+
+``partition(hg, k, method=...)`` returns an int32 assignment; every
+distributed component (GNN halo sharding, embedding-table placement) takes
+an assignment produced here, so partitioners are interchangeable.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from .hypergraph import Hypergraph
+from .hype import HypeParams, hype_partition
+from .minmax import hashing_partition, minmax_partition, random_partition
+from .shp import shp_partition
+from .multilevel import multilevel_partition
+from . import metrics
+
+METHODS = ("hype", "hype_weighted", "minmax_nb", "minmax_eb", "shp",
+           "multilevel", "random", "hashing")
+
+
+def partition(hg: Hypergraph, k: int, method: str = "hype", *,
+              seed: int = 0, **kw) -> np.ndarray:
+    if method == "hype":
+        return hype_partition(hg, k, HypeParams(seed=seed, **kw))
+    if method == "hype_weighted":
+        return hype_partition(hg, k, HypeParams(seed=seed, balance="weighted", **kw))
+    if method == "minmax_nb":
+        return minmax_partition(hg, k, mode="nb", seed=seed, **kw)
+    if method == "minmax_eb":
+        return minmax_partition(hg, k, mode="eb", seed=seed, **kw)
+    if method == "shp":
+        return shp_partition(hg, k, seed=seed, **kw)
+    if method == "multilevel":
+        return multilevel_partition(hg, k, seed=seed, **kw)
+    if method == "random":
+        return random_partition(hg, k, seed=seed)
+    if method == "hashing":
+        return hashing_partition(hg, k)
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
+                         seed: int = 0, **kw) -> dict:
+    t0 = time.perf_counter()
+    assignment = partition(hg, k, method, seed=seed, **kw)
+    dt = time.perf_counter() - t0
+    rep = metrics.all_metrics(hg, assignment, k)
+    rep.update(method=method, k=k, runtime_s=dt)
+    return rep, assignment

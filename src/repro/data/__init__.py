@@ -1,0 +1,5 @@
+from .synthetic import (powerlaw_hypergraph, github_like, stackoverflow_like,
+                        reddit_like, community_hypergraph)
+from .graphs import (random_graph, build_graph_batch, molecule_batch,
+                     NeighborSampler)
+from .pipeline import TokenStream, RecsysStream, Prefetcher

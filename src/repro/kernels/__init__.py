@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the framework's compute hot-spots. Each package
+# ships kernel.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+# ops.py (jit wrapper, interpret=True off-TPU) and ref.py (pure-jnp
+# oracle used by tests/benchmarks):
+#   flash_attention — causal/SWA/GQA online-softmax attention (LM archs)
+#   hype_score      — batched external-neighbors scoring (the paper's
+#                     d_ext, VPU broadcast-compare formulation)
+#   embedding_bag   — scalar-prefetch DMA gather-reduce (recsys)
+#   neighbor_agg    — fused gather+mean+GEMM (sampled GNN minibatches)

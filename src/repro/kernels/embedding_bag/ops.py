@@ -1,0 +1,16 @@
+"""Jitted wrapper for the EmbeddingBag kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import embedding_bag_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("combine", "interpret"))
+def embedding_bag(table, ids, *, combine: str = "mean", interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return embedding_bag_kernel(table, ids, combine=combine,
+                                interpret=interpret)

@@ -1,0 +1,16 @@
+"""Oracle for EmbeddingBag (sum/mean over a padded multi-hot bag)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, combine: str = "mean"):
+    """table: (V, D); ids: (B, bag) int32 with -1 padding -> (B, D)."""
+    valid = ids >= 0
+    vecs = jnp.take(table, jnp.where(valid, ids, 0), axis=0)
+    vecs = jnp.where(valid[..., None], vecs, 0)
+    out = vecs.sum(axis=1)
+    if combine == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / cnt.astype(out.dtype)
+    return out.astype(table.dtype)

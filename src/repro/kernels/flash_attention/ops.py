@@ -1,0 +1,29 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+``interpret`` defaults to True off-TPU so the same call sites run (slowly
+but correctly) on CPU; on TPU the compiled kernel path is used.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)

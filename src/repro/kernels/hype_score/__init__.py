@@ -1,0 +1,1 @@
+from .ops import hype_scores

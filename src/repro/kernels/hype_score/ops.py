@@ -1,0 +1,22 @@
+"""Jitted wrapper for the HYPE scoring kernel (auto-pad, auto-interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import hype_scores_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def hype_scores(nbrs, fringe, *, tile_b: int = 256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B = nbrs.shape[0]
+    tile = min(tile_b, max(8, B))
+    pad = (-B) % tile
+    if pad:
+        nbrs = jnp.pad(nbrs, ((0, pad), (0, 0)), constant_values=-1)
+    out = hype_scores_kernel(nbrs, fringe, tile_b=tile, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,20 @@
+"""Oracle for batched external-neighbors scoring (paper Eq. 1).
+
+d_ext(v, F) = |N(v) \\ F|: given pre-deduplicated padded neighbor lists
+(the host's CSR machinery produces them), count valid neighbors not in
+the fringe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hype_scores_ref(nbrs, fringe):
+    """nbrs: (B, L) int32, -1 padded; fringe: (s,) int32, -1 padded.
+
+    Returns (B,) int32 external-neighbors scores.
+    """
+    valid = nbrs >= 0
+    member = jnp.any(nbrs[..., None] == fringe[None, None, :], axis=-1)
+    member &= valid
+    return (valid.sum(-1) - member.sum(-1)).astype(jnp.int32)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the fused neighbor-aggregation kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import neighbor_agg_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def neighbor_agg(x, nbrs, w, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return neighbor_agg_kernel(x, nbrs, w, interpret=interpret)

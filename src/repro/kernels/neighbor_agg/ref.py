@@ -1,0 +1,17 @@
+"""Oracle for fused fixed-fanout neighbor aggregation + projection."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def neighbor_agg_ref(x, nbrs, w):
+    """x: (N, D); nbrs: (B, K) int32 (-1 pad); w: (D, F) -> (B, F).
+
+    mean over valid neighbors of x[nbr] then @ w (GraphSAGE-style).
+    """
+    valid = nbrs >= 0
+    rows = jnp.take(x, jnp.where(valid, nbrs, 0), axis=0)
+    rows = jnp.where(valid[..., None], rows, 0)
+    cnt = jnp.maximum(valid.sum(-1, keepdims=True), 1)
+    mean = rows.sum(1) / cnt.astype(x.dtype)
+    return (mean @ w).astype(x.dtype)

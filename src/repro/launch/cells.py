@@ -1,0 +1,442 @@
+"""Cell builders: (arch, shape, mesh) -> jit-able step + abstract args +
+shardings.
+
+A *cell* is one (architecture x input-shape) pair. ``build_cell`` returns
+everything the dry-run (and the real launcher) needs:
+
+    CellPlan(fn, args, in_shardings, out_shardings, meta)
+
+``args`` are ShapeDtypeStructs (params included — nothing is allocated).
+The same builders serve the smoke tests with ``reduced=True`` and
+``mesh=None`` (no sharding, concrete arrays supplied by the caller).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ArchDef
+from repro.dist.sharding import (GNN_RULES, LM_RULES, RECSYS_RULES,
+                                 batch_axes, make_constrain, spec_for)
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tf_mod
+from repro.train.optimizer import AdamWConfig, abstract_adamw, init_adamw
+from repro.train.train_loop import make_train_step
+
+# per-arch optimizer settings (moment dtype matters for HBM at 405B)
+_OPT = {
+    "llama3-405b": AdamWConfig(lr=8e-5, moment_dtype=jnp.bfloat16),
+    "mixtral-8x22b": AdamWConfig(lr=1e-4),
+}
+_DEFAULT_OPT = AdamWConfig()
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch_id: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple                      # ShapeDtypeStructs (or concrete)
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+
+
+def _dp(mesh):
+    return batch_axes(mesh) if mesh is not None else ()
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+# --------------------------------------------------------------------- LM
+
+def _divides(n, mesh, axes):
+    size = math.prod(mesh.shape[a] for a in axes)
+    return n % size == 0
+
+
+def lm_param_spec(mesh, path_names, leaf, replicate_moe: bool = False) -> P:
+    """Sharding rule for one LM param leaf, with divisibility fallbacks.
+
+    Megatron TP on the model axis + FSDP on the (pod,data) axes:
+      wq/wk/wv/w_gate/w_up/moe_gate/moe_up: model on last dim, FSDP on -2
+      wo/w_down/moe_down:                   model on -2,      FSDP on last
+      embed: vocab rows on model, d on FSDP; lm_head transposed rule
+    """
+    name = path_names[-1]
+    fsdp = _dp(mesh)
+    shape = leaf.shape
+
+    def ok(dim, axes):
+        return axes and _divides(shape[dim], mesh, axes)
+
+    col = {"wq", "wk", "wv", "w_gate", "w_up", "moe_gate", "moe_up"}
+    row = {"wo", "w_down", "moe_down"}
+    if replicate_moe and name.startswith("moe_"):
+        # fine-grained-MoE variant: weights replicated, dispatch buffers
+        # sharded on capacity instead (moe_shard_c)
+        return P(*([None] * len(shape)))
+    spec = [None] * len(shape)
+    if name in col or name in row:
+        m_dim = len(shape) - 1 if name in col else len(shape) - 2
+        f_dim = len(shape) - 2 if name in col else len(shape) - 1
+        if ok(m_dim, ("model",)):
+            spec[m_dim] = "model"
+        if ok(f_dim, fsdp):
+            spec[f_dim] = fsdp if len(fsdp) > 1 else fsdp[0]
+    elif name == "embed":
+        if ok(0, ("model",)):
+            spec[0] = "model"
+            if ok(1, fsdp):
+                spec[1] = fsdp if len(fsdp) > 1 else fsdp[0]
+        elif ok(1, ("model",)):
+            spec[1] = "model"
+    elif name == "lm_head":
+        if ok(1, ("model",)):
+            spec[1] = "model"
+            if ok(0, fsdp):
+                spec[0] = fsdp if len(fsdp) > 1 else fsdp[0]
+        elif ok(0, ("model",)):
+            spec[0] = "model"
+    # norms, router, biases: replicated
+    return P(*spec)
+
+
+def _path_names(path):
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return names
+
+
+def lm_param_shardings(mesh, params_abs, replicate_moe: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _ns(mesh, *lm_param_spec(
+            mesh, _path_names(path), leaf, replicate_moe)),
+        params_abs)
+
+
+def opt_shardings(mesh, opt_abs, param_sh):
+    """Optimizer state shards exactly like params; step is replicated."""
+    return type(opt_abs)(
+        step=_ns(mesh),
+        m=jax.tree.map(lambda s: s, param_sh),
+        v=jax.tree.map(lambda s: s, param_sh))
+
+
+def _batch_shardings(mesh, specs: dict, rules) -> dict:
+    logical = {
+        "tokens": ("batch", None, None), "labels": ("batch", None, None),
+        "nodes": ("nodes", None), "pos": ("nodes", None),
+        "edge_src": ("edges",), "edge_dst": ("edges",),
+        "edge_x": ("edges", None), "node_mask": ("nodes",),
+        "edge_mask": ("edges",), "graph_id": ("nodes",),
+        "targets": ("nodes", None), "graph_targets": (None,),
+        "user_ids": ("batch", None, None), "item_ids": ("batch", None, None),
+        "item_logq": ("batch",), "cand_embs": ("cands", None),
+    }
+    out = {}
+    for k, v in specs.items():
+        if k == "labels" and len(v.shape) == 1:      # gnn labels
+            lg = ("nodes",)
+        else:
+            lg = logical.get(k, tuple([None] * len(v.shape)))
+        lg = tuple(lg)[:len(v.shape)]
+        lg = lg + (None,) * (len(v.shape) - len(lg))
+        out[k] = NamedSharding(mesh, spec_for(mesh, v.shape, lg, rules))
+    return out
+
+
+def _lm_train_batch_shardings(mesh, specs):
+    dp = _dp(mesh)
+    dpa = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = {}
+    for k, v in specs.items():
+        # (accum, microbatch, seq): shard microbatch over data axes
+        spec = [None] * len(v.shape)
+        size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+        if len(v.shape) >= 2 and v.shape[1] % size == 0 and size > 1:
+            spec[1] = dpa
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def build_lm_cell(arch: ArchDef, shape: str, mesh: Optional[Mesh],
+                  reduced: bool = False, *,
+                  measure_layers: Optional[int] = None,
+                  variant: Optional[dict] = None) -> CellPlan:
+    """``measure_layers``: build a cost-measurement variant — the model is
+    truncated to that many UNROLLED layers and grad accumulation is
+    disabled (batch = one microbatch). Used by the dry-run to recover true
+    per-layer FLOPs/collectives (XLA cost analysis counts scanned loop
+    bodies exactly once; see launch/dryrun.py).
+
+    ``variant``: perf-experiment knobs. Model-config fields (e.g.
+    ``seq_shard``) are applied with dataclasses.replace; ``cache_shard``
+    selects the decode-cache sharding layout
+    ("kv_seq" | "kv_heads" | "batch_model")."""
+    import dataclasses as _dc
+    variant = dict(variant or {})
+    cache_shard = variant.pop("cache_shard", "kv_seq")
+    constrain = make_constrain(mesh, LM_RULES) if mesh is not None else None
+    cfg = arch.build_cfg(reduced=reduced, constrain=constrain)
+    if variant:
+        cfg = _dc.replace(cfg, **variant)
+    if measure_layers is not None:
+        # keep cfg.remat as configured: the measured FLOPs must include the
+        # recompute the real (rematerialized) step performs, so that
+        # MODEL_FLOPS / HLO_FLOPs exposes remat waste (§Roofline).
+        cfg = _dc.replace(cfg, n_layers=measure_layers, scan_layers=False)
+    kind = arch.step_kind(shape)
+    specs = arch.input_specs(shape, reduced=reduced)
+    if measure_layers is not None and kind in ("decode",):
+        # cache leading dim must match truncated layer count
+        for key in ("cache_k", "cache_v"):
+            s = specs[key]
+            specs[key] = jax.ShapeDtypeStruct((measure_layers,) + s.shape[1:],
+                                              s.dtype)
+    params_abs = tf_mod.abstract_params(cfg)
+    opt_cfg = _OPT.get(arch.arch_id, _DEFAULT_OPT)
+    meta = {"params_dense": cfg.params_dense, "params_active": cfg.params_active}
+
+    if mesh is not None:
+        p_sh = lm_param_shardings(mesh, params_abs,
+                                  replicate_moe=cfg.moe_shard_c)
+    else:
+        p_sh = None
+
+    if kind == "train":
+        accum = arch.accum_steps.get(shape, 1) if not reduced else 2
+        if measure_layers is not None:
+            # one microbatch, no accumulation scan
+            mb = {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                  for k, v in specs.items()}
+            specs = mb
+            accum_eff = 1
+        else:
+            accum_eff = accum
+        loss_fn = lambda p, b: tf_mod.lm_loss(p, b, cfg)
+        step = make_train_step(loss_fn, opt_cfg, accum_steps=accum_eff,
+                               grad_shardings=p_sh)
+        opt_abs = abstract_adamw(params_abs, opt_cfg)
+        args = (params_abs, opt_abs, specs)
+        if mesh is not None:
+            o_sh = opt_shardings(mesh, opt_abs, p_sh)
+            if measure_layers is not None:
+                b_sh = {k: NamedSharding(
+                    mesh, spec_for(mesh, v.shape, ("batch", None),
+                                   LM_RULES)) for k, v in specs.items()}
+            else:
+                b_sh = _lm_train_batch_shardings(mesh, specs)
+            in_sh = (p_sh, o_sh, b_sh)
+            out_sh = (p_sh, o_sh, _ns(mesh))
+        else:
+            in_sh = out_sh = None
+        return CellPlan(arch.arch_id, shape, kind, step, args, in_sh, out_sh,
+                        meta | {"accum": accum})
+
+    if kind == "prefill":
+        fn = lambda p, tokens: tf_mod.prefill(p, tokens, cfg)
+        args = (params_abs, specs["tokens"])
+        if mesh is not None:
+            dp = _dp(mesh)
+            dpa = dp if len(dp) > 1 else dp[0]
+            tok_sh = _ns(mesh, dpa) if _divides(
+                specs["tokens"].shape[0], mesh, dp) else _ns(mesh)
+            B = specs["tokens"].shape[0]
+            S = specs["tokens"].shape[1]
+            Skv = min(S, cfg.window) if cfg.window else S
+            cshape = (cfg.n_layers, B, Skv, cfg.n_kv_heads, cfg.d_head)
+            cspec = spec_for(mesh, cshape,
+                             (None, "batch", "kv_seq", None, None), LM_RULES)
+            cache_sh = {"k": NamedSharding(mesh, cspec),
+                        "v": NamedSharding(mesh, cspec), "pos": _ns(mesh)}
+            logit_sh = NamedSharding(mesh, spec_for(
+                mesh, (B, cfg.vocab), ("batch", "vocab"), LM_RULES))
+            in_sh = (p_sh, tok_sh)
+            out_sh = (cache_sh, logit_sh)
+        else:
+            in_sh = out_sh = None
+        return CellPlan(arch.arch_id, shape, kind, fn, args, in_sh, out_sh,
+                        meta)
+
+    # decode
+    if cfg.decode_paged:
+        def fn(p, cache_k, cache_v, cache_pos, tokens):
+            cache = {"k": cache_k, "v": cache_v, "pos": cache_pos}
+            return tf_mod.serve_step_paged(p, cache, tokens, cfg)
+    else:
+        def fn(p, cache_k, cache_v, cache_pos, tokens):
+            cache = {"k": cache_k, "v": cache_v, "pos": cache_pos}
+            logits, new_cache = tf_mod.serve_step(p, cache, tokens, cfg)
+            return logits, new_cache["k"], new_cache["v"], new_cache["pos"]
+
+    args = (params_abs, specs["cache_k"], specs["cache_v"],
+            specs["cache_pos"], specs["tokens"])
+    if mesh is not None:
+        cshape = specs["cache_k"].shape
+        if cache_shard == "kv_heads":
+            # requires the decode mesh (16, 8, 2)=("data","model","seq2"):
+            # heads shard the 8-way model axis (even), the residual factor
+            # 2 shards seq, and the cache update is (nearly) local
+            seq2 = "seq2" if "seq2" in mesh.axis_names else None
+            cspec = P(None, "data" if "data" in mesh.axis_names else None,
+                      seq2, "model", None)
+        elif cache_shard == "batch_model":
+            cspec = P(None, ("data", "model") if cshape[1] % (
+                mesh.shape["data"] * mesh.shape["model"]) == 0 else "data",
+                None, None, None)
+        else:
+            cspec = spec_for(mesh, cshape,
+                             (None, "batch", "kv_seq", None, None), LM_RULES)
+        c_sh = NamedSharding(mesh, cspec)
+        tok_sh = NamedSharding(mesh, spec_for(
+            mesh, specs["tokens"].shape, ("batch", None), LM_RULES))
+        logit_sh = NamedSharding(mesh, spec_for(
+            mesh, (specs["tokens"].shape[0], cfg.vocab),
+            ("batch", "vocab"), LM_RULES))
+        if cfg.decode_paged:
+            B = specs["tokens"].shape[0]
+            new_kv_sh = NamedSharding(mesh, spec_for(
+                mesh, (cfg.n_layers, B, 1, cfg.n_kv_heads, cfg.d_head),
+                (None, "batch", None, None, None), LM_RULES))
+            in_sh = (p_sh, c_sh, c_sh, _ns(mesh), tok_sh)
+            out_sh = (logit_sh, new_kv_sh, new_kv_sh, _ns(mesh))
+        else:
+            in_sh = (p_sh, c_sh, c_sh, _ns(mesh), tok_sh)
+            out_sh = (logit_sh, c_sh, c_sh, _ns(mesh))
+    else:
+        in_sh = out_sh = None
+    return CellPlan(arch.arch_id, shape, kind, fn, args, in_sh, out_sh, meta)
+
+
+# -------------------------------------------------------------------- GNN
+
+def build_gnn_cell(arch: ArchDef, shape: str, mesh: Optional[Mesh],
+                   reduced: bool = False) -> CellPlan:
+    constrain = make_constrain(mesh, GNN_RULES) if mesh is not None else None
+    cfg = arch.build_cfg(reduced=reduced, constrain=constrain, shape=shape)
+    specs = arch.input_specs(shape, reduced=reduced)
+    params_abs = jax.eval_shape(
+        lambda: gnn_mod.init_gnn_params(jax.random.PRNGKey(0), cfg))
+    opt_cfg = _DEFAULT_OPT
+    loss_fn = lambda p, b: gnn_mod.gnn_loss(p, b, cfg)
+    step = make_train_step(loss_fn, opt_cfg, accum_steps=1)
+    opt_abs = abstract_adamw(params_abs, opt_cfg)
+    args = (params_abs, opt_abs, specs)
+    if mesh is not None:
+        p_sh = jax.tree.map(lambda _: _ns(mesh), params_abs)   # replicated
+        o_sh = opt_shardings(mesh, opt_abs, p_sh)
+        b_sh = _batch_shardings(mesh, specs, GNN_RULES)
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, _ns(mesh))
+    else:
+        in_sh = out_sh = None
+    return CellPlan(arch.arch_id, shape, "train", step, args, in_sh, out_sh,
+                    {"d_hidden": cfg.d_hidden, "n_layers": cfg.n_layers})
+
+
+# ------------------------------------------------------------------ recsys
+
+def build_recsys_cell(arch: ArchDef, shape: str, mesh: Optional[Mesh],
+                      reduced: bool = False) -> CellPlan:
+    constrain = make_constrain(mesh, RECSYS_RULES) if mesh is not None else None
+    cfg = arch.build_cfg(reduced=reduced, constrain=constrain)
+    kind = arch.step_kind(shape)
+    specs = arch.input_specs(shape, reduced=reduced)
+    params_abs = jax.eval_shape(
+        lambda: rec_mod.init_twotower_params(jax.random.PRNGKey(0), cfg))
+
+    def table_spec(leaf, name):
+        if name.endswith("table") and leaf.shape[0] % mesh.shape["model"] == 0:
+            return _ns(mesh, "model", None)
+        return _ns(mesh)
+
+    if mesh is not None:
+        p_sh = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: table_spec(leaf, _path_names(path)[0]),
+            params_abs)
+    else:
+        p_sh = None
+
+    if kind == "train":
+        opt_cfg = _DEFAULT_OPT
+        loss_fn = lambda p, b: rec_mod.twotower_loss(p, b, cfg)
+        step = make_train_step(loss_fn, opt_cfg, accum_steps=1)
+        opt_abs = abstract_adamw(params_abs, opt_cfg)
+        args = (params_abs, opt_abs, specs)
+        if mesh is not None:
+            o_sh = opt_shardings(mesh, opt_abs, p_sh)
+            b_sh = _batch_shardings(mesh, specs, RECSYS_RULES)
+            in_sh = (p_sh, o_sh, b_sh)
+            out_sh = (p_sh, o_sh, _ns(mesh))
+        else:
+            in_sh = out_sh = None
+        return CellPlan(arch.arch_id, shape, kind, step, args, in_sh, out_sh,
+                        {})
+    if kind == "serve":
+        fn = lambda p, b: rec_mod.score_batch(p, b, cfg)
+        args = (params_abs, specs)
+        if mesh is not None:
+            b_sh = _batch_shardings(mesh, specs, RECSYS_RULES)
+            out_spec = spec_for(mesh, (specs["user_ids"].shape[0],),
+                                ("batch",), RECSYS_RULES)
+            in_sh = (p_sh, b_sh)
+            out_sh = NamedSharding(mesh, out_spec)
+        else:
+            in_sh = out_sh = None
+        return CellPlan(arch.arch_id, shape, kind, fn, args, in_sh, out_sh,
+                        {})
+    # retrieve (top_k returns a list; normalize to tuple for out_shardings)
+    fn = lambda p, b: tuple(rec_mod.retrieve(p, b, cfg, top_k=128))
+    args = (params_abs, specs)
+    if mesh is not None:
+        b_sh = _batch_shardings(mesh, specs, RECSYS_RULES)
+        in_sh = (p_sh, b_sh)
+        out_sh = (_ns(mesh), _ns(mesh))
+    else:
+        in_sh = out_sh = None
+    return CellPlan(arch.arch_id, shape, kind, fn, args, in_sh, out_sh, {})
+
+
+# ----------------------------------------------------------------- entry
+
+def build_cell(arch_id: str, shape: str, mesh: Optional[Mesh] = None,
+               reduced: bool = False,
+               measure_layers: Optional[int] = None,
+               variant: Optional[dict] = None) -> CellPlan:
+    arch = get_arch(arch_id)
+    if arch.family == "lm":
+        return build_lm_cell(arch, shape, mesh, reduced,
+                             measure_layers=measure_layers, variant=variant)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, shape, mesh, reduced)
+    if arch.family == "recsys":
+        return build_recsys_cell(arch, shape, mesh, reduced)
+    raise ValueError(arch.family)
+
+
+def all_cells():
+    """The 40 assigned (arch x shape) cells, with skip reasons."""
+    from repro.configs import ARCH_IDS
+    out = []
+    for aid in ARCH_IDS:
+        arch = get_arch(aid)
+        for shape in arch.shapes:
+            out.append((aid, shape, arch.skip(shape)))
+    return out

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes and extract roofline inputs.
+_DOC = """
+
+MUST be run as its own process (the XLA flag above pins 512 host devices
+before any jax import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --cells all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k --mesh single
+
+Per cell it records into artifacts/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis (bytes per device: args/outputs/temps/total)
+  * cost_analysis   (HLO flops, bytes accessed)
+  * collective bytes by op kind parsed from the post-SPMD HLO
+  * roofline terms (compute/memory/collective seconds) and the dominant
+    term, using TPU v5e constants.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.cells import all_cells, build_cell
+from repro.launch.roofline import (collective_bytes_from_hlo, roofline_report,
+                                   model_flops)
+
+ART_DIR = "artifacts/dryrun"
+
+
+def _compile_plan(plan):
+    jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings)
+    t0 = time.time()
+    lowered = jitted.lower(*plan.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _costs_of(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": coll["total_wire_bytes"],
+        "coll_detail": coll,
+    }
+
+
+def run_cell(arch_id: str, shape: str, mesh_kind: str, out_dir: str = ART_DIR,
+             force: bool = False, variant: dict | None = None,
+             tag_suffix: str = "") -> dict:
+    """Full compile (memory proof) + cost measurement.
+
+    XLA's cost analysis counts scanned loop bodies once, so for LM cells
+    (layer-scan + accumulation-scan) the true per-step cost is recovered
+    from two UNROLLED truncated compiles:
+
+        delta    = cost(L=3) - cost(L=2)          # exact per-layer cost
+        per_mb   = cost(L=2) + (L_full - 2) * delta
+        per_step = accum * per_mb                 # train: accum microbatches
+
+    (optimizer-update flops/bytes are over-multiplied by accum this way;
+    the overcount is < 1% of the step and noted in DESIGN.md.)
+    GNN/recsys cells have no scans — one compile measures truth directly.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch_id}__{shape}__{mesh_kind}{tag_suffix}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    if variant and variant.get("cache_shard") == "kv_heads":
+        # decode-specific mesh: same 256 chips, factored so the 8 KV heads
+        # shard evenly (16 data x 8 model x 2 seq)
+        mesh = jax.make_mesh((16, 8, 2), ("data", "model", "seq2"))
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    from repro.configs import get_arch
+    family = get_arch(arch_id).family
+
+    # ---- full compile: proves lowering+compile at scale, memory analysis
+    plan = build_cell(arch_id, shape, mesh=mesh, variant=variant)
+    compiled, t_lower, t_compile = _compile_plan(plan)
+    mem = compiled.memory_analysis()
+    full_costs = _costs_of(compiled)
+
+    # ---- cost measurement
+    if family == "lm":
+        n_layers_full = get_arch(arch_id).build_cfg().n_layers
+        accum = plan.meta.get("accum", 1)
+        c2 = _costs_of(_compile_plan(
+            build_cell(arch_id, shape, mesh=mesh, measure_layers=2,
+                       variant=variant))[0])
+        c3 = _costs_of(_compile_plan(
+            build_cell(arch_id, shape, mesh=mesh, measure_layers=3,
+                       variant=variant))[0])
+        mult = accum if plan.kind == "train" else 1
+        corrected = {}
+        for key in ("flops", "bytes", "wire"):
+            delta = max(c3[key] - c2[key], 0.0)
+            corrected[key] = mult * (c2[key] + (n_layers_full - 2) * delta)
+        measurement = {"L2": {k: c2[k] for k in ("flops", "bytes", "wire")},
+                       "L3": {k: c3[k] for k in ("flops", "bytes", "wire")},
+                       "extrapolated_layers": n_layers_full,
+                       "accum_mult": mult}
+    else:
+        corrected = {k: full_costs[k] for k in ("flops", "bytes", "wire")}
+        measurement = {"direct": True}
+
+    n_dev = 512 if mesh_kind == "multi" else 256
+    mf = model_flops(arch_id, shape, plan.meta)
+    rep = roofline_report(
+        flops_per_device=corrected["flops"],
+        bytes_per_device=corrected["bytes"],
+        collective_wire_bytes=corrected["wire"],
+        n_devices=n_dev, model_flops_global=mf)
+
+    record = {
+        "arch": arch_id, "shape": shape, "mesh": mesh_kind,
+        "variant": variant or {},
+        "kind": plan.kind, "meta": plan.meta,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_per_device": corrected,
+        "cost_full_compile_raw": {k: full_costs[k]
+                                  for k in ("flops", "bytes", "wire")},
+        "collectives_full_raw": full_costs["coll_detail"],
+        "measurement": measurement,
+        "roofline": rep,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--cells", default=None, help="'all' for every cell")
+    ap.add_argument("--out", default=ART_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    assert len(jax.devices()) == 512, "dry-run needs 512 placeholder devices"
+
+    if args.cells == "all":
+        todo = [(a, s, sk) for a, s, sk in all_cells()]
+    else:
+        assert args.arch and args.shape
+        from repro.configs import get_arch
+        todo = [(args.arch, args.shape, get_arch(args.arch).skip(args.shape))]
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch_id, shape, skip in todo:
+        if skip:
+            print(f"SKIP {arch_id} x {shape}: {skip}", flush=True)
+            tag_rec = {"arch": arch_id, "shape": shape, "skipped": skip}
+            os.makedirs(args.out, exist_ok=True)
+            for mk in meshes:
+                with open(os.path.join(
+                        args.out, f"{arch_id}__{shape}__{mk}.json"),
+                        "w") as f:
+                    json.dump(tag_rec, f)
+            continue
+        for mk in meshes:
+            try:
+                rec = run_cell(arch_id, shape, mk, out_dir=args.out,
+                               force=args.force)
+                r = rec["roofline"]
+                print(f"OK {arch_id} x {shape} [{mk}] "
+                      f"compile={rec.get('compile_s', '?')}s "
+                      f"compute={r['compute_s']:.4f}s "
+                      f"memory={r['memory_s']:.4f}s "
+                      f"coll={r['collective_s']:.4f}s "
+                      f"bound={r['bound']}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch_id, shape, mk, repr(e)))
+                print(f"FAIL {arch_id} x {shape} [{mk}]: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures", flush=True)
+        sys.exit(1)
+    print("\nall requested cells passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods, 256 chips per pod (16x16), optionally
+2 pods = 512 chips. Axes:
+
+  single-pod:  (16, 16)        ("data", "model")
+  multi-pod:   (2, 16, 16)     ("pod", "data", "model")
+
+The "pod" axis carries only data parallelism (+ int8-compressed gradient
+all-reduces) because inter-pod links are the slowest tier; "model" carries
+tensor/expert parallelism within a pod's fast ICI.
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def flat_device_axis(mesh) -> int:
+    """Total device count of a mesh (for flattened shard_map layouts)."""
+    return int(np.prod(mesh.devices.shape))

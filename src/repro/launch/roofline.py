@@ -1,0 +1,163 @@
+"""Roofline math: TPU v5e constants, HLO collective parsing, term report.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = wire_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program
+totals across devices for an SPMD module lowered at 512 devices — XLA
+reports per-module totals; we treat them as global and divide by chips).
+Collective bytes are parsed from the post-SPMD HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+we take the result shape and apply standard ring-cost wire-byte formulas.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~2 links usable per axis)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    # iota format: replica_groups=[16,32]<=[512] -> group size = dims[1]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return m.group(1).count(",") + 1
+    return default
+
+
+def collective_bytes_from_hlo(hlo: str, default_group: int = 256) -> dict:
+    """Wire bytes per device by collective kind (ring formulas)."""
+    out = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo.splitlines():
+        line_s = line.strip()
+        m = re.match(
+            r"%?[\w.\-]+\s*=\s*(.+?)\s*"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", line_s)
+        if not m:
+            continue
+        shape_part, kind = m.group(1), m.group(2)
+        shapes = _SHAPE_RE.findall(shape_part)
+        if not shapes:
+            continue
+        result_bytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes
+                           if dt in _DTYPE_BYTES)
+        g = _group_size(line_s, default_group)
+        if kind == "all-reduce":
+            wire = 2 * (g - 1) / max(g, 1) * result_bytes
+        elif kind == "all-gather":
+            wire = (g - 1) / max(g, 1) * result_bytes
+        elif kind == "reduce-scatter":
+            wire = (g - 1) * result_bytes
+        elif kind == "all-to-all":
+            wire = (g - 1) / max(g, 1) * result_bytes
+        else:  # collective-permute
+            wire = result_bytes
+        out[kind] += wire
+        counts[kind] += 1
+    return {"wire_bytes_per_device": dict(out),
+            "op_counts": dict(counts),
+            "total_wire_bytes": float(sum(out.values()))}
+
+
+def roofline_report(*, flops_per_device: float, bytes_per_device: float,
+                    collective_wire_bytes: float, n_devices: int,
+                    model_flops_global: float | None) -> dict:
+    """All inputs are per-device (the compiled module is the per-device SPMD
+    program) except MODEL_FLOPS, which is the global useful-work estimate.
+    """
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    coll_s = collective_wire_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    bound = max(terms, key=terms.get).replace("_s", "")
+    rep = {**terms, "bound": bound,
+           "step_time_lower_bound_s": max(terms.values())}
+    if model_flops_global:
+        hlo_global = flops_per_device * n_devices
+        rep["model_flops"] = model_flops_global
+        rep["useful_flops_ratio"] = (model_flops_global / hlo_global
+                                     if hlo_global else None)
+        rep["roofline_fraction"] = (
+            model_flops_global / (n_devices * PEAK_FLOPS)
+            / max(max(terms.values()), 1e-12))
+    return rep
+
+
+def model_flops(arch_id: str, shape: str, meta: dict) -> float | None:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for LM training;
+    2*N*D for single forward (prefill/decode counts D=tokens processed)."""
+    from repro.configs import get_arch
+    arch = get_arch(arch_id)
+    if arch.family == "lm":
+        sp = arch.shapes[shape].meta
+        n_active = meta.get("params_active")
+        if shape == "train_4k":
+            D = sp["batch"] * sp["seq"]
+            return 6.0 * n_active * D
+        if shape == "prefill_32k":
+            D = sp["batch"] * sp["seq"]
+            return 2.0 * n_active * D
+        # decode: one token per sequence
+        return 2.0 * n_active * sp["batch"]
+    if arch.family == "gnn":
+        sp = arch.shapes[shape].meta
+        d = meta.get("d_hidden", 128)
+        L = meta.get("n_layers", 2)
+        E_, N_ = sp["edges"], sp["nodes"]
+        # per-arch per-layer MAC counts (x2 flops/MAC, x3 for fwd+bwd)
+        if arch_id == "gatedgcn":
+            fwd = (E_ * 4 * d * d + N_ * 2 * d * d) * 2.0 * L
+        elif arch_id == "meshgraphnet":
+            fwd = (E_ * 4 * d * d + N_ * 3 * d * d) * 2.0 * L
+        elif arch_id == "schnet":
+            rbf = 300
+            fwd = (E_ * (rbf * d + d * d) + N_ * 3 * d * d) * 2.0 * L
+        else:  # graphsage: aggregation is add-only; MLPs per node
+            fwd = (N_ * 2 * d * d) * 2.0 * L
+        return 3.0 * fwd
+    if arch.family == "recsys":
+        sp = arch.shapes[shape].meta
+        d_tower = 1024 * 512 + 512 * 256
+        out_dim = 256
+        if shape == "retrieval_cand":
+            return 2.0 * sp["n_cand"] * out_dim
+        B = sp["batch"]
+        towers = B * 2 * (2.0 * d_tower)
+        interact = (2.0 * B * B * out_dim if shape == "train_batch"
+                    else 2.0 * B * out_dim)
+        mult = 3.0 if shape == "train_batch" else 1.0
+        return mult * (towers + interact)
+    return None

@@ -1,0 +1,106 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Builds the arch's cell on the host mesh (all local devices), initializes
+real parameters, and drives fault-tolerant training on the synthetic
+stream. This is the single-host entry point; on a real cluster each
+process runs the same binary with jax.distributed initialized and the
+production mesh from launch/mesh.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+        --reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.cells import build_cell
+from repro.models import transformer as tf_mod
+from repro.train.fault_tolerance import FTConfig, run_training
+from repro.train.optimizer import init_adamw
+from repro.data.pipeline import TokenStream, RecsysStream
+from repro.data.graphs import build_graph_batch, random_graph
+
+
+def _gnn_batches(arch, plan, seed=0):
+    spec = plan.args[2]
+    n, e = spec["nodes"].shape[0], spec["edge_src"].shape[0]
+    src, dst = random_graph(n, max(e / n, 1.0), seed=seed)
+    src, dst = src[:e], dst[:e]
+    base = build_graph_batch(n, src, dst, spec["nodes"].shape[1],
+                             int(spec["labels"].shape[0] and 5) or 5,
+                             seed=seed, pad_nodes=n, pad_edges=e)
+    base = {k: jnp.asarray(v) for k, v in base.items() if k in spec}
+    return lambda step: base
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-trainable)")
+    ap.add_argument("--ckpt_dir", default="artifacts/ckpt")
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    shape = args.shape or {"lm": "train_4k", "gnn": "full_graph_sm",
+                           "recsys": "train_batch"}[arch.family]
+    plan = build_cell(args.arch, shape, mesh=None, reduced=args.reduced)
+    assert plan.kind == "train", "train.py drives train cells"
+
+    rng = np.random.default_rng(0)
+    if arch.family == "lm":
+        cfg = arch.build_cfg(reduced=args.reduced)
+        params = tf_mod.init_params(jax.random.PRNGKey(0), cfg)
+        spec = plan.args[2]["tokens"]
+        accum, mb, seq = spec.shape
+        stream = TokenStream(cfg.vocab, accum * mb, seq, seed=0)
+        def batch_at(step):
+            b = stream.batch_at(step)
+            return {k: jnp.asarray(v.reshape(accum, mb, seq))
+                    for k, v in b.items()}
+    elif arch.family == "gnn":
+        params = jax.tree.map(
+            lambda s: jnp.asarray(
+                rng.normal(size=s.shape).astype(np.float32) * 0.1, s.dtype)
+            if s.dtype != jnp.int32 else jnp.zeros(s.shape, s.dtype),
+            plan.args[0])
+        batch_at = _gnn_batches(arch, plan)
+    else:
+        cfgr = arch.build_cfg(reduced=args.reduced)
+        from repro.models.recsys import init_twotower_params
+        params = init_twotower_params(jax.random.PRNGKey(0), cfgr)
+        spec = plan.args[2]["user_ids"]
+        stream = RecsysStream(cfgr.user_vocab, cfgr.item_vocab,
+                              spec.shape[0], n_fields=spec.shape[1],
+                              bag=spec.shape[2])
+        batch_at = lambda step: {k: jnp.asarray(v) for k, v in
+                                 stream.batch_at(step).items()}
+
+    from repro.launch.cells import _OPT, _DEFAULT_OPT
+    opt_cfg = _OPT.get(args.arch, _DEFAULT_OPT)
+    opt = init_adamw(params, opt_cfg)
+    step_fn = jax.jit(plan.fn)
+
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    t0 = time.time()
+    res = run_training(step_fn, (params, opt), None, args.steps,
+                       FTConfig(ckpt_dir=os.path.join(args.ckpt_dir,
+                                                      args.arch)),
+                       batch_at=batch_at)
+    losses = [m["loss"] for m in res.metrics_history if "loss" in m]
+    print(f"{args.arch}/{shape}: {res.steps_done} steps in "
+          f"{time.time() - t0:.1f}s; loss {losses[0]:.4f} -> "
+          f"{losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Shared model building blocks (pure-JAX, pytree params, no framework).
+
+Conventions:
+  * params are nested dicts of jax.Arrays;
+  * every ``init_*`` takes an explicit PRNG key and returns params;
+  * compute dtype is bf16 by default, reductions/norms in fp32;
+  * sharding is applied externally via NamedSharding / sharding
+    constraints — the model code is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------- init
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=DEFAULT_DTYPE):
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=DEFAULT_DTYPE):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def mlp_init(key, dims, dtype=DEFAULT_DTYPE):
+    """Params for an MLP with layer dims [d0, d1, ..., dk]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(params, x, n_layers: int, act=jax.nn.relu, final_act=False):
+    for i in range(n_layers):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ------------------------------------------------------------------- norms
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dtype) * gamma + beta
+
+
+# -------------------------------------------------------------------- rope
+
+def rotary_embedding(positions, d_head: int, theta: float = 10_000.0):
+    """Returns (sin, cos) of shape (..., d_head//2)."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, D); sin/cos: (..., S, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- loss
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean token CE in fp32. logits (..., V), labels (...,) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,199 @@
+"""GNN architectures: GatedGCN, MeshGraphNet, SchNet, GraphSAGE.
+
+All four consume a common ``GraphBatch`` dict of statically-shaped arrays:
+
+  nodes     (N, F)  float   node features
+  pos       (N, 3)  float   positions (SchNet; zeros elsewhere)
+  edge_src  (E,)    int32   source node per edge
+  edge_dst  (E,)    int32   destination node per edge
+  edge_x    (E, Fe) float   edge features
+  node_mask (N,)    bool    valid nodes (padding = False)
+  edge_mask (E,)    bool    valid edges
+  graph_id  (N,)    int32   component id (batched small graphs; else zeros)
+  labels    (N,) or (G,)    targets
+
+Message passing = gather by edge index -> compute -> ``jax.ops.segment_sum``
+scatter (JAX has no sparse SpMM; the segment-op formulation IS the system's
+message-passing kernel — see kernels/neighbor_agg for the Pallas fast path
+on fixed-fanout batches).
+
+Padding edges point at node 0 with edge_mask False; messages are zeroed
+before the scatter so padding never contaminates real nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import layer_norm, mlp_apply, mlp_init, softmax_cross_entropy
+
+
+def _noop_constrain(x, axes):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str                       # gatedgcn | meshgraphnet | schnet | graphsage
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_edge_in: int
+    n_classes: int
+    aggregator: str = "sum"
+    mlp_layers: int = 2             # meshgraphnet MLP depth
+    rbf: int = 300                  # schnet radial basis size
+    cutoff: float = 10.0
+    task: str = "node_class"        # node_class | node_reg | graph_reg
+    dtype: object = jnp.float32
+    constrain: Callable = _noop_constrain
+
+
+def _segment_agg(msgs, dst, n_nodes, how="sum"):
+    if how == "sum" or how == "gated":
+        return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    if how == "mean":
+        s = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+        cnt = jax.ops.segment_sum(jnp.ones((msgs.shape[0], 1), msgs.dtype),
+                                  dst, num_segments=n_nodes)
+        return s / jnp.maximum(cnt, 1.0)
+    if how == "max":
+        return jax.ops.segment_max(msgs, dst, num_segments=n_nodes)
+    raise ValueError(how)
+
+
+# ------------------------------------------------------------------ params
+
+def init_gnn_params(key, cfg: GNNConfig):
+    ks = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+    d = cfg.d_hidden
+    p = {"enc_node": mlp_init(next(ks), [cfg.d_in, d])}
+    if cfg.arch == "gatedgcn":
+        p["enc_edge"] = mlp_init(next(ks), [max(cfg.d_edge_in, 1), d])
+        p["layers"] = [
+            {n: mlp_init(next(ks), [d, d]) for n in "ABCDE"}
+            | {"ln_h": jnp.ones((d,)), "lb_h": jnp.zeros((d,)),
+               "ln_e": jnp.ones((d,)), "lb_e": jnp.zeros((d,))}
+            for _ in range(cfg.n_layers)]
+    elif cfg.arch == "meshgraphnet":
+        p["enc_edge"] = mlp_init(next(ks), [max(cfg.d_edge_in, 1)] +
+                                 [d] * cfg.mlp_layers)
+        p["enc_node2"] = mlp_init(next(ks), [d] + [d] * cfg.mlp_layers)
+        p["layers"] = [
+            {"edge_mlp": mlp_init(next(ks), [3 * d] + [d] * cfg.mlp_layers),
+             "node_mlp": mlp_init(next(ks), [2 * d] + [d] * cfg.mlp_layers),
+             "ln_e": jnp.ones((d,)), "lb_e": jnp.zeros((d,)),
+             "ln_h": jnp.ones((d,)), "lb_h": jnp.zeros((d,))}
+            for _ in range(cfg.n_layers)]
+    elif cfg.arch == "schnet":
+        p["layers"] = [
+            {"filter": mlp_init(next(ks), [cfg.rbf, d, d]),
+             "w_in": mlp_init(next(ks), [d, d]),
+             "out": mlp_init(next(ks), [d, d, d])}
+            for _ in range(cfg.n_layers)]
+    elif cfg.arch == "graphsage":
+        p["layers"] = [
+            {"w_self": mlp_init(next(ks), [d, d]),
+             "w_nbr": mlp_init(next(ks), [d, d])}
+            for _ in range(cfg.n_layers)]
+    else:
+        raise ValueError(cfg.arch)
+    out_dim = cfg.n_classes if cfg.task == "node_class" else \
+        (1 if cfg.task != "node_reg" else cfg.d_in)
+    p["dec"] = mlp_init(next(ks), [d, d, out_dim])
+    return p
+
+
+# ----------------------------------------------------------------- forward
+
+def _rbf_expand(dist, n_rbf: int, cutoff: float):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 10.0 / cutoff
+    return jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2)
+
+
+def gnn_forward(params, batch, cfg: GNNConfig):
+    """Returns per-node outputs (N, out_dim) (graph tasks pool afterwards)."""
+    N = batch["nodes"].shape[0]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask = batch["edge_mask"][:, None].astype(cfg.dtype)
+    cons = cfg.constrain
+
+    h = mlp_apply(params["enc_node"], batch["nodes"].astype(cfg.dtype), 1)
+    h = cons(h, ("nodes", None))
+
+    if cfg.arch == "gatedgcn":
+        e = mlp_apply(params["enc_edge"], batch["edge_x"].astype(cfg.dtype), 1)
+        for lp in params["layers"]:
+            hs, hd = h[src], h[dst]
+            e_new = (mlp_apply(lp["C"], e, 1) + mlp_apply(lp["D"], hd, 1)
+                     + mlp_apply(lp["E"], hs, 1))
+            e = e + jax.nn.relu(layer_norm(e_new, lp["ln_e"], lp["lb_e"]))
+            eta = jax.nn.sigmoid(e) * emask
+            denom = _segment_agg(eta, dst, N, "sum") + 1e-6
+            msg = eta * mlp_apply(lp["B"], hs, 1) * emask
+            agg = _segment_agg(msg, dst, N, "sum") / denom
+            agg = cons(agg, ("nodes", None))
+            h_new = mlp_apply(lp["A"], h, 1) + agg
+            h = h + jax.nn.relu(layer_norm(h_new, lp["ln_h"], lp["lb_h"]))
+    elif cfg.arch == "meshgraphnet":
+        e = mlp_apply(params["enc_edge"], batch["edge_x"].astype(cfg.dtype),
+                      cfg.mlp_layers)
+        h = mlp_apply(params["enc_node2"], h, cfg.mlp_layers)
+        for lp in params["layers"]:
+            cat_e = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+            e = e + layer_norm(mlp_apply(lp["edge_mlp"], cat_e,
+                                         cfg.mlp_layers),
+                               lp["ln_e"], lp["lb_e"])
+            agg = _segment_agg(e * emask, dst, N, cfg.aggregator)
+            agg = cons(agg, ("nodes", None))
+            cat_h = jnp.concatenate([h, agg], axis=-1)
+            h = h + layer_norm(mlp_apply(lp["node_mlp"], cat_h,
+                                         cfg.mlp_layers),
+                               lp["ln_h"], lp["lb_h"])
+    elif cfg.arch == "schnet":
+        dvec = batch["pos"][src] - batch["pos"][dst]
+        dist = jnp.sqrt(jnp.sum(dvec * dvec, axis=-1) + 1e-12)
+        rbf = _rbf_expand(dist, cfg.rbf, cfg.cutoff).astype(cfg.dtype)
+        cut = 0.5 * (jnp.cos(jnp.pi * dist / cfg.cutoff) + 1.0)
+        cut = jnp.where(dist <= cfg.cutoff, cut, 0.0)[:, None].astype(cfg.dtype)
+        for lp in params["layers"]:
+            w = mlp_apply(lp["filter"], rbf, 2, act=jax.nn.softplus) * cut
+            xin = mlp_apply(lp["w_in"], h, 1)
+            msg = xin[src] * w * emask
+            agg = _segment_agg(msg, dst, N, "sum")
+            agg = cons(agg, ("nodes", None))
+            h = h + mlp_apply(lp["out"], agg, 2, act=jax.nn.softplus)
+    elif cfg.arch == "graphsage":
+        for lp in params["layers"]:
+            msg = h[src] * emask
+            agg = _segment_agg(msg, dst, N, "mean")
+            agg = cons(agg, ("nodes", None))
+            h = jax.nn.relu(mlp_apply(lp["w_self"], h, 1)
+                            + mlp_apply(lp["w_nbr"], agg, 1))
+            h = h / jnp.maximum(
+                jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    else:
+        raise ValueError(cfg.arch)
+
+    return mlp_apply(params["dec"], h, 2)
+
+
+def gnn_loss(params, batch, cfg: GNNConfig):
+    out = gnn_forward(params, batch, cfg)
+    nmask = batch["node_mask"].astype(jnp.float32)
+    if cfg.task == "node_class":
+        return softmax_cross_entropy(out, batch["labels"], mask=nmask)
+    if cfg.task == "node_reg":
+        err = jnp.sum((out - batch["targets"]) ** 2, axis=-1)
+        return jnp.sum(err * nmask) / jnp.maximum(jnp.sum(nmask), 1.0)
+    if cfg.task == "graph_reg":
+        G = batch["graph_targets"].shape[0]
+        pooled = jax.ops.segment_sum(out * nmask[:, None], batch["graph_id"],
+                                     num_segments=G)[:, 0]
+        return jnp.mean((pooled - batch["graph_targets"]) ** 2)
+    raise ValueError(cfg.task)

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with capacity-based local dispatch.
+
+GShard/Switch-style top-k routing with a per-batch-row token queue:
+positions inside each expert's queue are computed by a cumulative sum over
+the row's slots, so dispatch stays *local to the data shard* (no cross-host
+permutation — the trade-off production systems make when experts are
+replicated or tensor-parallel rather than expert-parallel across hosts).
+
+FLOPs scale with top_k (not n_experts): each expert processes at most
+``capacity = S * top_k / n_experts * capacity_factor`` tokens per row.
+Overflowed tokens are dropped (standard GShard semantics); the auxiliary
+load-balancing loss keeps drop rates low.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+def init_moe_layer(key, d_model: int, d_ff: int, moe: MoEConfig, dtype):
+    ks = jax.random.split(key, 4)
+    E = moe.n_experts
+
+    def stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dtype))(
+            jax.random.split(k, E))
+
+    return {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),
+        "moe_gate": stack(ks[1], d_model, d_ff),   # (E, d, ff)
+        "moe_up": stack(ks[2], d_model, d_ff),
+        "moe_down": stack(ks[3], d_ff, d_model),   # (E, ff, d)
+    }
+
+
+def moe_ffn(cfg, lp, x):
+    """x: (B, S, d) -> (B, S, d), aux load-balancing loss (fp32 scalar)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, K = moe.n_experts, moe.top_k
+    cf = getattr(cfg, "moe_cf_override", None) or moe.capacity_factor
+    C = max(1, int(S * K / E * cf))
+    acc_t = (jnp.bfloat16 if getattr(cfg, "moe_accum_bf16", False)
+             else jnp.float32)
+
+    logits = (x.astype(jnp.float32) @ lp["router"])        # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                 # (B, S, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- aux loss (Switch): E * sum_e f_e * p_e ----
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    fe = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = E * jnp.sum(me * fe / K)
+
+    # ---- position of each slot in its expert's queue (per row) ----
+    flat_e = top_i.reshape(B, S * K)                        # (B, S*K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (B, S*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot          # pos before slot
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)               # (B, S*K)
+    keep = pos < C
+    pos = jnp.minimum(pos, C - 1)
+
+    # ---- dispatch: scatter tokens into (B, E, C, d) ----
+    xk = jnp.repeat(x, K, axis=1).reshape(B, S * K, d)      # slot -> token
+    xk = jnp.where(keep[..., None], xk, 0)
+
+    def scatter_row(buf, e_row, p_row, x_row):
+        return buf.at[e_row, p_row].add(x_row)
+    buf = jax.vmap(scatter_row)(
+        jnp.zeros((B, E, C, d), x.dtype), flat_e, pos, xk)
+    shard_c = getattr(cfg, "moe_shard_c", False)
+    buf = cfg.constrain(buf, ("batch", None,
+                              "expert_c" if shard_c else None, None))
+
+    # ---- expert computation (batched over E) ----
+    # moe_accum_bf16 keeps the GEMM accumulation (and hence GSPMD's
+    # backward partial-sum collectives) in bf16; the default leaves the
+    # accumulation dtype to XLA (fp32 on TPU).
+    ekw = ({"preferred_element_type": jnp.bfloat16}
+           if acc_t == jnp.bfloat16 else {})
+    h = jnp.einsum("becd,edf->becf", buf, lp["moe_gate"], **ekw)
+    u = jnp.einsum("becd,edf->becf", buf, lp["moe_up"], **ekw)
+    h = (jax.nn.silu(h) * u).astype(x.dtype)
+    h = cfg.constrain(h, ("batch", None,
+                          "expert_c" if shard_c else None,
+                          None if shard_c else "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, lp["moe_down"],
+                         **ekw).astype(x.dtype)
+
+    # ---- combine: gather each slot's output, weight, sum over K ----
+    def gather_row(buf_row, e_row, p_row):
+        return buf_row[e_row, p_row]
+    slot_out = jax.vmap(gather_row)(out_buf, flat_e, pos)   # (B, S*K, d)
+    w = (top_p.reshape(B, S * K) * keep).astype(x.dtype)
+    out = jnp.sum((slot_out * w[..., None]).reshape(B, S, K, d), axis=2)
+    return out, aux.astype(jnp.float32)

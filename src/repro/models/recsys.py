@@ -1,0 +1,115 @@
+"""Two-tower retrieval model (YouTube-style, RecSys'19).
+
+EmbeddingBag is built from first principles (JAX has no native one):
+``jnp.take`` over the table + mean over the bag slots, with -1 padding.
+Sparse feature fields: ``n_fields`` multi-hot bags per tower; bag
+embeddings are concatenated and fed to the tower MLP (1024-512-256).
+
+Training uses in-batch sampled softmax with logQ correction; serving
+scores a query against a candidate embedding matrix (``retrieval_cand``).
+
+The embedding tables are the HYPE integration point: rows co-accessed by
+the same query form a hypergraph (rows = vertices, queries = hyperedges);
+partitioning rows with HYPE minimizes cross-shard lookups — exactly the
+paper's distributed-data-placement motivation (§I). See repro/dist.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import embed_init, mlp_apply, mlp_init
+
+
+def _noop_constrain(x, axes):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str
+    embed_dim: int = 256
+    tower_dims: tuple = (1024, 512, 256)
+    n_fields: int = 4              # sparse feature fields per tower
+    bag_size: int = 8              # multi-hot ids per field (padded, -1)
+    user_vocab: int = 10_000_000
+    item_vocab: int = 10_000_000
+    temperature: float = 0.05
+    dtype: object = jnp.float32
+    constrain: Callable = _noop_constrain
+
+
+def init_twotower_params(key, cfg: TwoTowerConfig):
+    ks = jax.random.split(key, 4)
+    d_in = cfg.n_fields * cfg.embed_dim
+    assert d_in == cfg.tower_dims[0], "field concat must match tower input"
+    return {
+        "user_table": embed_init(ks[0], cfg.user_vocab, cfg.embed_dim,
+                                 cfg.dtype),
+        "item_table": embed_init(ks[1], cfg.item_vocab, cfg.embed_dim,
+                                 cfg.dtype),
+        "user_tower": mlp_init(ks[2], (d_in,) + cfg.tower_dims[1:], cfg.dtype),
+        "item_tower": mlp_init(ks[3], (d_in,) + cfg.tower_dims[1:], cfg.dtype),
+    }
+
+
+def embedding_bag(table, ids, cfg, combine="mean"):
+    """ids: (..., bag) int32 with -1 padding -> (..., embed_dim)."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    vecs = jnp.take(table, safe, axis=0)          # (..., bag, d)
+    vecs = jnp.where(valid[..., None], vecs, 0)
+    if combine == "sum":
+        return jnp.sum(vecs, axis=-2)
+    cnt = jnp.maximum(jnp.sum(valid, axis=-1, keepdims=True), 1)
+    return jnp.sum(vecs, axis=-2) / cnt.astype(vecs.dtype)
+
+
+def tower(params_mlp, table, ids, cfg: TwoTowerConfig):
+    """ids: (B, n_fields, bag) -> L2-normalized embeddings (B, out)."""
+    bags = embedding_bag(table, ids, cfg)          # (B, n_fields, d)
+    x = bags.reshape(ids.shape[0], cfg.n_fields * cfg.embed_dim)
+    x = cfg.constrain(x, ("batch", None))
+    x = mlp_apply(params_mlp, x, len(cfg.tower_dims) - 1)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_loss(params, batch, cfg: TwoTowerConfig):
+    """In-batch sampled softmax with logQ correction.
+
+    batch: {user_ids (B,F,bag), item_ids (B,F,bag), item_logq (B,)}
+    """
+    u = tower(params["user_tower"], params["user_table"], batch["user_ids"],
+              cfg)
+    i = tower(params["item_tower"], params["item_table"], batch["item_ids"],
+              cfg)
+    logits = (u @ i.T) / cfg.temperature           # (B, B)
+    logits = cfg.constrain(logits, ("batch", None))
+    logits = logits - batch["item_logq"][None, :]  # logQ correction
+    labels = jnp.arange(u.shape[0])
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def score_batch(params, batch, cfg: TwoTowerConfig):
+    """Online/bulk serving: dot(user emb, item emb) per row."""
+    u = tower(params["user_tower"], params["user_table"], batch["user_ids"],
+              cfg)
+    i = tower(params["item_tower"], params["item_table"], batch["item_ids"],
+              cfg)
+    return jnp.sum(u * i, axis=-1)
+
+
+def retrieve(params, batch, cfg: TwoTowerConfig, top_k: int = 100):
+    """One query vs. a precomputed candidate matrix (n_cand, out_dim)."""
+    u = tower(params["user_tower"], params["user_table"], batch["user_ids"],
+              cfg)                                  # (1, out)
+    cands = batch["cand_embs"]                      # (n_cand, out)
+    cands = cfg.constrain(cands, ("cands", None))
+    scores = (u @ cands.T)[0]                       # (n_cand,)
+    return jax.lax.top_k(scores, top_k)

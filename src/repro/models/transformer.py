@@ -1,0 +1,501 @@
+"""Decoder-only transformer LM: GQA, RoPE, qk-norm, sliding-window, MoE.
+
+Covers the five assigned LM architectures (stablelm-3b, qwen3-8b,
+llama3-405b, mixtral-8x22b, granite-moe-3b-a800m). Layers are scanned
+(stacked params) so the HLO stays small at 126 layers, with optional remat.
+
+Sharding is injected through ``cfg.constrain(x, logical_axes)`` — a no-op
+by default; the launcher installs mesh-aware rules (see repro/dist).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import (DEFAULT_DTYPE, apply_rope, dense_init, embed_init,
+                     rms_norm, rotary_embedding, softmax_cross_entropy)
+from .moe import MoEConfig, init_moe_layer, moe_ffn
+
+
+def _noop_constrain(x, axes):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    window: Optional[int] = None          # sliding-window attention (Mixtral)
+    rope_theta: float = 10_000.0
+    moe: Optional[MoEConfig] = None
+    dtype: object = DEFAULT_DTYPE
+    remat: bool = True
+    scan_layers: bool = True
+    # Megatron-style sequence parallelism: residuals (the tensors remat
+    # saves) are sharded over the model axis along seq; XLA inserts the
+    # all-gather/all-to-all transitions at attention/MLP entry.
+    seq_shard: bool = False
+    # "einsum": materialize (S, S) scores. "blockwise": online-softmax
+    # over K tiles (Rabe-Staats / flash-attention dataflow in pure XLA) —
+    # the jnp analogue of kernels/flash_attention for machines where the
+    # Pallas kernel can't lower. Unrolled python loop so HLO cost analysis
+    # counts every tile.
+    attention_impl: str = "einsum"
+    attention_block: int = 1024
+    # paged-style decode: the KV cache is a read-only input (no
+    # dynamic-update-slice on a sharded dim — the #1 decode collective
+    # pathology, see EXPERIMENTS.md §Perf); the new token's K/V are
+    # returned separately for the host/outer loop to append block-wise.
+    decode_paged: bool = False
+    # pad embedding/lm_head rows to a multiple of 256 so the vocab dim
+    # always shards over the model axis (non-divisible vocabs otherwise
+    # fall back to a d-sharded head = full-logits all-reduce; §Perf D).
+    # Padded logit columns are masked to -inf before the softmax.
+    pad_vocab: bool = False
+    # accumulate MoE expert GEMMs in bf16 so GSPMD's backward partial-sum
+    # all-reduces move bf16 instead of fp32 (halves MoE backward wire at
+    # a numerical-precision trade-off; §Perf D).
+    moe_accum_bf16: bool = False
+    moe_cf_override: Optional[float] = None
+    # shard the expert-capacity dim of the dispatch buffers over the model
+    # axis (weights replicated — tiny for fine-grained MoE) so expert
+    # GEMMs have no sharded contraction at all (§Perf D4).
+    moe_shard_c: bool = False
+
+    @property
+    def vocab_padded(self) -> int:
+        if self.pad_vocab:
+            return ((self.vocab + 255) // 256) * 256
+        return self.vocab
+    # logical-axis constraint hook, installed by the launcher
+    constrain: Callable = _noop_constrain
+
+    @property
+    def res_axis(self) -> str:
+        return "res_seq" if self.seq_shard else "seq"
+
+    @property
+    def params_dense(self) -> int:
+        """Total parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        a = self.d_model * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        a += self.n_heads * self.d_head * self.d_model
+        if self.moe is None:
+            f = 3 * self.d_model * self.d_ff
+        else:
+            f = 3 * self.d_model * self.d_ff * self.moe.n_experts \
+                + self.d_model * self.moe.n_experts
+        per_layer = a + f + 2 * self.d_model
+        return (self.n_layers * per_layer + 2 * self.vocab * self.d_model
+                + self.d_model)
+
+    @property
+    def params_active(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        if self.moe is None:
+            return self.params_dense
+        a = self.d_model * (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        a += self.n_heads * self.d_head * self.d_model
+        f = 3 * self.d_model * self.d_ff * self.moe.top_k \
+            + self.d_model * self.moe.n_experts
+        per_layer = a + f + 2 * self.d_model
+        return (self.n_layers * per_layer + 2 * self.vocab * self.d_model
+                + self.d_model)
+
+
+# ------------------------------------------------------------------ params
+
+def init_layer_params(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, 8)
+    d, dh = cfg.d_model, cfg.d_head
+    p = {
+        "ln1": jnp.ones((d,), cfg.dtype),
+        "ln2": jnp.ones((d,), cfg.dtype),
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh, cfg.dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, cfg.dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, cfg.dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.ones((dh,), cfg.dtype)
+        p["knorm"] = jnp.ones((dh,), cfg.dtype)
+    if cfg.moe is None:
+        p["w_gate"] = dense_init(ks[4], d, cfg.d_ff, cfg.dtype)
+        p["w_up"] = dense_init(ks[5], d, cfg.d_ff, cfg.dtype)
+        p["w_down"] = dense_init(ks[6], cfg.d_ff, d, cfg.dtype)
+    else:
+        p.update(init_moe_layer(ks[7], d, cfg.d_ff, cfg.moe, cfg.dtype))
+    return p
+
+
+def init_params(key, cfg: TransformerConfig):
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    if cfg.scan_layers:
+        layers = jax.vmap(lambda k: init_layer_params(k, cfg))(layer_keys)
+    else:
+        layers = [init_layer_params(k, cfg) for k in layer_keys]
+    return {
+        "embed": embed_init(k_emb, cfg.vocab_padded, cfg.d_model, cfg.dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab_padded,
+                              cfg.dtype),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+        "layers": layers,
+    }
+
+
+def abstract_params(cfg: TransformerConfig):
+    """ShapeDtypeStruct pytree of params — no allocation (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ----------------------------------------------------------------- attention
+
+def _attention(cfg: TransformerConfig, lp, x, sin, cos, mask):
+    """Full (optionally windowed) training/prefill attention.
+
+    Returns (output, (k, v)) so prefill can collect the cache without
+    recomputing projections.
+    """
+    B, S, d = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = Hq // Hkv
+    q = (x @ lp["wq"]).reshape(B, S, Hq, Dh)
+    k = (x @ lp["wk"]).reshape(B, S, Hkv, Dh)
+    v = (x @ lp["wv"]).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["qnorm"])
+        k = rms_norm(k, lp["knorm"])
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = cfg.constrain(q, ("batch", "seq", "heads", None))
+    k = cfg.constrain(k, ("batch", "seq", "kv_heads", None))
+    q = q.reshape(B, S, Hkv, G, Dh)
+    if cfg.attention_impl == "blockwise" and S > cfg.attention_block:
+        out = _blockwise_attention(cfg, q, k, v, mask)
+    else:
+        scores = jnp.einsum("bshgd,bthd->bhgst", q, k) \
+            / jnp.sqrt(Dh).astype(x.dtype)
+        scores = jnp.where(mask[None, None, None],
+                           scores.astype(jnp.float32), -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    out = out.reshape(B, S, Hq * Dh)
+    return out @ lp["wo"], (k, v)
+
+
+def _blockwise_attention(cfg, q, k, v, mask):
+    """Online-softmax attention over K tiles; never materializes (S, S).
+
+    q: (B, S, Hkv, G, D); k/v: (B, S, Hkv, D); mask: (S, S) bool.
+    Python-unrolled over tiles (see TransformerConfig.attention_impl).
+    """
+    B, S, Hkv, G, Dh = q.shape
+    blk = cfg.attention_block
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    m = jnp.full((B, Hkv, G, S, 1), -1e30, jnp.float32)
+    l = jnp.zeros((B, Hkv, G, S, 1), jnp.float32)
+    acc = jnp.zeros((B, Hkv, G, S, Dh), jnp.float32)
+    q32 = q.astype(jnp.float32)
+    for t0 in range(0, S, blk):
+        kt = k[:, t0:t0 + blk].astype(jnp.float32)
+        vt = v[:, t0:t0 + blk].astype(jnp.float32)
+        s = jnp.einsum("bshgd,bthd->bhgst", q32, kt) * scale
+        s = jnp.where(mask[None, None, None, :, t0:t0 + blk], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgst,bthd->bhgsd", p, vt)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)
+    # (B, Hkv, G, S, D) -> (B, S, Hkv, G, D)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def _causal_mask(S: int, window: Optional[int]):
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= j > i - window
+    return m
+
+
+def _dense_ffn(cfg, lp, x):
+    h = jax.nn.silu(x @ lp["w_gate"]) * (x @ lp["w_up"])
+    h = cfg.constrain(h, ("batch", "seq", "mlp"))
+    return h @ lp["w_down"]
+
+
+def _layer_fwd(cfg: TransformerConfig, lp, x, sin, cos, mask):
+    x = cfg.constrain(x, ("batch", cfg.res_axis, None))
+    a, kv = _attention(cfg, lp, rms_norm(x, lp["ln1"]), sin, cos, mask)
+    x = x + a
+    h = rms_norm(x, lp["ln2"])
+    if cfg.moe is None:
+        f = _dense_ffn(cfg, lp, h)
+        aux = jnp.float32(0)
+    else:
+        f, aux = moe_ffn(cfg, lp, h)
+    return x + f, aux, kv
+
+
+# ------------------------------------------------------------------ forward
+
+def forward(params, tokens, cfg: TransformerConfig):
+    """tokens (B, S) -> final hidden states (B, S, d), aux loss."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = cfg.constrain(x, ("batch", cfg.res_axis, None))
+    positions = jnp.arange(S)[None, :]
+    sin, cos = rotary_embedding(positions, cfg.d_head, cfg.rope_theta)
+    mask = _causal_mask(S, cfg.window)
+
+    if cfg.scan_layers:
+        def body(carry, lp):
+            x, aux = carry
+            x, a, _ = _layer_fwd(cfg, lp, x, sin, cos, mask)
+            return (x, aux + a), None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                                   params["layers"])
+    else:
+        aux = jnp.float32(0)
+        for lp in params["layers"]:
+            f = (jax.checkpoint(partial(_layer_fwd, cfg)) if cfg.remat
+                 else partial(_layer_fwd, cfg))
+            x, a, _ = f(lp, x, sin, cos, mask)
+            aux = aux + a
+    return rms_norm(x, params["ln_f"]), aux
+
+
+def lm_loss(params, batch, cfg: TransformerConfig):
+    """batch: {tokens (B,S), labels (B,S)}; returns scalar fp32 loss."""
+    x, aux = forward(params, batch["tokens"], cfg)
+    logits = x @ params["lm_head"]
+    logits = cfg.constrain(logits, ("batch", "seq", "vocab"))
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.float32(-1e30).astype(logits.dtype),
+                           logits)
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    return ce + 0.01 * aux
+
+
+# ------------------------------------------------------------------ serving
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """KV cache. Sliding-window archs use a rolling buffer of size window."""
+    Skv = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (cfg.n_layers, batch, Skv, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def prefill(params, tokens, cfg: TransformerConfig):
+    """Run the full prompt, return (cache, last-token logits).
+
+    The cache is produced from the per-layer K/V of the forward pass; for
+    windowed attention only the last ``window`` positions are kept.
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.arange(S)[None, :]
+    sin, cos = rotary_embedding(positions, cfg.d_head, cfg.rope_theta)
+    mask = _causal_mask(S, cfg.window)
+    Skv = min(S, cfg.window) if cfg.window else S
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, (k, v) = _layer_fwd(cfg, lp, x, sin, cos, mask)
+        return (x, aux + a), (k[:, -Skv:], v[:, -Skv:])
+
+    if cfg.scan_layers:
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, _), (ks, vs) = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                                        params["layers"])
+    else:
+        carry = (x, jnp.float32(0))
+        kvs = []
+        for lp in params["layers"]:
+            carry, kv = body(carry, lp)
+            kvs.append(kv)
+        x = carry[0]
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    x = rms_norm(x, params["ln_f"])
+    logits = x[:, -1] @ params["lm_head"]
+    cache = {"k": ks, "v": vs, "pos": jnp.int32(S)}
+    return cache, logits
+
+
+def _decode_attention(cfg, lp, x, cache_k, cache_v, pos):
+    """One-token attention against the cache. x: (B, 1, d)."""
+    B = x.shape[0]
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = Hq // Hkv
+    Skv = cache_k.shape[1]
+    q = (x @ lp["wq"]).reshape(B, 1, Hq, Dh)
+    k = (x @ lp["wk"]).reshape(B, 1, Hkv, Dh)
+    v = (x @ lp["wv"]).reshape(B, 1, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["qnorm"])
+        k = rms_norm(k, lp["knorm"])
+    sin, cos = rotary_embedding(pos[None, None], cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    # rolling-buffer write position (no-op modulo for full caches)
+    slot = pos % Skv
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v, (0, slot, 0, 0))
+    cache_k = cfg.constrain(cache_k, ("batch", "kv_seq", None, None))
+    cache_v = cfg.constrain(cache_v, ("batch", "kv_seq", None, None))
+    q = q.reshape(B, Hkv, G, Dh)
+    scores = jnp.einsum("bhgd,bthd->bhgt", q, cache_k) / jnp.sqrt(Dh).astype(x.dtype)
+    # valid positions: rolling buffer is full once pos >= Skv
+    t = jnp.arange(Skv)
+    valid = jnp.where(pos >= Skv, jnp.ones((Skv,), bool), t <= pos)
+    scores = jnp.where(valid[None, None, None], scores.astype(jnp.float32),
+                       -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgt,bthd->bhgd", probs, cache_v).reshape(B, 1, Hq * Dh)
+    return out @ lp["wo"], cache_k, cache_v
+
+
+def _decode_attention_paged(cfg, lp, x, cache_k, cache_v, pos):
+    """Read-only-cache decode attention with two-block online softmax.
+
+    The cache contribution is computed shard-locally over (possibly
+    sharded) Skv and merged with the current token's K/V analytically, so
+    no concat/update ever touches the sharded dimension; GSPMD only
+    all-reduces the merged (B, H, G[, D]) statistics.
+    """
+    B = x.shape[0]
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = Hq // Hkv
+    Skv = cache_k.shape[1]
+    q = (x @ lp["wq"]).reshape(B, 1, Hq, Dh)
+    k = (x @ lp["wk"]).reshape(B, 1, Hkv, Dh)
+    v = (x @ lp["wv"]).reshape(B, 1, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["qnorm"])
+        k = rms_norm(k, lp["knorm"])
+    sin, cos = rotary_embedding(pos[None, None], cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    qh = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    s_c = jnp.einsum("bhgd,bthd->bhgt", qh,
+                     cache_k.astype(jnp.float32)) * scale
+    t = jnp.arange(Skv)
+    valid = jnp.where(pos >= Skv, jnp.ones((Skv,), bool), t < pos)
+    s_c = jnp.where(valid[None, None, None], s_c, -1e30)
+    m_c = jnp.max(s_c, axis=-1)                            # (B,Hkv,G)
+    p_c = jnp.exp(s_c - m_c[..., None])
+    l_c = jnp.sum(p_c, axis=-1)
+    acc_c = jnp.einsum("bhgt,bthd->bhgd", p_c,
+                       cache_v.astype(jnp.float32))
+    # current token term
+    s_t = jnp.einsum("bhgd,bhd->bhg", qh,
+                     k[:, 0].astype(jnp.float32)) * scale
+    m = jnp.maximum(m_c, s_t)
+    w_c = jnp.exp(m_c - m)
+    w_t = jnp.exp(s_t - m)
+    l = l_c * w_c + w_t
+    acc = acc_c * w_c[..., None] + w_t[..., None] \
+        * v[:, 0][:, :, None, :].astype(jnp.float32)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None])
+    out = out.reshape(B, 1, Hq * Dh).astype(x.dtype)
+    return out @ lp["wo"], k, v
+
+
+def serve_step_paged(params, cache, tokens, cfg: TransformerConfig):
+    """Decode without cache mutation: returns (logits, k_new, v_new, pos').
+
+    k_new/v_new: (L, B, 1, Hkv, Dh) — the outer serving loop appends them
+    to its block-paged cache (host-side or every-W-steps on device).
+    """
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = cache["pos"]
+
+    def body(x, layer):
+        lp, ck, cv = layer
+        h = rms_norm(x, lp["ln1"])
+        a, k_new, v_new = _decode_attention_paged(cfg, lp, h, ck, cv, pos)
+        x = x + a
+        h2 = rms_norm(x, lp["ln2"])
+        if cfg.moe is None:
+            f = _dense_ffn(cfg, lp, h2)
+        else:
+            f, _ = moe_ffn(cfg, lp, h2)
+        return x + f, (k_new, v_new)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+    else:
+        kvs = []
+        for li, lp in enumerate(params["layers"]):
+            x, kv = body(x, (lp, cache["k"][li], cache["v"][li]))
+            kvs.append(kv)
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    x = rms_norm(x, params["ln_f"])
+    logits = x[:, 0] @ params["lm_head"]
+    return logits, ks, vs, pos + 1
+
+
+def serve_step(params, cache, tokens, cfg: TransformerConfig):
+    """One decode step: tokens (B, 1) + cache -> logits (B, V), new cache."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = cfg.constrain(x, ("batch", None, None))
+    pos = cache["pos"]
+
+    def body(x, layer):
+        lp, ck, cv = layer
+        h = rms_norm(x, lp["ln1"])
+        a, ck, cv = _decode_attention(cfg, lp, h, ck, cv, pos)
+        x = x + a
+        h2 = rms_norm(x, lp["ln2"])
+        if cfg.moe is None:
+            f = _dense_ffn(cfg, lp, h2)
+        else:
+            f, _ = moe_ffn(cfg, lp, h2)
+        return x + f, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+    else:
+        kvs = []
+        for li, lp in enumerate(params["layers"]):
+            x, (ck, cv) = body(x, (lp, cache["k"][li], cache["v"][li]))
+            kvs.append((ck, cv))
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+    x = rms_norm(x, params["ln_f"])
+    logits = x[:, 0] @ params["lm_head"]
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,81 @@
+"""Train-step factory: grad accumulation, mixed precision, compression.
+
+``make_train_step(loss_fn, opt_cfg, ...)`` returns a pure function
+
+    train_step(params, opt_state, batch[, err]) -> (params, opt_state,
+                                                    metrics[, err])
+
+suitable for ``jax.jit`` with in/out shardings. Microbatching is a
+``lax.scan`` over a leading accumulation axis of the batch: activations
+live only for one microbatch; gradients accumulate in fp32.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update
+from .grad_compression import compress_tree
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig, *,
+                    accum_steps: int = 1, compress_grads: bool = False,
+                    grad_shardings=None):
+    """loss_fn(params, batch) -> scalar loss.
+
+    ``grad_shardings``: optional pytree of NamedShardings matching params;
+    constrains the fp32 accumulation buffers so they are stored sharded
+    (without it XLA may replicate them — gigabytes at 100B+ scale).
+    """
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def train_step(params, opt_state, batch, err=None):
+        if accum_steps > 1:
+            # batch leaves have leading dim (accum_steps, ...)
+            def micro(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / accum_steps,
+                    g_acc, g)
+                return (loss_acc + loss / accum_steps,
+                        constrain_grads(g_acc)), None
+            g0 = constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.float32(0), g0),
+                                            batch)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        if compress_grads:
+            assert err is not None
+            grads, err = compress_tree(grads, err)
+
+        params, opt_state, stats = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+        metrics = {"loss": loss.astype(jnp.float32), **stats}
+        if compress_grads:
+            return params, opt_state, metrics, err
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def split_microbatches(batch: dict, accum_steps: int) -> dict:
+    """Reshape each leaf (B, ...) -> (accum, B/accum, ...)."""
+    def f(x):
+        b = x.shape[0]
+        assert b % accum_steps == 0, (b, accum_steps)
+        return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+    return jax.tree.map(f, batch)

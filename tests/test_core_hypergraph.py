@@ -1,0 +1,78 @@
+"""Unit + property tests for the hypergraph structure and metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypergraph import Hypergraph
+from repro.core import metrics
+
+
+def tiny():
+    # fig-4-like: three edges, one big
+    return Hypergraph.from_edge_lists(6, [[0, 1, 2, 3], [3, 4], [4, 5], [0, 5]])
+
+
+def test_csr_roundtrip():
+    hg = tiny()
+    hg.validate()
+    assert hg.n == 6 and hg.m == 4
+    assert hg.n_pins == 10
+    assert list(hg.edge_pins(1)) == [3, 4]
+    assert set(hg.vertex_edges(3)) == {0, 1}
+    assert set(hg.neighbors(3)) == {0, 1, 2, 4}
+
+
+def test_duplicate_pins_removed():
+    hg = Hypergraph.from_pins(3, 1, np.array([0, 0, 1, 2]), np.array([0, 0, 0, 0]))
+    assert hg.n_pins == 3
+    assert hg.edge_sizes[0] == 3
+
+
+def test_flip_involution():
+    hg = tiny()
+    f2 = hg.flip().flip()
+    assert f2.n == hg.n and f2.m == hg.m
+    np.testing.assert_array_equal(np.sort(f2.edge_pins(0)), np.sort(hg.edge_pins(0)))
+
+
+def test_k_minus_1_hand_checked():
+    hg = tiny()
+    # all in one partition
+    assert metrics.k_minus_1(hg, np.zeros(6, np.int32)) == 0
+    # split {0,1,2} | {3,4,5}: e0 spans 2 -> 1; e1 spans 1... pins(e1)={3,4} both p1 -> 0
+    a = np.array([0, 0, 0, 1, 1, 1], np.int32)
+    # e0={0,1,2,3} spans {0,1} -> 1; e1={3,4} -> 0; e2={4,5} -> 0; e3={0,5} spans -> 1
+    assert metrics.k_minus_1(hg, a) == 2
+    assert metrics.hyperedge_cut(hg, a) == 2
+    assert metrics.sum_external_degree(hg, a) == 4
+
+
+def test_imbalance():
+    a = np.array([0, 0, 0, 1], np.int32)
+    assert metrics.vertex_imbalance(a, 2) == pytest.approx((3 - 1) / 3)
+    assert metrics.vertex_imbalance(np.array([0, 1], np.int32), 2) == 0.0
+
+
+@st.composite
+def hypergraphs(draw):
+    n = draw(st.integers(min_value=2, max_value=40))
+    m = draw(st.integers(min_value=1, max_value=30))
+    n_pins = draw(st.integers(min_value=1, max_value=120))
+    vs = draw(st.lists(st.integers(0, n - 1), min_size=n_pins, max_size=n_pins))
+    es = draw(st.lists(st.integers(0, m - 1), min_size=n_pins, max_size=n_pins))
+    return Hypergraph.from_pins(n, m, np.array(vs), np.array(es))
+
+
+@given(hypergraphs(), st.integers(min_value=1, max_value=8), st.integers(0, 3))
+@settings(max_examples=50, deadline=None)
+def test_property_metric_bounds(hg, k, seed):
+    """(k-1) bounds: 0 <= k-1 <= sum(min(|e|, k) - 1); flip preserves pins."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, k, size=hg.n).astype(np.int32)
+    km1 = metrics.k_minus_1(hg, a)
+    sizes = hg.edge_sizes
+    ub = int(np.sum(np.maximum(np.minimum(sizes, k) - 1, 0)))
+    assert 0 <= km1 <= ub
+    assert metrics.hyperedge_cut(hg, a) <= km1 or km1 == 0
+    assert hg.flip().n_pins == hg.n_pins
+    hg.flip().validate()

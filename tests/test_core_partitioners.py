@@ -1,0 +1,104 @@
+"""Behavior tests for HYPE and all baseline partitioners."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hypergraph import Hypergraph
+from repro.core.hype import HypeParams, hype_partition, hyperedge_balanced_hype
+from repro.core.partition_api import METHODS, partition
+from repro.core import metrics
+from repro.data.synthetic import powerlaw_hypergraph, community_hypergraph
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(800, 500, seed=7, max_edge=40, max_degree=24)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_valid_complete_assignment(hg, method):
+    k = 8
+    a = partition(hg, k, method, seed=0)
+    assert a.shape == (hg.n,)
+    assert a.min() >= 0 and a.max() < k
+    assert a.dtype == np.int32
+
+
+@pytest.mark.parametrize("method", ["hype", "minmax_nb", "random"])
+def test_determinism(hg, method):
+    a1 = partition(hg, 4, method, seed=11)
+    a2 = partition(hg, 4, method, seed=11)
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_hype_perfect_vertex_balance(hg):
+    """Paper §III-B1 step 4: perfectly balanced vertex counts."""
+    for k in (2, 7, 16):
+        a = hype_partition(hg, k, HypeParams(seed=0))
+        sizes = metrics.partition_sizes(a, k)
+        assert sizes.max() - sizes.min() <= 1
+
+
+def test_hype_beats_random(hg):
+    k = 16
+    a_h = partition(hg, k, "hype", seed=0)
+    a_r = partition(hg, k, "random", seed=0)
+    assert metrics.k_minus_1(hg, a_h) < 0.75 * metrics.k_minus_1(hg, a_r)
+
+
+def test_hype_weighted_balance(hg):
+    a = hype_partition(hg, 4, HypeParams(seed=0, balance="weighted"))
+    w = 1.0 + hg.vertex_degrees
+    loads = np.zeros(4)
+    np.add.at(loads, a, w)
+    assert loads.max() <= 1.35 * loads.mean()
+
+
+def test_hyperedge_balanced_flip(hg):
+    a = hyperedge_balanced_hype(hg, 4, HypeParams(seed=0))
+    assert a.shape == (hg.m,)
+    sizes = metrics.partition_sizes(a, 4)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_hype_k1_single_partition(hg):
+    a = hype_partition(hg, 1, HypeParams(seed=0))
+    assert (a == 0).all()
+    assert metrics.k_minus_1(hg, a) == 0
+
+
+def test_minmax_nb_slack_respected(hg):
+    from repro.core.minmax import minmax_partition
+    a = minmax_partition(hg, 8, mode="nb", slack=50, seed=0)
+    sizes = metrics.partition_sizes(a, 8)
+    assert sizes.max() - sizes.min() <= 51
+
+
+def test_structure_aware_beats_stream_on_community_graph():
+    """The paper's core claim, on a strongly clustered hypergraph."""
+    hg = powerlaw_hypergraph(4000, 2500, seed=5, max_edge=60, max_degree=30)
+    k = 16
+    km = {m: metrics.k_minus_1(hg, partition(hg, k, m, seed=0))
+          for m in ("hype", "minmax_nb", "random")}
+    assert km["hype"] < km["random"]
+    assert km["minmax_nb"] < km["random"]
+    assert km["hype"] < 1.25 * km["minmax_nb"]  # competitive or better
+
+
+@given(st.integers(2, 6), st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_property_hype_partitions_everything(k, seed):
+    hg = powerlaw_hypergraph(120, 80, seed=seed, max_edge=15, max_degree=10)
+    a = hype_partition(hg, k, HypeParams(seed=seed))
+    assert (a >= 0).all() and (a < k).all()
+    sizes = metrics.partition_sizes(a, k)
+    assert sizes.sum() == hg.n
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_hype_stats_cache_effect(hg):
+    _, st_c = hype_partition(hg, 8, HypeParams(seed=0, use_cache=True),
+                             return_stats=True)
+    _, st_n = hype_partition(hg, 8, HypeParams(seed=0, use_cache=False),
+                             return_stats=True)
+    assert st_n.score_computations > st_c.score_computations

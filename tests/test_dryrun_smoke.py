@@ -1,0 +1,28 @@
+"""Dry-run harness smoke test: one real cell at 512 placeholder devices
+(subprocess — the XLA flag must precede jax init)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_512_devices():
+    with tempfile.TemporaryDirectory() as d:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "two-tower-retrieval", "--shape", "serve_p99",
+             "--mesh", "single", "--out", d, "--force"],
+            capture_output=True, text=True, timeout=560,
+            env={**os.environ, "PYTHONPATH": "src"}, cwd=".")
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        path = os.path.join(
+            d, "two-tower-retrieval__serve_p99__single.json")
+        with open(path) as f:
+            rec = json.load(f)
+        assert rec["roofline"]["bound"] in ("compute", "memory",
+                                            "collective")
+        assert rec["cost_per_device"]["flops"] > 0

@@ -1,0 +1,67 @@
+"""JAX HYPE engines: validity, cross-engine quality, parallel growth."""
+import numpy as np
+import pytest
+
+from repro.core.hype import HypeParams, hype_partition
+from repro.core.hype_jax import (PaddedHypergraph, hype_jax_partition,
+                                 hype_parallel_partition)
+from repro.core import metrics
+from repro.core.minmax import random_partition
+from repro.data.synthetic import powerlaw_hypergraph
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(300, 200, seed=3, max_edge=20, max_degree=12)
+
+
+def test_padded_views(hg):
+    ph = PaddedHypergraph.from_hypergraph(hg)
+    assert ph.n == hg.n and ph.m == hg.m
+    assert ph.v2e.shape[0] == hg.n
+    # row contents match CSR
+    v = int(np.argmax(hg.vertex_degrees))
+    row = np.asarray(ph.v2e[v])
+    np.testing.assert_array_equal(np.sort(row[row >= 0]),
+                                  np.sort(hg.vertex_edges(v)))
+
+
+@pytest.mark.parametrize("k", [2, 5, 8])
+def test_jax_sequential_valid_balanced(hg, k):
+    a = hype_jax_partition(hg, k, seed=0)
+    assert a.shape == (hg.n,)
+    assert a.min() >= 0 and a.max() < k
+    sizes = metrics.partition_sizes(a, k)
+    assert sizes.max() - sizes.min() <= 1
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_parallel_valid(hg, k):
+    a = hype_parallel_partition(hg, k, seed=0)
+    assert a.min() >= 0 and a.max() < k
+    sizes = metrics.partition_sizes(a, k)
+    # parallel growth is balanced up to collision slack
+    assert sizes.max() <= 1.5 * (hg.n / k) + 2
+
+
+def test_jax_matches_numpy_quality(hg):
+    """Engines share the algorithm, not the RNG; quality must be close."""
+    k = 6
+    km_np = metrics.k_minus_1(hg, hype_partition(hg, k, HypeParams(seed=0)))
+    km_jx = metrics.k_minus_1(hg, hype_jax_partition(hg, k, seed=0))
+    km_rd = metrics.k_minus_1(hg, random_partition(hg, k, seed=0))
+    assert km_jx < km_rd
+    assert km_jx <= 1.5 * km_np + 10
+
+
+def test_parallel_quality_beats_random(hg):
+    k = 8
+    km_p = metrics.k_minus_1(hg, hype_parallel_partition(hg, k, seed=0))
+    km_r = metrics.k_minus_1(hg, random_partition(hg, k, seed=0))
+    assert km_p < km_r
+
+
+def test_jax_deterministic(hg):
+    a1 = hype_jax_partition(hg, 4, seed=9)
+    a2 = hype_jax_partition(hg, 4, seed=9)
+    np.testing.assert_array_equal(a1, a2)

@@ -1,0 +1,150 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hype_score.ops import hype_scores
+from repro.kernels.hype_score.ref import hype_scores_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.neighbor_agg.ops import neighbor_agg
+from repro.kernels.neighbor_agg.ref import neighbor_agg_ref
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ flash attn
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,window", [
+    (2, 128, 4, 4, 64, None),          # MHA
+    (1, 256, 8, 2, 64, None),          # GQA 4:1
+    (2, 256, 4, 4, 32, 64),            # sliding window
+    (1, 128, 2, 1, 128, None),         # MQA, d=128
+])
+def test_flash_attention_matches_ref(B, S, Hq, Hkv, D, window, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+@given(st.integers(1, 3), st.sampled_from([64, 128, 192]),
+       st.sampled_from([1, 2, 4]), st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property(B, S, Hkv, seed):
+    """GQA invariances across random shapes (property-based)."""
+    Hq, D = Hkv * 2, 32
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5,
+                               rtol=3e-5)
+
+
+# ------------------------------------------------------------- hype score
+
+@pytest.mark.parametrize("B,L,s", [(16, 32, 10), (64, 8, 4), (7, 128, 16),
+                                   (1, 1, 1)])
+def test_hype_scores_matches_ref(B, L, s):
+    rng = np.random.default_rng(0)
+    nbrs = rng.integers(-1, 500, size=(B, L)).astype(np.int32)
+    fringe = rng.choice(500, size=s, replace=False).astype(np.int32)
+    out = hype_scores(jnp.asarray(nbrs), jnp.asarray(fringe))
+    ref = hype_scores_ref(jnp.asarray(nbrs), jnp.asarray(fringe))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@given(st.integers(1, 40), st.integers(1, 24), st.integers(1, 12),
+       st.integers(0, 99))
+@settings(max_examples=15, deadline=None)
+def test_hype_scores_property(B, L, s, seed):
+    rng = np.random.default_rng(seed)
+    nbrs = rng.integers(-1, 64, size=(B, L)).astype(np.int32)
+    fringe = rng.integers(0, 64, size=(s,)).astype(np.int32)
+    out = np.asarray(hype_scores(jnp.asarray(nbrs), jnp.asarray(fringe)))
+    ref = np.asarray(hype_scores_ref(jnp.asarray(nbrs), jnp.asarray(fringe)))
+    np.testing.assert_array_equal(out, ref)
+    # invariant: 0 <= score <= #valid
+    assert (out >= 0).all()
+    assert (out <= (nbrs >= 0).sum(1)).all()
+
+
+# ---------------------------------------------------------- embedding bag
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("V,D,B,bag,combine", [
+    (128, 64, 8, 4, "mean"), (1000, 128, 16, 8, "sum"), (32, 256, 4, 1,
+                                                         "mean")])
+def test_embedding_bag_matches_ref(V, D, B, bag, combine, dtype):
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(V, D)), dtype)
+    ids = rng.integers(-1, V, size=(B, bag)).astype(np.int32)
+    out = embedding_bag(table, jnp.asarray(ids), combine=combine)
+    ref = embedding_bag_ref(table, jnp.asarray(ids), combine=combine)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_embedding_bag_all_padded_row():
+    table = jnp.ones((16, 32), jnp.float32)
+    ids = jnp.full((2, 4), -1, jnp.int32)
+    out = embedding_bag(table, ids)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+# ----------------------------------------------------------- neighbor agg
+
+@pytest.mark.parametrize("N,D,F,B,K", [(64, 32, 16, 8, 4),
+                                       (200, 128, 64, 16, 10),
+                                       (30, 16, 8, 4, 15)])
+def test_neighbor_agg_matches_ref(N, D, F, B, K):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, F)) * 0.1, jnp.float32)
+    nbrs = rng.integers(-1, N, size=(B, K)).astype(np.int32)
+    out = neighbor_agg(x, jnp.asarray(nbrs), w)
+    ref = neighbor_agg_ref(x, jnp.asarray(nbrs), w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+
+
+@given(st.integers(2, 50), st.integers(1, 8), st.integers(1, 12),
+       st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_neighbor_agg_property(N, B, K, seed):
+    D, F = 16, 8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, F)) * 0.1, jnp.float32)
+    nbrs = rng.integers(-1, N, size=(B, K)).astype(np.int32)
+    out = np.asarray(neighbor_agg(x, jnp.asarray(nbrs), w))
+    ref = np.asarray(neighbor_agg_ref(x, jnp.asarray(nbrs), w))
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)

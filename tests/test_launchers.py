@@ -1,0 +1,37 @@
+"""CLI launcher smoke tests (reduced configs, tiny step counts)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _run(mod, *args, timeout=560):
+    return subprocess.run([sys.executable, "-m", mod, *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=ENV, cwd=".")
+
+
+@pytest.mark.slow
+def test_train_cli_lm_reduced(tmp_path):
+    r = _run("repro.launch.train", "--arch", "stablelm-3b", "--reduced",
+             "--steps", "8", "--ckpt_dir", str(tmp_path))
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "loss" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_cli_recsys_reduced(tmp_path):
+    r = _run("repro.launch.train", "--arch", "two-tower-retrieval",
+             "--reduced", "--steps", "8", "--ckpt_dir", str(tmp_path))
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+
+
+@pytest.mark.slow
+def test_serve_cli_lm_reduced():
+    r = _run("repro.launch.serve", "--arch", "mixtral-8x22b", "--reduced",
+             "--batch", "2", "--prompt_len", "8", "--tokens", "4")
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "tok/s" in r.stdout

@@ -1,0 +1,74 @@
+"""Property tests for the MoE dispatch/combine invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import MoEConfig, init_moe_layer, moe_ffn
+from repro.models.transformer import TransformerConfig
+
+
+def _cfg(E, K, cf=8.0):
+    return TransformerConfig(
+        name="t", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+        d_head=16, d_ff=16, vocab=64, moe=MoEConfig(E, K, cf),
+        remat=False, dtype=jnp.float32)
+
+
+@given(st.integers(2, 8), st.integers(1, 2), st.integers(0, 20))
+@settings(max_examples=12, deadline=None)
+def test_moe_finite_and_shape(E, K, seed):
+    K = min(K, E)
+    cfg = _cfg(E, K)
+    lp = init_moe_layer(jax.random.PRNGKey(seed), 32, 16, cfg.moe,
+                        jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, 32))
+    out, aux = moe_ffn(cfg, lp, x)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 0.99  # Switch aux loss lower bound is ~1 (balanced)
+
+
+def test_moe_huge_capacity_no_drops_matches_dense_mixture():
+    """With capacity >> tokens, MoE output = weighted sum of expert MLPs."""
+    cfg = _cfg(4, 2, cf=64.0)
+    lp = init_moe_layer(jax.random.PRNGKey(0), 32, 16, cfg.moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+    out, _ = moe_ffn(cfg, lp, x)
+
+    # dense oracle: route every token through its top-k experts directly
+    logits = x.astype(jnp.float32) @ lp["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, 2)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    expect = jnp.zeros_like(x)
+    for e in range(4):
+        h = jax.nn.silu(x @ lp["moe_gate"][e]) * (x @ lp["moe_up"][e])
+        y = h @ lp["moe_down"][e]
+        w = jnp.where(top_i == e, top_p, 0.0).sum(-1)
+        expect = expect + y * w[..., None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_moe_zero_capacity_drops_everything():
+    cfg = dataclasses.replace(_cfg(4, 2), moe_cf_override=1e-9)
+    lp = init_moe_layer(jax.random.PRNGKey(0), 32, 16, cfg.moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+    out, _ = moe_ffn(cfg, lp, x)
+    # capacity 1 slot per expert: most tokens dropped, output tiny but
+    # finite; the residual connection in the block keeps training sane
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_moe_shard_c_constraint_is_noop_without_mesh():
+    base = _cfg(4, 2)
+    sc = dataclasses.replace(base, moe_shard_c=True)
+    lp = init_moe_layer(jax.random.PRNGKey(0), 32, 16, base.moe,
+                        jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    a, _ = moe_ffn(base, lp, x)
+    b, _ = moe_ffn(sc, lp, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
