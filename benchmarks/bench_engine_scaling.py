@@ -1,0 +1,131 @@
+"""Engine scaling sweep -> BENCH_engines.json (the repo's perf trajectory).
+
+Sweeps partitioning engines x (dataset/n, k, t) on the synthetic
+github / stackoverflow / reddit generators and records runtime + quality
+for every row, machine-readably, so future PRs can diff performance.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine_scaling
+
+Timing protocol: per dataset the batched engine's one-time costs
+(adjacency build, Pallas interpret-mode traces) are warmed once and
+reported separately in ``meta``; every row's ``runtime_s`` is then the
+best of ``REPEATS`` steady-state runs. The jittable ``hype_jax`` engine
+moves one vertex per while_loop iteration, so it only runs on a small
+synthetic row (it exists for on-device validation, not throughput).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import metrics
+from repro.core.hype import HypeParams, hype_partition
+from repro.core.hype_batched import BatchedParams, hype_batched_partition
+from repro.data.synthetic import powerlaw_hypergraph
+
+from .common import QUICK, dataset, emit
+
+OUT_PATH = "BENCH_engines.json"
+REPEATS = 2
+KS = (8, 32)
+TS = (1, 8, 16)          # batched-engine admissions-per-step knob
+JAX_N = 300              # hype_jax validation row size
+
+
+def _run(fn, *args, **kw):
+    best, out = None, None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        best = dt if best is None or dt < best else best
+    return out, best
+
+
+def _row(name, hg, k, engine, runtime, assignment, extra=None):
+    rec = {
+        "dataset": name, "n": hg.n, "m": hg.m, "pins": hg.n_pins,
+        "k": k, "engine": engine, "runtime_s": round(runtime, 4),
+        "k_minus_1": metrics.k_minus_1(hg, assignment),
+        "imbalance": round(metrics.vertex_imbalance(assignment, k), 4),
+    }
+    if extra:
+        rec.update(extra)
+    emit(f"engine/{name}/k{k}/{engine}", runtime * 1e6,
+         f"km1={rec['k_minus_1']}")
+    return rec
+
+
+def run():
+    rows = []
+    meta = {"quick": QUICK, "repeats": REPEATS,
+            "adjacency_build_s": {}, "speedups": {}}
+
+    # warm the Pallas interpret traces once (process-wide)
+    hype_batched_partition(powerlaw_hypergraph(200, 150, seed=1), 4,
+                           BatchedParams(seed=0))
+
+    for name in ("github", "stackoverflow", "reddit"):
+        hg = dataset(name)
+        t0 = time.perf_counter()
+        hg.vertex_adjacency()
+        meta["adjacency_build_s"][name] = round(
+            time.perf_counter() - t0, 4)
+        for k in KS:
+            a, dt = _run(hype_partition, hg, k, HypeParams(seed=0))
+            base = _row(name, hg, k, "hype", dt, a)
+            rows.append(base)
+            for t in TS:
+                a, dt = _run(hype_batched_partition, hg, k,
+                             BatchedParams(seed=0, t=t))
+                rec = _row(name, hg, k, f"hype_batched_t{t}", dt, a,
+                           {"t": t,
+                            "speedup_vs_hype": round(
+                                base["runtime_s"] / max(dt, 1e-9), 2),
+                            "km1_ratio_vs_hype": round(
+                                rec_ratio(a, base, hg), 4)})
+                rows.append(rec)
+
+    # small-n row including the jittable engines (validation scale)
+    from repro.core.hype_jax import (hype_jax_partition,
+                                     hype_parallel_partition)
+    hg = powerlaw_hypergraph(JAX_N, 200, seed=3, max_edge=20,
+                             max_degree=12)
+    for engine, fn in (("hype", lambda: hype_partition(
+            hg, 8, HypeParams(seed=0))),
+            ("hype_batched_t8", lambda: hype_batched_partition(
+                hg, 8, BatchedParams(seed=0))),
+            ("hype_jax", lambda: hype_jax_partition(hg, 8, seed=0)),
+            ("hype_parallel", lambda: hype_parallel_partition(
+                hg, 8, seed=0))):
+        a, dt = _run(fn)
+        rows.append(_row("powerlaw_small", hg, 8, engine, dt, a))
+
+    # headline acceptance numbers: reddit @ k=32
+    for r in rows:
+        if r["dataset"] == "reddit" and r["k"] == 32 \
+                and r["engine"].startswith("hype_batched"):
+            meta["speedups"][f"reddit_k32_{r['engine']}"] = {
+                "speedup_vs_hype": r["speedup_vs_hype"],
+                "km1_ratio_vs_hype": r["km1_ratio_vs_hype"],
+            }
+
+    payload = {"meta": meta, "rows": rows}
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {os.path.abspath(OUT_PATH)} ({len(rows)} rows)",
+          flush=True)
+    return payload
+
+
+def rec_ratio(assignment, base, hg):
+    km = metrics.k_minus_1(hg, assignment)
+    return km / max(base["k_minus_1"], 1)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -10,6 +10,7 @@ Mapping to the paper:
   bench_reddit_scale       -> Fig 10 + runtime-vs-k claims
   bench_beyond_paper       -> §VI future work + HYPE-driven placement
   bench_kernels            -> Pallas kernel oracles
+  bench_engine_scaling     -> engines x (n, k, t) -> BENCH_engines.json
   roofline_table           -> EXPERIMENTS.md §Roofline source
 """
 from __future__ import annotations
@@ -19,7 +20,8 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from . import (bench_ablations, bench_beyond_paper, bench_kernels,
+    from . import (bench_ablations, bench_beyond_paper,
+                   bench_engine_scaling, bench_kernels,
                    bench_partition_quality, bench_reddit_scale,
                    roofline_table)
     print("name,us_per_call,derived")
@@ -28,6 +30,7 @@ def main() -> None:
     bench_reddit_scale.run()
     bench_beyond_paper.run()
     bench_kernels.run()
+    bench_engine_scaling.run()
     roofline_table.run()
     print(f"\n# total benchmark wall time: {time.time() - t0:.1f}s",
           flush=True)

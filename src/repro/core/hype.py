@@ -27,6 +27,7 @@ from typing import Optional
 import numpy as np
 
 from .hypergraph import Hypergraph
+from .scoring import batched_dext_numpy
 
 
 @dataclasses.dataclass
@@ -160,6 +161,29 @@ class _HypeState:
         self.cache[v] = sc
         return sc
 
+    def refresh_many(self, vs: list) -> None:
+        """Batch fringe-update scoring: one vectorized d_ext pass.
+
+        Produces exactly the same scores/stats as per-vertex ``refresh``
+        in the default "universe" mode; the eq1 / capped ablation modes
+        keep the scalar path (they exist for fidelity, not speed).
+        """
+        if self.p.dext_mode != "universe" or self.p.dext_cap is not None:
+            for v in vs:
+                self.refresh(v)
+            return
+        if self.p.use_cache:
+            miss = [v for v in vs if self.cache[v] < 0.0]
+            self.stats.cache_hits += len(vs) - len(miss)
+        else:
+            miss = list(vs)
+        if not miss:
+            return
+        scores = batched_dext_numpy(self.hg, np.asarray(miss, np.int64),
+                                    self.in_fringe, self.assignment)
+        self.cache[miss] = scores
+        self.stats.score_computations += len(miss)
+
 
 def _grow_partition(st: _HypeState, part: int, target: float,
                     weights: Optional[np.ndarray]) -> None:
@@ -227,8 +251,7 @@ def _grow_partition(st: _HypeState, part: int, target: float,
         # and set fringe to top-s by score (Alg 2 l.18-20)
         pool = fringe + cand
         if pool:
-            for v in pool:
-                st.refresh(v)
+            st.refresh_many(pool)
             scored = sorted(pool, key=st.score)
             fringe = scored[:p.s]
             for v in scored[p.s:]:

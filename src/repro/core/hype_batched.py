@@ -1,0 +1,355 @@
+"""Batched-candidate HYPE: the throughput-oriented engine (DESIGN.md §4).
+
+The paper's engine (``hype.py``) moves ONE vertex per growth step and
+scores r=2 candidates at a time — latency-bound, CPU-idiomatic. This
+engine turns the inner loop into tile work:
+
+  per growth step
+    1. (when the candidate pool runs low) draw a bulk batch of candidate
+       vertices from the *smallest* active hyperedges — size-bucketed
+       queues instead of a heap, one vectorized pin scan per draw,
+    2. gather their unassigned-neighbor lists as dense (b, L) tiles
+       (``scoring.neighbor_tile_adj``; assigned pins dropped, hubs
+       capped),
+    3. score every cache-miss candidate through the Pallas
+       ``hype_scores`` kernel (fringe membership subtracted on the VPU),
+    4. keep scored candidates in a pool sorted by score — the paper's
+       s-sized fringe is its top-s — and admit the top-``t`` per step.
+
+``t`` is the quality/speed knob: steps per partition drop from O(target)
+to O(target / t); ``t=1`` recovers the sequential admission order (same
+greedy rule, wider candidate pool). Scores are lazily cached per phase
+exactly like the paper's optimization (c), so the kernel only sees
+first-time candidates.
+
+This is the first real consumer of ``kernels/hype_score`` — on CPU the
+kernel runs in interpret mode (still one fused batched evaluation); on
+TPU the same call compiles to the VPU tile loop the kernel was built for.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .hypergraph import Hypergraph
+from . import scoring
+
+
+@dataclasses.dataclass
+class BatchedParams:
+    b: int = 256           # rows per kernel tile (the paper's r=2)
+    s: int = 16            # max fringe size (kernel compares vs s slots)
+    t: int = 8             # admissions per step; 1 = sequential order
+    pool_cap: int = 64     # scored candidates held between steps
+    refill_lo: int = 64    # refill the pool when it drops below this
+    cap_pins: int = 3072   # pins scanned per candidate before truncation
+    kernel_min: int = 16   # min batch worth a device round-trip; smaller
+    #                        dribbles score on host (same formula and hub
+    #                        truncation convention as the kernel tiles)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BatchedStats:
+    kernel_calls: int = 0
+    kernel_rows: int = 0       # candidate rows scored by the Pallas kernel
+    host_rows: int = 0         # rows scored by the numpy fallback
+    cache_hits: int = 0
+    edges_scanned: int = 0     # pins scanned during candidate selection
+    random_restarts: int = 0
+    steps: int = 0
+
+
+class _BatchedState:
+    """Mutable state for the k growth phases (host side, all numpy)."""
+
+    def __init__(self, hg: Hypergraph, k: int, p: BatchedParams):
+        self.hg = hg
+        self.k = k
+        self.p = p
+        n, m = hg.n, hg.m
+        self.assignment = np.full(n, -1, dtype=np.int32)
+        self.in_fringe = np.zeros(n, dtype=bool)
+        self.in_pool = np.zeros(n, dtype=bool)     # fringe ∪ held candidates
+        self.cur_fringe = np.empty(0, dtype=np.int64)
+        self.cache = np.full(n, -1.0)
+        self.edge_sizes = np.asarray(hg.edge_sizes, dtype=np.int64)
+        self.edge_epoch = np.full(m, -1, dtype=np.int32)   # activation epoch
+        self.edge_dead = self.edge_sizes == 0              # no live pins left
+        # size-bucketed active-edge queues (replaces the paper's min-heap):
+        # buckets[size] is a FIFO of edge-id arrays; scanning pops from the
+        # front and re-queues still-live edges at the front, so smallest
+        # edges keep being drawn first, like the heap's requeue.
+        self.buckets: dict = {}
+        self.rng = np.random.default_rng(p.seed)
+        self.rand_order = self.rng.permutation(n)
+        self.rand_ptr = 0
+        self.stats = BatchedStats()
+        self._fringe_buf = np.full(p.s, -1, dtype=np.int32)
+        # One-time unique-neighbor CSR (memoized on hg): turns every tile
+        # build into a pure gather. None for pathological hub expansions —
+        # scoring then falls back to per-batch dedup with cap_pins.
+        self.adj = hg.vertex_adjacency()
+
+    # ------------------------------------------------------------------ #
+    def random_unassigned(self, count: int = 1) -> np.ndarray:
+        """Next ``count`` unassigned non-pool vertices of the random stream.
+
+        Vectorized skip-pointer scan over the shuffled order; the pointer
+        only advances past consumed positions so no vertex is skipped.
+        """
+        n = self.hg.n
+        out: list = []
+        got = 0
+        while self.rand_ptr < n and got < count:
+            chunk = self.rand_order[self.rand_ptr:
+                                    self.rand_ptr + max(1024, count)]
+            ok = np.flatnonzero((self.assignment[chunk] < 0)
+                                & ~self.in_pool[chunk])
+            if ok.size >= count - got:
+                ok = ok[:count - got]
+                self.rand_ptr += int(ok[-1]) + 1
+            else:
+                self.rand_ptr += chunk.size
+            take = chunk[ok].astype(np.int64)
+            got += take.size
+            if take.size:
+                out.append(take)
+        if got < count:     # stream exhausted; the stragglers sit earlier
+            rem = np.flatnonzero((self.assignment < 0) & ~self.in_pool)
+            if out:
+                rem = np.setdiff1d(rem, np.concatenate(out),
+                                   assume_unique=True)
+            if rem.size:
+                out.append(rem[:count - got].astype(np.int64))
+        return (np.concatenate(out) if out
+                else np.empty(0, dtype=np.int64))
+
+    def set_fringe(self, new_fringe: np.ndarray) -> None:
+        """Sync the s-sized fringe view (paper's F) used for scoring."""
+        self.in_fringe[self.cur_fringe] = False
+        self.in_fringe[new_fringe] = True
+        self.cur_fringe = new_fringe
+        self._fringe_buf[:] = -1
+        self._fringe_buf[:new_fringe.size] = new_fringe
+
+    # ------------------------------------------------------------------ #
+    def activate(self, vs: np.ndarray, phase: int) -> None:
+        """Mark the edges incident to newly admitted vertices active."""
+        edges, _ = scoring.gather_csr_rows(
+            self.hg.v2e_indptr, self.hg.v2e_indices, vs)
+        if edges.size == 0:
+            return
+        edges = np.unique(edges.astype(np.int64))
+        fresh = edges[(self.edge_epoch[edges] != phase)
+                      & ~self.edge_dead[edges]]
+        if fresh.size == 0:
+            return
+        self.edge_epoch[fresh] = phase
+        sizes = self.edge_sizes[fresh]
+        for sz in np.unique(sizes):
+            self.buckets.setdefault(int(sz), collections.deque()).append(
+                fresh[sizes == sz])
+
+    # ------------------------------------------------------------------ #
+    def draw_candidates(self, need: int) -> np.ndarray:
+        """Up to ``need`` distinct universe vertices from smallest edges.
+
+        One vectorized pass: pull edges smallest-size-first under a pin
+        budget, scan all their pins at once, retire dead edges (no
+        unassigned pin left — forever), requeue the still-live ones at the
+        bucket fronts so they are rescanned first next time (the heap's
+        requeue, without the heap).
+        """
+        if need <= 0:
+            return np.empty(0, dtype=np.int64)
+        budget = max(4 * need, 512)
+        batches: list = []
+        pulled = 0
+        for sz in sorted(self.buckets.keys()):
+            q = self.buckets[sz]
+            while q and pulled < budget:
+                arr = q.popleft()
+                n_take = (budget - pulled + sz - 1) // max(sz, 1)
+                if arr.size > n_take:
+                    q.appendleft(arr[n_take:])
+                    arr = arr[:n_take]
+                batches.append(arr)
+                pulled += arr.size * max(sz, 1)
+            if not q:
+                del self.buckets[sz]
+            if pulled >= budget:
+                break
+        if not batches:
+            return np.empty(0, dtype=np.int64)
+        edges = np.concatenate(batches)
+        pins, prow = scoring.gather_csr_rows(
+            self.hg.e2v_indptr, self.hg.e2v_indices, edges)
+        pins = pins.astype(np.int64)
+        self.stats.edges_scanned += pins.size
+        unassigned = self.assignment[pins] < 0
+        live = np.bincount(prow[unassigned], minlength=edges.size) > 0
+        if not live.all():
+            self.edge_dead[edges[~live]] = True     # dead forever
+        live_edges = edges[live]
+        if live_edges.size:
+            lsz = self.edge_sizes[live_edges]
+            for s in np.unique(lsz):
+                self.buckets.setdefault(
+                    int(s), collections.deque()).appendleft(
+                        live_edges[lsz == s])
+        fresh = unassigned & ~self.in_pool[pins]
+        cand = pins[fresh]
+        if cand.size:
+            _, first = np.unique(cand, return_index=True)
+            cand = cand[np.sort(first)][:need]
+        return cand
+
+    # ------------------------------------------------------------------ #
+    def score_misses(self, cand: np.ndarray) -> None:
+        """Score cache-miss candidates in one batched pass, fill the cache.
+
+        Large batches (every phase opening, where the bulk of the scoring
+        lives) go through the Pallas ``hype_scores`` kernel as one (b, L)
+        tile; dribbles below ``kernel_min`` rows are scored by the exact
+        same formula on host, because a device round-trip per 2-3 rows is
+        precisely the latency-bound pattern this engine exists to avoid.
+        """
+        if cand.size == 0:
+            return
+        miss = cand[self.cache[cand] < 0.0]
+        self.stats.cache_hits += cand.size - miss.size
+        if miss.size == 0:
+            return
+        if miss.size >= self.p.kernel_min:
+            import jax.numpy as jnp
+            from repro.kernels.hype_score.ops import hype_scores
+
+            fringe_dev = jnp.asarray(self._fringe_buf)
+            for lo in range(0, miss.size, self.p.b):
+                chunk = miss[lo:lo + self.p.b]
+                # two B buckets (64 / b) keep retraces rare while small
+                # top-up batches avoid paying for a full-width tile
+                pad_b = 64 if chunk.size <= 64 else self.p.b
+                if self.adj is not None:
+                    tile, truncated = scoring.neighbor_tile_adj(
+                        self.adj, chunk, self.assignment, pad_b=pad_b)
+                else:
+                    tile, truncated = scoring.neighbor_tile(
+                        self.hg, chunk, self.assignment,
+                        cap_pins=self.p.cap_pins, pad_b=pad_b)
+                out = np.asarray(hype_scores(jnp.asarray(tile), fringe_dev))
+                sc = out[:chunk.size].astype(np.float64)
+                sc[truncated] += scoring.TRUNC_PENALTY
+                self.cache[chunk] = sc
+                self.stats.kernel_calls += 1
+                self.stats.kernel_rows += int(chunk.size)
+        else:
+            if self.adj is not None:
+                sc = scoring.batched_dext_adj(
+                    self.adj, miss, self.in_fringe, self.assignment)
+            else:
+                sc = scoring.batched_dext_numpy(
+                    self.hg, miss, self.in_fringe, self.assignment,
+                    cap_pins=self.p.cap_pins,
+                    max_width=scoring.L_BUCKETS[-1])
+            self.stats.host_rows += int(miss.size)
+            self.cache[miss] = sc
+
+
+def _grow_partition(st: _BatchedState, phase: int, target: int) -> None:
+    """Grow core set ``phase`` to ``target`` vertices.
+
+    The step loop keeps a *pool* of up to ``pool_cap`` scored candidates
+    sorted by cached score. Refills happen in bulk (one kernel tile per
+    ``b`` rows) whenever the pool runs low; between refills a step is just
+    "admit the t best, queue their edges" — the latency-bound per-vertex
+    machinery of the sequential engines is gone entirely. The paper's
+    s-sized fringe survives as the top-s of the pool: it is what the
+    scoring kernel subtracts, exactly like F in Eq. 1.
+    """
+    p = st.p
+    st.cache[:] = -1.0
+    st.buckets = {}
+    pool = np.empty(0, dtype=np.int64)       # kept sorted by score asc
+    pending: list = []                       # admitted, edges not yet queued
+
+    seeds = st.random_unassigned(1)
+    if seeds.size == 0:
+        return
+    st.assignment[seeds] = phase
+    st.activate(seeds, phase)
+    acc = 1
+
+    while acc < target:
+        st.stats.steps += 1
+        # ------- refill: bulk-draw and kernel-score new candidates -------
+        if pool.size < max(p.t, p.refill_lo):
+            if pending:
+                st.activate(np.concatenate(pending), phase)
+                pending = []
+            cand = st.draw_candidates(p.pool_cap - pool.size)
+            if cand.size:
+                st.score_misses(cand)
+                st.in_pool[cand] = True
+                pool = np.concatenate([pool, cand])
+                pool = pool[np.argsort(st.cache[pool], kind="stable")]
+                st.set_fringe(pool[:p.s])
+        if pool.size == 0:                    # random restart (batched: on
+            # shattered remainders each isolated vertex would otherwise
+            # cost a full step, so seed up to t fresh growth points)
+            vs = st.random_unassigned(p.t)
+            if vs.size == 0:
+                return
+            st.stats.random_restarts += 1
+            pool = vs
+            st.in_pool[vs] = True
+            st.cache[vs] = 0.0
+            st.set_fringe(pool[:p.s])
+        # ------- core update: admit the t best pool vertices -------
+        nt = min(p.t, target - acc, pool.size)
+        admit, pool = pool[:nt], pool[nt:]
+        st.assignment[admit] = phase
+        st.in_pool[admit] = False
+        pending.append(admit)
+        st.set_fringe(pool[:p.s])
+        acc += int(admit.size)
+
+    # release fringe + pool back to the universe (§III-B1 step 4)
+    st.set_fringe(np.empty(0, dtype=np.int64))
+    st.in_pool[pool] = False
+
+
+def hype_batched_partition(hg: Hypergraph, k: int,
+                           params: Optional[BatchedParams] = None,
+                           return_stats: bool = False):
+    """Partition ``hg`` into ``k`` parts with batched-candidate HYPE.
+
+    Same contract as ``hype_partition``: complete int32 assignment with
+    perfectly balanced partition sizes (max - min <= 1).
+    """
+    if params is None:
+        params = BatchedParams()
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    if params.t < 1 or params.b < 1 or params.s < 1:
+        raise ValueError("b, s, t must all be >= 1")
+    if params.pool_cap < 1:
+        raise ValueError("pool_cap must be >= 1")
+    st = _BatchedState(hg, k, params)
+    n = hg.n
+    base, rem = divmod(n, k)
+    for i in range(k):
+        if i == k - 1:
+            rem_v = np.flatnonzero(st.assignment < 0)
+            st.assignment[rem_v] = i
+            st.in_fringe[:] = False
+            break
+        _grow_partition(st, i, base + (1 if i < rem else 0))
+    assert (st.assignment >= 0).all()
+    if return_stats:
+        return st.assignment, st.stats
+    return st.assignment

@@ -35,8 +35,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from .hypergraph import Hypergraph
+from .scoring import batched_dext_jax
 
 _INF = jnp.float32(3.4e38)
+
+
+def _pad_csr(indptr: np.ndarray, indices: np.ndarray, rows: int,
+             width: int) -> np.ndarray:
+    """Dense (rows, width) -1-padded view of a CSR structure.
+
+    Pure numpy scatter — one assignment over all nonzeros, no per-row
+    Python loop.
+    """
+    out = np.full((rows, width), -1, dtype=np.int32)
+    if rows and indices.size:
+        lens = np.diff(indptr).astype(np.int64)
+        r = np.repeat(np.arange(rows, dtype=np.int64), lens)
+        c = (np.arange(indices.size, dtype=np.int64)
+             - np.repeat(indptr[:-1].astype(np.int64), lens))
+        out[r, c] = indices
+    return out
+
+
+def _member_mask(n: int, ids: jax.Array) -> jax.Array:
+    """(n,) bool mask with True at every non-negative id in ``ids``.
+
+    -1 pads are routed to the out-of-bounds index n and dropped by the
+    scatter, so a pad entry can never clobber a real vertex (the old
+    ``.at[where(ids >= 0, ids, 0)].set(gathered & ...)`` idiom raced on
+    vertex 0 when a pad and a real update landed on the same slot).
+    """
+    safe = jnp.where(ids >= 0, ids, n)
+    return jnp.zeros(n, dtype=bool).at[safe].set(True, mode="drop")
 
 
 class PaddedHypergraph(NamedTuple):
@@ -61,35 +91,22 @@ class PaddedHypergraph(NamedTuple):
     def from_hypergraph(cls, hg: Hypergraph) -> "PaddedHypergraph":
         max_deg = max(1, int(hg.vertex_degrees.max()) if hg.n else 1)
         max_size = max(1, int(hg.edge_sizes.max()) if hg.m else 1)
-        v2e = np.full((hg.n, max_deg), -1, dtype=np.int32)
-        e2v = np.full((hg.m, max_size), -1, dtype=np.int32)
-        for v in range(hg.n):
-            es = hg.vertex_edges(v)
-            v2e[v, :es.size] = es
-        for e in range(hg.m):
-            ps = hg.edge_pins(e)
-            e2v[e, :ps.size] = ps
+        v2e = _pad_csr(hg.v2e_indptr, hg.v2e_indices, hg.n, max_deg)
+        e2v = _pad_csr(hg.e2v_indptr, hg.e2v_indices, hg.m, max_size)
         return cls(v2e=jnp.asarray(v2e), e2v=jnp.asarray(e2v),
                    edge_sizes=jnp.asarray(hg.edge_sizes, dtype=jnp.int32))
 
 
-def _neighbor_mask(ph: PaddedHypergraph, v: jax.Array) -> jax.Array:
-    """Boolean N(v) membership vector of shape (n,)."""
-    es = ph.v2e[v]                                    # (max_deg,)
-    valid_e = es >= 0
-    pins = ph.e2v[jnp.where(valid_e, es, 0)]          # (max_deg, max_size)
-    pins = jnp.where(valid_e[:, None] & (pins >= 0), pins, ph.n)
-    mask = jnp.zeros(ph.n + 1, dtype=bool).at[pins.reshape(-1)].set(True)
-    mask = mask[:ph.n].at[v].set(False)
-    return mask
+def _d_ext_batch(ph: PaddedHypergraph, vs: jax.Array, in_fringe: jax.Array,
+                 assignment: jax.Array) -> jax.Array:
+    """|N(v) ∩ V'| for a batch of vertices (see hype.py docstring).
 
-
-def _d_ext(ph: PaddedHypergraph, v: jax.Array, in_fringe: jax.Array,
-           assignment: jax.Array) -> jax.Array:
-    """|N(v) ∩ V'| — external-neighbors score (see hype.py docstring)."""
-    nb = _neighbor_mask(ph, v)
-    external = nb & (~in_fringe) & (assignment < 0)
-    return jnp.sum(external).astype(jnp.float32)
+    Shared gather + sorted-segment counting from ``core.scoring`` — no
+    O(n) dense membership mask per candidate, so the cost scales with the
+    candidate neighborhoods, not with the graph.
+    """
+    ext = (~in_fringe) & (assignment < 0)
+    return batched_dext_jax(ph.v2e, ph.e2v, vs, ext)
 
 
 class _SeqState(NamedTuple):
@@ -118,8 +135,8 @@ def _seq_grow(ph: PaddedHypergraph, state: _SeqState, part: int,
         assignment = st.assignment.at[v].set(part)
         in_fringe = st.in_fringe.at[v].set(False)
         es = ph.v2e[v]
-        edge_active = st.edge_active.at[jnp.where(es >= 0, es, 0)].set(
-            st.edge_active[jnp.where(es >= 0, es, 0)] | (es >= 0))
+        edge_active = st.edge_active.at[jnp.where(es >= 0, es, m)].set(
+            True, mode="drop")
         return st._replace(assignment=assignment, in_fringe=in_fringe,
                            edge_active=edge_active,
                            core_size=st.core_size + 1)
@@ -152,17 +169,11 @@ def _seq_grow(ph: PaddedHypergraph, state: _SeqState, part: int,
             take_candidate, (jnp.full((r,), -1, jnp.int32), jnp.int32(0), taken0),
             None, length=r)
 
-        # --- update cache for candidates (lazy) ---
-        def upd_cache(cache, v):
-            miss = (v >= 0) & (cache[jnp.where(v >= 0, v, 0)] < 0)
-            sc = jax.lax.cond(
-                miss,
-                lambda: _d_ext(ph, jnp.where(v >= 0, v, 0), st.in_fringe,
-                               st.assignment),
-                lambda: jnp.float32(0))
-            return jax.lax.cond(
-                miss, lambda c: c.at[v].set(sc), lambda c: c, cache), None
-        cache, _ = jax.lax.scan(upd_cache, st.cache, cand)
+        # --- update cache for candidates (lazy, one batched scoring) ---
+        scores_new = _d_ext_batch(ph, cand, st.in_fringe, st.assignment)
+        miss = (cand >= 0) & (st.cache[jnp.where(cand >= 0, cand, 0)] < 0)
+        cache = st.cache.at[jnp.where(miss, cand, n)].set(
+            scores_new, mode="drop")
 
         # --- fringe = top-s smallest scores of fringe ∪ candidates ---
         pool = jnp.concatenate([st.fringe, cand])                   # (s+r,)
@@ -173,22 +184,18 @@ def _seq_grow(ph: PaddedHypergraph, state: _SeqState, part: int,
         pool_sorted = pool[order]
         new_fringe = pool_sorted[:s]
         evicted = pool_sorted[s:]
-        in_fringe = st.in_fringe
-        in_fringe = in_fringe.at[jnp.where(evicted >= 0, evicted, 0)].set(
-            in_fringe[jnp.where(evicted >= 0, evicted, 0)] & (evicted < 0))
-        in_fringe = in_fringe.at[jnp.where(new_fringe >= 0, new_fringe, 0)].set(
-            in_fringe[jnp.where(new_fringe >= 0, new_fringe, 0)] | (new_fringe >= 0))
+        in_fringe = ((st.in_fringe & ~_member_mask(n, evicted))
+                     | _member_mask(n, new_fringe))
         st = st._replace(cache=cache, fringe=new_fringe, in_fringe=in_fringe)
 
         # --- random restart if fringe empty ---
         def restart(st: _SeqState) -> _SeqState:
             key, v = pick_random_unassigned(st.rand_key, st.assignment,
                                             st.in_fringe)
+            safe = jnp.where(v >= 0, v, n)
             fr = st.fringe.at[0].set(v)
-            inf = st.in_fringe.at[jnp.where(v >= 0, v, 0)].set(
-                st.in_fringe[jnp.where(v >= 0, v, 0)] | (v >= 0))
-            cache = st.cache.at[jnp.where(v >= 0, v, 0)].set(
-                jnp.where(v >= 0, jnp.float32(0), st.cache[0]))
+            inf = st.in_fringe.at[safe].set(True, mode="drop")
+            cache = st.cache.at[safe].set(jnp.float32(0), mode="drop")
             return st._replace(fringe=fr, in_fringe=inf, rand_key=key,
                                cache=cache)
         return jax.lax.cond(jnp.all(st.fringe < 0), restart, lambda x: x, st)
@@ -222,6 +229,17 @@ def _seq_grow(ph: PaddedHypergraph, state: _SeqState, part: int,
     return jax.lax.while_loop(cond, body, state)
 
 
+def _release_fringe(state: _SeqState, n: int, s: int) -> _SeqState:
+    """§III-B1 step 4: evicted fringe vertices rejoin the universe.
+
+    After this, ``in_fringe`` must be all-False — every vertex is either
+    released here or was cleared on admission (regression-tested).
+    """
+    in_fringe = state.in_fringe & ~_member_mask(n, state.fringe)
+    return state._replace(in_fringe=in_fringe,
+                          fringe=jnp.full((s,), -1, jnp.int32))
+
+
 @functools.partial(jax.jit, static_argnames=("k", "s", "r"))
 def _hype_jax_impl(ph: PaddedHypergraph, k: int, s: int, r: int,
                    seed: jax.Array) -> jax.Array:
@@ -239,12 +257,7 @@ def _hype_jax_impl(ph: PaddedHypergraph, k: int, s: int, r: int,
     for i in range(k - 1):
         target = jnp.int32(base + (1 if i < rem else 0))
         state = _seq_grow(ph, state, i, target, s, r)
-        # release fringe
-        fr = state.fringe
-        in_fringe = state.in_fringe.at[jnp.where(fr >= 0, fr, 0)].set(
-            state.in_fringe[jnp.where(fr >= 0, fr, 0)] & (fr < 0))
-        state = state._replace(in_fringe=in_fringe,
-                               fringe=jnp.full((s,), -1, jnp.int32))
+        state = _release_fringe(state, n, s)
     # last partition absorbs the remainder
     assignment = jnp.where(state.assignment < 0, k - 1, state.assignment)
     return assignment
@@ -312,12 +325,11 @@ def _parallel_impl(ph: PaddedHypergraph, k: int, c: int, seed: jax.Array):
                                                         axis=-1)[..., 0],
                          ph.e2v[eidx, j], -1)              # (k, c)
 
-        # score candidates: d_ext = |N(v) ∩ V'| (no fringe in parallel mode)
-        def score_one(v):
-            nb = _neighbor_mask(ph, jnp.where(v >= 0, v, 0))
-            sc = jnp.sum(nb & unassigned).astype(jnp.float32)
-            return jnp.where(v >= 0, sc, _INF)
-        scores = jax.vmap(jax.vmap(score_one))(cand)       # (k, c)
+        # score candidates: d_ext = |N(v) ∩ V'| (no fringe in parallel
+        # mode); one shared batched gather+segment pass over all (k, c)
+        flat = cand.reshape(-1)
+        sc_flat = batched_dext_jax(ph.v2e, ph.e2v, flat, unassigned)
+        scores = jnp.where(cand >= 0, sc_flat.reshape(cand.shape), _INF)
 
         # each partition picks its best candidate
         bi = jnp.argmin(scores, axis=1)                    # (k,)

@@ -112,6 +112,45 @@ class Hypergraph:
         nb = np.unique(np.concatenate(parts))
         return nb[nb != v]
 
+    def vertex_adjacency(self, max_expanded: int = 80_000_000):
+        """CSR of unique neighbor lists N(v) for ALL vertices, memoized.
+
+        Built in one vectorized pass: every pin (v, e) contributes all
+        pins of e, and the (v, u) pairs are deduplicated globally — total
+        intermediate work is sum over edges of |e|^2. Returns
+        ``(indptr, indices)`` (self-loops excluded), or None when the
+        expansion would exceed ``max_expanded`` pairs (pathological hub
+        edges; callers fall back to per-batch deduplication).
+        """
+        cache = self.__dict__.get("_adj_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_adj_cache", cache)
+        if max_expanded in cache:
+            return cache[max_expanded]
+        expanded = int((self.edge_sizes.astype(np.int64) ** 2).sum())
+        if expanded > max_expanded:
+            adj = None
+        else:
+            from .scoring import gather_csr_rows   # numpy-only, no cycle
+            sizes = self.edge_sizes.astype(np.int64)
+            edge_of_pin = np.repeat(np.arange(self.m, dtype=np.int64),
+                                    sizes)
+            # expand: for pin j of edge e, all pins of e
+            nbr, owner_pin = gather_csr_rows(self.e2v_indptr,
+                                             self.e2v_indices, edge_of_pin)
+            nbr = nbr.astype(np.int64)
+            owner = self.e2v_indices[owner_pin].astype(np.int64)
+            keys = np.unique(owner * np.int64(self.n) + nbr)
+            ov, nb = keys // self.n, keys % self.n
+            keep = ov != nb
+            ov, nb = ov[keep], nb[keep]
+            indptr = np.zeros(self.n + 1, dtype=np.int64)
+            indptr[1:] = np.cumsum(np.bincount(ov, minlength=self.n))
+            adj = (indptr, nb.astype(np.int32))
+        cache[max_expanded] = adj               # frozen-dataclass memo
+        return adj
+
     # ------------------------------------------------------------------ #
     # Transformations
     # ------------------------------------------------------------------ #

@@ -13,19 +13,22 @@ import numpy as np
 
 from .hypergraph import Hypergraph
 from .hype import HypeParams, hype_partition
+from .hype_batched import BatchedParams, hype_batched_partition
 from .minmax import hashing_partition, minmax_partition, random_partition
 from .shp import shp_partition
 from .multilevel import multilevel_partition
 from . import metrics
 
-METHODS = ("hype", "hype_weighted", "minmax_nb", "minmax_eb", "shp",
-           "multilevel", "random", "hashing")
+METHODS = ("hype", "hype_batched", "hype_weighted", "minmax_nb",
+           "minmax_eb", "shp", "multilevel", "random", "hashing")
 
 
 def partition(hg: Hypergraph, k: int, method: str = "hype", *,
               seed: int = 0, **kw) -> np.ndarray:
     if method == "hype":
         return hype_partition(hg, k, HypeParams(seed=seed, **kw))
+    if method == "hype_batched":
+        return hype_batched_partition(hg, k, BatchedParams(seed=seed, **kw))
     if method == "hype_weighted":
         return hype_partition(hg, k, HypeParams(seed=seed, balance="weighted", **kw))
     if method == "minmax_nb":

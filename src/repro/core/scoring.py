@@ -1,0 +1,303 @@
+"""Shared candidate-scoring machinery for the HYPE engines.
+
+The three engines (numpy ``hype.py``, jittable ``hype_jax.py``, batched
+``hype_batched.py``) all need the same primitive: the external-neighbors
+score d_ext(v, F) = |N(v) ∩ V'| for a *batch* of candidate vertices, where
+V' is the remaining vertex universe (neither assigned nor in the fringe).
+This module holds the two batched implementations they share:
+
+  * numpy side — CSR slice gathering (``gather_csr_rows``), the padded
+    (B, L) neighbor *tile* the Pallas ``hype_scores`` kernel consumes
+    (``neighbor_tile``), and a direct vectorized count
+    (``batched_dext_numpy``) for engines that score on host.
+  * JAX side — ``batched_dext_jax``: gather + sort + first-occurrence
+    segment counting over padded incidence arrays. O(W log W) per
+    candidate with W = max_deg * max_size, independent of n — this
+    replaces the old O(n) dense-membership-mask-per-candidate scoring.
+
+Tile contract (matches kernels/hype_score): rows are pre-deduplicated
+neighbor lists, -1 padded; *assigned* neighbors and the candidate itself
+are dropped on the host, so
+
+    kernel_score = #valid - #(valid ∩ fringe) = |N(v) ∩ V'|
+
+exactly the engines' "universe" d_ext. Tile shapes are bucketed (B padded
+to a fixed batch, L to ``L_BUCKETS``) so the jitted kernel retraces only a
+handful of times per process.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+# Width buckets for the (B, L) kernel tile: each distinct L traces the
+# jitted Pallas call once (~0.15 s in interpret mode), so keep the set
+# small. Rows wider than the last bucket are truncated and penalized.
+L_BUCKETS = (32, 128, 512, 2048)
+# Score added to candidates whose neighbor scan was truncated: they
+# compare as "huge neighborhood" (same convention as HypeParams.dext_cap).
+TRUNC_PENALTY = 1e12
+
+
+def gather_csr_rows(indptr: np.ndarray, indices: np.ndarray,
+                    ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenate CSR slices ``indices[indptr[i]:indptr[i+1]]`` for ``ids``.
+
+    Returns ``(values, owner)`` where ``owner[j]`` is the position in
+    ``ids`` that produced ``values[j]``. Fully vectorized (no per-row
+    Python loop).
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    starts = indptr[ids].astype(np.int64)
+    lens = (indptr[ids + 1] - indptr[ids]).astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return (np.empty(0, dtype=indices.dtype),
+                np.empty(0, dtype=np.int64))
+    out_start = np.cumsum(lens) - lens
+    pos = (np.arange(total, dtype=np.int64)
+           - np.repeat(out_start, lens) + np.repeat(starts, lens))
+    owner = np.repeat(np.arange(ids.size, dtype=np.int64), lens)
+    return indices[pos], owner
+
+
+def _bucket_width(width: int) -> int:
+    for b in L_BUCKETS:
+        if width <= b:
+            return b
+    return L_BUCKETS[-1]
+
+
+def _pin_budget(erow: np.ndarray, elen: np.ndarray, rows: int,
+                cap: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row pin budget over row-major (owner, length) edge pairs.
+
+    Keeps whole edges until a row's cumulative pin count reaches ``cap``
+    (hub protection). Returns ``(keep, truncated)``: a mask over the edge
+    pairs and the per-row truncation flags — the single source of truth
+    for the budget semantics shared by the kernel-tile and host paths.
+    """
+    excl = np.cumsum(elen) - elen
+    row_first = np.searchsorted(erow, np.arange(rows, dtype=np.int64))
+    # rows with no edges point past the end; they contribute nothing
+    row_base = np.zeros(rows, dtype=np.int64)
+    has = row_first < erow.size
+    row_base[has] = excl[row_first[has]]
+    keep = (excl - row_base[erow]) < cap
+    truncated = np.zeros(rows, dtype=bool)
+    np.logical_or.at(truncated, erow[~keep], True)
+    return keep, truncated
+
+
+def neighbor_tile_adj(adj, cands: np.ndarray, assignment: np.ndarray, *,
+                      pad_b: int | None = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """(B, L) tile from a precomputed adjacency CSR — gather only, no sort.
+
+    ``adj`` is ``Hypergraph.vertex_adjacency()`` output: rows are already
+    unique neighbor lists with self excluded, so building the tile is one
+    CSR gather + an assigned-filter + a compacting scatter. Rows with more
+    than ``L_BUCKETS[-1]`` surviving neighbors are truncated and flagged.
+    """
+    indptr, indices = adj
+    cands = np.asarray(cands, dtype=np.int64)
+    B = cands.size
+    rows_out = pad_b or max(B, 1)
+    if B == 0:
+        return (np.full((rows_out, L_BUCKETS[0]), -1, np.int32),
+                np.zeros(0, dtype=bool))
+    nbrs, prow = gather_csr_rows(indptr, indices, cands)
+    truncated = np.zeros(B, dtype=bool)
+    if nbrs.size:
+        nbrs = nbrs.astype(np.int64)
+        keep = assignment[nbrs] < 0
+        nbrs, prow = nbrs[keep], prow[keep]
+    if nbrs.size:
+        counts = np.bincount(prow, minlength=B)
+        row_start = np.cumsum(counts) - counts
+        offs = np.arange(nbrs.size, dtype=np.int64) - row_start[prow]
+        max_w = L_BUCKETS[-1]
+        truncated |= counts > max_w
+        keep2 = offs < max_w
+        prow, nbrs, offs = prow[keep2], nbrs[keep2], offs[keep2]
+        L = _bucket_width(int(counts.clip(max=max_w).max()))
+        tile = np.full((rows_out, L), -1, np.int32)
+        tile[prow, offs] = nbrs
+    else:
+        tile = np.full((rows_out, L_BUCKETS[0]), -1, np.int32)
+    return tile, truncated
+
+
+def batched_dext_adj(adj, vs: np.ndarray, in_fringe: np.ndarray,
+                     assignment: np.ndarray) -> np.ndarray:
+    """d_ext over a precomputed adjacency CSR.
+
+    Applies the same hub convention as ``neighbor_tile_adj``: vertices
+    with more than ``L_BUCKETS[-1]`` unassigned neighbors (the tile width
+    cut) get ``TRUNC_PENALTY`` added, so a candidate scores as a "huge
+    neighborhood" hub regardless of which path scored it.
+    """
+    vs = np.asarray(vs, dtype=np.int64)
+    if vs.size == 0:
+        return np.zeros(0, dtype=np.float64)
+    indptr, indices = adj
+    nbrs, prow = gather_csr_rows(indptr, indices, vs)
+    if not nbrs.size:
+        return np.zeros(vs.size, dtype=np.float64)
+    nbrs = nbrs.astype(np.int64)
+    unassigned = assignment[nbrs] < 0
+    ext = (~in_fringe[nbrs]) & unassigned
+    scores = np.bincount(prow[ext], minlength=vs.size).astype(np.float64)
+    wide = np.bincount(prow[unassigned],
+                       minlength=vs.size) > L_BUCKETS[-1]
+    scores[wide] += TRUNC_PENALTY
+    return scores
+
+
+def neighbor_tile(hg, cands: np.ndarray, assignment: np.ndarray, *,
+                  cap_pins: int = 8192, pad_b: int | None = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Build the dense (B, L) neighbor tile for a candidate batch.
+
+    For each candidate v, the row holds the *unique unassigned* neighbors
+    of v (v itself excluded), -1 padded. Per-candidate work is capped at
+    ``cap_pins`` scanned pins / ``L_BUCKETS[-1]`` unique neighbors; capped
+    rows are flagged in the returned ``truncated`` mask and must receive a
+    large score penalty (hubs compare as "huge neighborhood", which is
+    what the paper's score wants anyway).
+
+    Returns ``(tile, truncated)``: tile is int32 (pad_b or B, L) with L in
+    ``L_BUCKETS``; truncated is bool (B,).
+    """
+    cands = np.asarray(cands, dtype=np.int64)
+    B = cands.size
+    rows_out = pad_b or max(B, 1)
+    n = hg.n
+    if B == 0:
+        return (np.full((rows_out, L_BUCKETS[0]), -1, np.int32),
+                np.zeros(0, dtype=bool))
+
+    edges, erow = gather_csr_rows(hg.v2e_indptr, hg.v2e_indices, cands)
+    edges = edges.astype(np.int64)
+    truncated = np.zeros(B, dtype=bool)
+    if edges.size:
+        elen = (hg.e2v_indptr[edges + 1] - hg.e2v_indptr[edges]).astype(
+            np.int64)
+        keep, truncated = _pin_budget(erow, elen, B, cap_pins)
+        edges, erow = edges[keep], erow[keep]
+
+    pins, pidx = gather_csr_rows(hg.e2v_indptr, hg.e2v_indices, edges)
+    prow = erow[pidx] if pins.size else pidx
+    if pins.size:
+        pins = pins.astype(np.int64)
+        ok = (assignment[pins] < 0) & (pins != cands[prow])
+        pins, prow = pins[ok], prow[ok]
+
+    if pins.size:
+        key = np.unique(prow * np.int64(n) + pins)
+        prow2 = key // n
+        pins2 = key % n
+        counts = np.bincount(prow2, minlength=B)
+        row_start = np.zeros(B, dtype=np.int64)
+        row_start[1:] = np.cumsum(counts)[:-1]
+        offs = np.arange(key.size, dtype=np.int64) - row_start[prow2]
+        max_w = L_BUCKETS[-1]
+        wide = counts > max_w
+        truncated |= wide
+        keep2 = offs < max_w
+        prow2, pins2, offs = prow2[keep2], pins2[keep2], offs[keep2]
+        L = _bucket_width(int(counts.clip(max=max_w).max()))
+        tile = np.full((rows_out, L), -1, np.int32)
+        tile[prow2, offs] = pins2
+    else:
+        tile = np.full((rows_out, L_BUCKETS[0]), -1, np.int32)
+    return tile, truncated
+
+
+def batched_dext_numpy(hg, vs: np.ndarray, in_fringe: np.ndarray,
+                       assignment: np.ndarray, *,
+                       cap_pins: int | None = None,
+                       max_width: int | None = None) -> np.ndarray:
+    """Vectorized d_ext(v, F) = |N(v) ∩ V'| for a batch of vertices.
+
+    One pass over the concatenated pin lists of all candidates: gather,
+    dedup (vertex, neighbor) pairs, count external ones. Bit-identical to
+    ``hype.py``'s per-vertex d_ext in the default "universe" mode when
+    ``cap_pins`` and ``max_width`` are None. ``cap_pins`` truncates the
+    per-candidate pin scan; ``max_width`` applies the kernel tile's
+    width cut (> max_width unique unassigned neighbors). Either
+    truncation adds ``TRUNC_PENALTY`` (same convention as the tile path
+    and HypeParams.dext_cap).
+    """
+    vs = np.asarray(vs, dtype=np.int64)
+    if vs.size == 0:
+        return np.zeros(0, dtype=np.float64)
+    n = hg.n
+    edges, erow = gather_csr_rows(hg.v2e_indptr, hg.v2e_indices, vs)
+    edges = edges.astype(np.int64)
+    truncated = np.zeros(vs.size, dtype=bool)
+    if cap_pins is not None and edges.size:
+        elen = (hg.e2v_indptr[edges + 1] - hg.e2v_indptr[edges]).astype(
+            np.int64)
+        keep, truncated = _pin_budget(erow, elen, vs.size, cap_pins)
+        edges, erow = edges[keep], erow[keep]
+    pins, pidx = gather_csr_rows(hg.e2v_indptr, hg.e2v_indices, edges)
+    scores = np.zeros(vs.size, dtype=np.float64)
+    if pins.size:
+        prow = erow[pidx]
+        key = np.unique(prow * np.int64(n) + pins.astype(np.int64))
+        prow2 = key // n
+        pins2 = key % n
+        unassigned = assignment[pins2] < 0
+        ext = (~in_fringe[pins2]) & unassigned
+        scores = np.bincount(prow2[ext], minlength=vs.size).astype(
+            np.float64)
+        # v itself is a pin of each incident edge: counted once iff it is
+        # still "external" and has at least one edge.
+        deg = hg.v2e_indptr[vs + 1] - hg.v2e_indptr[vs]
+        self_ext = (~in_fringe[vs]) & (assignment[vs] < 0) & (deg > 0)
+        scores = np.maximum(scores - self_ext, 0.0)
+        if max_width is not None:
+            nonself = pins2 != vs[prow2]
+            wide = np.bincount(prow2[unassigned & nonself],
+                               minlength=vs.size) > max_width
+            scores[wide] += TRUNC_PENALTY
+    scores[truncated] += TRUNC_PENALTY
+    return scores
+
+
+# --------------------------------------------------------------------- JAX
+# (imported lazily by callers that run on device; keeping the import at
+# module level is fine — the repo is a JAX codebase — but the numpy helpers
+# above stay usable without touching the device runtime.)
+
+def batched_dext_jax(v2e, e2v, vs, ext_mask):
+    """d_ext for a batch of vertices on padded incidence arrays (jittable).
+
+    ``v2e``: (n, max_deg) int32, -1 padded; ``e2v``: (m, max_size) int32,
+    -1 padded; ``vs``: (B,) int32 vertex ids (entries < 0 allowed, score
+    undefined for them — mask at the call site); ``ext_mask``: (n,) bool,
+    True where a vertex counts as "external" (unassigned, not in fringe).
+
+    Gather all pins of all incident edges into a (B, max_deg * max_size)
+    tile, sort each row, and count first occurrences that are external —
+    a segment-style unique-count with no O(n) scatter per candidate.
+    """
+    import jax.numpy as jnp
+
+    n = v2e.shape[0]
+    safe_vs = jnp.where(vs >= 0, vs, 0)
+    es = v2e[safe_vs]                                   # (B, D)
+    ev = es >= 0
+    pins = e2v[jnp.where(ev, es, 0)]                    # (B, D, S)
+    pins = jnp.where(ev[:, :, None] & (pins >= 0), pins, n)
+    flat = pins.reshape(pins.shape[0], -1)
+    flat = jnp.where(flat == safe_vs[:, None], n, flat)   # exclude self
+    srt = jnp.sort(flat, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((srt.shape[0], 1), bool), srt[:, 1:] != srt[:, :-1]],
+        axis=1)
+    ext_pad = jnp.concatenate([ext_mask, jnp.zeros((1,), bool)])
+    counted = first & ext_pad[srt]
+    return counted.sum(axis=1).astype(jnp.float32)

@@ -1,0 +1,6 @@
+"""Pallas API compatibility shims shared by all kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -22,7 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 
 def _score_kernel(fringe_ref, nbrs_ref, out_ref):
@@ -54,7 +56,7 @@ def hype_scores_kernel(nbrs, fringe, *, tile_b: int = 256,
         ],
         out_specs=pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(fringe2d, nbrs)

@@ -18,7 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
 
 def _agg_kernel(nbrs_ref, row_ref, w_ref, out_ref, acc_ref, cnt_ref):
@@ -71,7 +73,7 @@ def neighbor_agg_kernel(x, nbrs, w, *, interpret: bool = False):
         _agg_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, F), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(nbrs, x, w)

@@ -22,8 +22,24 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch
 from repro.configs.base import ArchDef
-from repro.dist.sharding import (GNN_RULES, LM_RULES, RECSYS_RULES,
-                                 batch_axes, make_constrain, spec_for)
+
+# repro.dist is an optional subsystem (sharding rules for multi-device
+# meshes). Import lazily so unsharded (mesh=None) cell building — all the
+# smoke tests need — works in environments without it.
+try:
+    from repro.dist.sharding import (GNN_RULES, LM_RULES, RECSYS_RULES,
+                                     batch_axes, make_constrain, spec_for)
+    _HAS_DIST = True
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    _HAS_DIST = False
+    GNN_RULES = LM_RULES = RECSYS_RULES = None
+
+    def _missing_dist(*_a, **_k):
+        raise ModuleNotFoundError(
+            "repro.dist is required for sharded (mesh is not None) cells")
+
+    batch_axes = make_constrain = spec_for = _missing_dist
+
 from repro.models import gnn as gnn_mod
 from repro.models import recsys as rec_mod
 from repro.models import transformer as tf_mod

@@ -5,6 +5,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # Own process (512 placeholder devices). Results land in
 # artifacts/perf/<tag>.json and are summarized into EXPERIMENTS.md §Perf.
 #
+# NOTE: repro.dist is an optional subsystem; every import of it in this
+# module MUST stay function-local (lazy) so that importing the module —
+# which the test suite and tooling do — works without it.
+#
 #   PYTHONPATH=src python -m repro.launch.perf_experiments --exp all
 
 import argparse

@@ -1,7 +1,7 @@
 """Unit + property tests for the hypergraph structure and metrics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.hypergraph import Hypergraph
 from repro.core import metrics

@@ -1,7 +1,7 @@
 """Behavior tests for HYPE and all baseline partitioners."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.hypergraph import Hypergraph
 from repro.core.hype import HypeParams, hype_partition, hyperedge_balanced_hype

@@ -9,6 +9,8 @@ import sys
 import numpy as np
 import pytest
 
+pytest.importorskip("repro.dist", reason="repro.dist not built yet")
+
 from repro.core.hype import HypeParams, hype_partition
 from repro.dist.partitioned_gnn import (build_partitioned_graph,
                                         graph_to_hypergraph)

@@ -8,6 +8,9 @@ import tempfile
 
 import pytest
 
+# a sharded (mesh != None) dry-run needs the repro.dist sharding rules
+pytest.importorskip("repro.dist", reason="repro.dist not built yet")
+
 
 @pytest.mark.slow
 def test_dryrun_one_cell_512_devices():

@@ -2,6 +2,10 @@
 import subprocess
 import sys
 
+import pytest
+
+pytest.importorskip("repro.dist", reason="repro.dist not built yet")
+
 SCRIPT = r"""
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'

@@ -4,7 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.models.moe import MoEConfig, init_moe_layer, moe_ffn
 from repro.models.transformer import TransformerConfig
