@@ -1,0 +1,88 @@
+"""Guard the engine perf trajectory: fail CI on >25% speedup regression.
+
+    python benchmarks/compare_baseline.py BASELINE.json CURRENT.json
+
+Compares every ``speedup_vs_hype`` entry in the two files' ``meta``
+blocks (``meta["speedups"]``, written by ``bench_engine_scaling``). A
+row present in both that lost more than ``MAX_REGRESSION`` of its
+baseline speedup fails the check; rows that only exist on one side are
+reported but never fail (engines come and go between PRs). Quality is
+guarded too: a row whose ``km1_ratio_vs_hype`` newly exceeds the 1.10
+acceptance bound fails.
+
+Pure stdlib — runnable before dependencies are installed.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MAX_REGRESSION = 0.25      # fraction of baseline speedup a row may lose
+KM1_BOUND = 1.10           # quality acceptance bound (ISSUE 2)
+
+
+def load_speedups(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("meta", {}).get("speedups", {})
+
+
+def compare(base: dict, cur: dict) -> int:
+    failures = []
+    if not set(base) & set(cur):
+        # every baseline row vanished: a rename or a broken meta writer
+        # would otherwise make the gate silently vacuous
+        print("FAIL: no speedup row of the baseline exists in the "
+              "current run — the regression gate compared nothing "
+              f"(baseline keys: {sorted(base)}; current: {sorted(cur)})")
+        return 1
+    for key in sorted(set(base) | set(cur)):
+        if key not in cur:
+            print(f"  - {key}: only in baseline (row removed)")
+            continue
+        if key not in base:
+            print(f"  + {key}: new row "
+                  f"(speedup {cur[key]['speedup_vs_hype']}x)")
+            continue
+        b = float(base[key]["speedup_vs_hype"])
+        c = float(cur[key]["speedup_vs_hype"])
+        ratio = c / b if b > 0 else 1.0
+        status = "ok"
+        if ratio < 1.0 - MAX_REGRESSION:
+            status = "REGRESSION"
+            failures.append(
+                f"{key}: speedup {b}x -> {c}x "
+                f"({(1.0 - ratio) * 100:.0f}% lost, limit "
+                f"{MAX_REGRESSION * 100:.0f}%)")
+        km_b = float(base[key].get("km1_ratio_vs_hype", 0.0))
+        km_c = float(cur[key].get("km1_ratio_vs_hype", 0.0))
+        if km_c > KM1_BOUND >= km_b:
+            status = "QUALITY"
+            failures.append(
+                f"{key}: km1_ratio_vs_hype {km_b} -> {km_c} "
+                f"(crossed the {KM1_BOUND} bound)")
+        print(f"    {key}: {b}x -> {c}x  km1 {km_b} -> {km_c}  [{status}]")
+    if failures:
+        print("\nFAIL: perf trajectory regressed:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nOK: no speedup regression beyond "
+          f"{MAX_REGRESSION * 100:.0f}% and no quality-bound crossing")
+    return 0
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    base = load_speedups(argv[1])
+    cur = load_speedups(argv[2])
+    if not base:
+        print("baseline has no meta.speedups — nothing to compare; OK")
+        return 0
+    return compare(base, cur)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

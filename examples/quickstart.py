@@ -24,19 +24,24 @@ def main():
 
     k = 32
     print(f"\npartitioning into k={k} parts:\n")
-    print(f"{'method':<14}{'(k-1) cut':>12}{'imbalance':>12}{'runtime':>10}")
+    print(f"{'method':<16}{'(k-1) cut':>12}{'imbalance':>12}{'runtime':>10}")
     for method in ("random", "minmax_eb", "minmax_nb", "hype",
-                   "hype_batched"):
+                   "hype_batched", "hype_superstep"):
         t0 = time.perf_counter()
         a = partition(hg, k, method, seed=0)
         dt = time.perf_counter() - t0
         km1 = metrics.k_minus_1(hg, a)
         imb = metrics.vertex_imbalance(a, k)
-        print(f"{method:<14}{km1:>12,}{imb:>12.3f}{dt:>9.2f}s")
+        print(f"{method:<16}{km1:>12,}{imb:>12.3f}{dt:>9.2f}s")
 
     print("\nHYPE: lowest cut at perfect balance — the paper's claim.")
     print("hype_batched: same quality regime, kernel-batched scoring "
           "(see DESIGN.md §4).")
+    print("hype_superstep: the engine knob for large k — all 32 parts "
+          "grow concurrently\n  against a device-resident graph image, "
+          "one fused score+select call per superstep\n  (DESIGN.md "
+          "§4b); tune with t / rows / pool_cap, e.g.\n  "
+          "partition(hg, k, 'hype_superstep', t=16, rows=8).")
 
 
 if __name__ == "__main__":

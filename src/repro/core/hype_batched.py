@@ -61,6 +61,13 @@ class BatchedStats:
     edges_scanned: int = 0     # pins scanned during candidate selection
     random_restarts: int = 0
     steps: int = 0
+    # superstep-engine counters (zero for the classic batched path):
+    supersteps: int = 0             # fused device calls
+    device_image_bytes: int = 0     # one-time CSR + assignment + cache
+    #                                 upload at partition() start
+    host_to_device_bytes: int = 0   # per-call id/bias buffers — the whole
+    #                                 steady-state H2D traffic
+    cache_invalidations: int = 0    # cached scores decremented by admission
 
 
 class _BatchedState:
@@ -155,22 +162,28 @@ class _BatchedState:
                 fresh[sizes == sz])
 
     # ------------------------------------------------------------------ #
-    def draw_candidates(self, need: int) -> np.ndarray:
+    def draw_candidates(self, need: int,
+                        buckets: Optional[dict] = None) -> np.ndarray:
         """Up to ``need`` distinct universe vertices from smallest edges.
 
         One vectorized pass: pull edges smallest-size-first under a pin
         budget, scan all their pins at once, retire dead edges (no
         unassigned pin left — forever), requeue the still-live ones at the
         bucket fronts so they are rescanned first next time (the heap's
-        requeue, without the heap).
+        requeue, without the heap). ``buckets`` selects which active-edge
+        queues to draw from (the superstep engine keeps one dict per
+        concurrently growing phase); default is the single shared dict.
         """
+        if buckets is None:
+            buckets = self.buckets
         if need <= 0:
             return np.empty(0, dtype=np.int64)
         budget = max(4 * need, 512)
         batches: list = []
+        keys: list = []     # (source bucket key, count) pairs, for requeues
         pulled = 0
-        for sz in sorted(self.buckets.keys()):
-            q = self.buckets[sz]
+        for sz in sorted(buckets.keys()):
+            q = buckets[sz]
             while q and pulled < budget:
                 arr = q.popleft()
                 n_take = (budget - pulled + sz - 1) // max(sz, 1)
@@ -178,9 +191,10 @@ class _BatchedState:
                     q.appendleft(arr[n_take:])
                     arr = arr[:n_take]
                 batches.append(arr)
+                keys.append((sz, arr.size))
                 pulled += arr.size * max(sz, 1)
             if not q:
-                del self.buckets[sz]
+                del buckets[sz]
             if pulled >= budget:
                 break
         if not batches:
@@ -196,11 +210,15 @@ class _BatchedState:
             self.edge_dead[edges[~live]] = True     # dead forever
         live_edges = edges[live]
         if live_edges.size:
-            lsz = self.edge_sizes[live_edges]
-            for s in np.unique(lsz):
-                self.buckets.setdefault(
+            # requeue under the key each edge was drawn from, so the
+            # caller's key scheme (exact sizes for the classic engine,
+            # power-of-two classes for the superstep engine) is preserved
+            lkey = np.repeat([k for k, _ in keys],
+                             [c for _, c in keys])[live]
+            for s in np.unique(lkey):
+                buckets.setdefault(
                     int(s), collections.deque()).appendleft(
-                        live_edges[lsz == s])
+                        live_edges[lkey == s])
         fresh = unassigned & ~self.in_pool[pins]
         cand = pins[fresh]
         if cand.size:
@@ -321,6 +339,346 @@ def _grow_partition(st: _BatchedState, phase: int, target: int) -> None:
     # release fringe + pool back to the universe (§III-B1 step 4)
     st.set_fringe(np.empty(0, dtype=np.int64))
     st.in_pool[pool] = False
+
+
+# --------------------------------------------------------------------- #
+# Superstep engine: device-resident, multi-phase, cross-phase cache.
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class SuperstepParams(BatchedParams):
+    """Knobs for the superstep engine (DESIGN.md §4).
+
+    Inherits the batched knobs; ``t`` (admissions per phase per
+    superstep), ``s``, ``pool_cap`` and ``seed`` keep their meaning.
+    ``b``/``kernel_min``/``refill_lo`` are unused — refills are sized by
+    ``rows`` and every score goes through the fused device call.
+    """
+    # fresh candidate rows per phase per superstep; None = max(8, t) so
+    # refills keep up with the admission drain at any t
+    rows: Optional[int] = None
+
+
+class _SuperstepState(_BatchedState):
+    """Adds the device-resident graph image and per-phase growth state.
+
+    The host keeps only ids and flags (assignment mirror, pool id lists,
+    per-phase active-edge buckets, a has-been-scored bitmask); every
+    *score* lives in the device cache and is maintained exactly by the
+    decrement rule in ``scoring.superstep_device`` — no per-phase wipe.
+    """
+
+    def __init__(self, hg: Hypergraph, k: int, p: SuperstepParams):
+        super().__init__(hg, k, p)
+        self.dev = hg.device_adjacency()
+        if self.dev is None:       # hub-expansion guard tripped on host
+            return
+        import jax
+        import jax.numpy as jnp
+
+        n, m = hg.n, hg.m
+        self.interpret = jax.default_backend() != "tpu"
+        self.dev_assign = jnp.full((n,), -1, jnp.int32)
+        self.dev_cache = jnp.full((n,), -1.0, jnp.float32)
+        self.cache_scored = np.zeros(n, dtype=bool)
+        self.pools = [np.empty(0, dtype=np.int64) for _ in range(k)]
+        self.phase_buckets: list = [dict() for _ in range(k)]
+        self.edge_queued = np.zeros((k, m), dtype=bool)
+        self.delta_ids: list = []
+        self.delta_vals: list = []
+        deg = np.diff(self.adj[0])
+        self.deg = deg
+        # One gather-width per run: every distinct shape retraces the
+        # whole jitted superstep program (~0.5-1s in interpret mode), and
+        # padding a gather is far cheaper than a retrace. The tile width
+        # is the bucket of the 99.5th-percentile degree — the handful of
+        # rows wider than that are truncated and carry the hub penalty
+        # (they'd compare as "huge neighborhood" anyway). The dirty-pair
+        # pad is pre-sized from the expected per-superstep dirty rate and
+        # only ratchets up (monotone -> at most a couple of traces).
+        self.tile_l = scoring._bucket_width(int(min(
+            np.percentile(deg, 99.5) if deg.size else 1,
+            scoring.L_BUCKETS[-1])))
+        mean_deg = self.adj[1].size / max(hg.n, 1)
+        expect = min(hg.n, max(256, int(2 * k * p.t * mean_deg)))
+        self._dirty_ratchet = 1 << int(np.ceil(np.log2(expect + 1)))
+        self.stats.device_image_bytes = int(
+            self.dev[0].nbytes + self.dev[1].nbytes
+            + self.dev_assign.nbytes + self.dev_cache.nbytes)
+
+    # ------------------------------------------------------------------ #
+    def assign_now(self, vs: np.ndarray, phase: int) -> None:
+        """Assign ``vs`` to ``phase``; queue the device delta + dirtying."""
+        vs = np.asarray(vs, dtype=np.int64)
+        self.assignment[vs] = phase
+        self.in_pool[vs] = False
+        self.delta_ids.append(vs)
+        self.delta_vals.append(np.full(vs.size, phase, dtype=np.int32))
+
+    def activate_phase(self, vs: np.ndarray, phase: int) -> None:
+        """Queue the edges incident to newly admitted vertices of a phase."""
+        self.activate_many(np.asarray(vs, dtype=np.int64),
+                           np.full(len(vs), phase, dtype=np.int64))
+
+    def activate_many(self, vs: np.ndarray, phases: np.ndarray) -> None:
+        """Queue incident edges for a whole superstep's admissions at once.
+
+        ``vs``/``phases`` are parallel arrays; one CSR gather + one
+        lexsort covers every (phase, edge) activation of the superstep
+        instead of a per-phase python pass.
+        """
+        edges, owner = scoring.gather_csr_rows(
+            self.hg.v2e_indptr, self.hg.v2e_indices, vs)
+        if edges.size == 0:
+            return
+        edges = edges.astype(np.int64)
+        ph = phases[owner]
+        key = np.unique(ph * np.int64(self.hg.m) + edges)
+        ph, edges = key // self.hg.m, key % self.hg.m
+        live = ~self.edge_queued[ph, edges] & ~self.edge_dead[edges]
+        ph, edges = ph[live], edges[live]
+        if edges.size == 0:
+            return
+        self.edge_queued[ph, edges] = True
+        # power-of-two size classes instead of exact sizes: smallest-first
+        # drawing is a heuristic, and ~12 classes keep the number of
+        # (phase, class) groups — hence python-level queue churn — small.
+        sizes = self.edge_sizes[edges]
+        cls = np.where(
+            sizes <= 1, np.int64(1),
+            np.int64(1) << np.ceil(
+                np.log2(np.maximum(sizes, 2))).astype(np.int64))
+        order = np.lexsort((cls, ph))
+        ph, edges, cls = ph[order], edges[order], cls[order]
+        cuts = np.flatnonzero((np.diff(ph) != 0)
+                              | (np.diff(cls) != 0)) + 1
+        starts = np.concatenate([[0], cuts])
+        for start, grp in zip(starts, np.split(edges, cuts)):
+            self.phase_buckets[int(ph[start])].setdefault(
+                int(cls[start]), collections.deque()).append(grp)
+
+    def take_delta(self, cap: int):
+        """Drain up to ``cap`` queued (id, phase) assignment pairs."""
+        if not self.delta_ids:
+            return (np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.int32))
+        ids = np.concatenate(self.delta_ids)
+        vals = np.concatenate(self.delta_vals)
+        if ids.size <= cap:
+            self.delta_ids, self.delta_vals = [], []
+            return ids, vals
+        self.delta_ids = [ids[cap:]]
+        self.delta_vals = [vals[cap:]]
+        return ids[:cap], vals[:cap]
+
+    def superstep_call(self, fresh, bias, pool_arr, fringe, delta_cap,
+                       select_k):
+        """One fused device call; updates the device image in place."""
+        d_ids, d_vals = self.take_delta(delta_cap)
+        delta = np.full(delta_cap, -1, dtype=np.int32)
+        vals = np.zeros(delta_cap, dtype=np.int32)
+        delta[:d_ids.size] = d_ids
+        vals[:d_ids.size] = d_vals
+        # pre-aggregate the dirtied-neighbor multiset: one CSR gather +
+        # bincount, shipped as (unique id, count) pairs padded to a
+        # power-of-two bucket (bounded retraces, O(unique) device scatter)
+        nbrs, _ = scoring.gather_csr_rows(self.adj[0], self.adj[1], d_ids)
+        if nbrs.size:
+            counts = np.bincount(nbrs.astype(np.int64),
+                                 minlength=0)
+            uniq = np.flatnonzero(counts)
+            self.stats.cache_invalidations += int(uniq.size)
+        else:
+            uniq = np.empty(0, dtype=np.int64)
+            counts = np.empty(0, dtype=np.int64)
+        cap = max(self._dirty_ratchet,
+                  1 << int(np.ceil(np.log2(max(uniq.size, 1)))))
+        self._dirty_ratchet = cap
+        dirty = np.full(cap, -1, dtype=np.int32)
+        dcnt = np.zeros(cap, dtype=np.float32)
+        dirty[:uniq.size] = uniq
+        dcnt[:uniq.size] = counts[uniq]
+        tile_l = self.tile_l
+        self.stats.host_to_device_bytes += (
+            fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
+            + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes)
+        self.stats.supersteps += 1
+        self.stats.kernel_calls += 1
+        self.dev_assign, self.dev_cache, sel_idx, sel_val = \
+            scoring.superstep_device(
+                self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
+                delta, vals, dirty, dcnt, fresh, bias, pool_arr, fringe,
+                tile_l=tile_l, select_k=select_k,
+                interpret=self.interpret)
+        return np.asarray(sel_idx), np.asarray(sel_val)
+
+
+def _run_superstep(hg: Hypergraph, k: int, p: SuperstepParams):
+    """Grow all ``k`` partitions concurrently; returns (assignment, state).
+
+    Each *superstep* is one fused device call that scores the stacked
+    fresh-candidate tiles of every growing phase and selects each phase's
+    ``t`` admissions (paper §VI k-way growth on the fast engine).
+    """
+    from repro.kernels.hype_score.kernel import SELECT_PAD
+
+    st = _SuperstepState(hg, k, p)
+    if st.dev is None:
+        return None, None                       # caller falls back
+    n = hg.n
+    base, rem = divmod(n, k)
+    targets = base + (np.arange(k) < rem).astype(np.int64)
+    acc = np.zeros(k, dtype=np.int64)
+    R, P, t = p.rows, p.pool_cap, p.t
+    delta_cap = max(2 * k * t, k)
+    fringe = np.full((k, 1), -1, dtype=np.int32)   # fringe-free scoring
+
+    # seed every phase with one random vertex (paper §III-B1 step 1)
+    seeds = st.random_unassigned(int((targets > 0).sum()))
+    gi = 0
+    for g in range(k):
+        if targets[g] == 0 or gi >= seeds.size:
+            continue
+        v = seeds[gi:gi + 1]
+        gi += 1
+        st.assign_now(v, g)
+        st.activate_phase(v, g)
+        acc[g] += 1
+
+    while True:
+        active = np.flatnonzero(acc < targets)
+        if active.size == 0:
+            break
+        progress = 0
+        fresh = np.full((k, R), -1, dtype=np.int32)
+        bias = np.full((k, R), np.inf, dtype=np.float32)
+        pool_arr = np.full((k, P), -1, dtype=np.int32)
+        fresh_snap: list = [None] * k
+        pool_snap: list = [None] * k
+        # rotate the draw order so no phase always gets first pick
+        rot = st.stats.supersteps % active.size
+        for g in np.concatenate([active[rot:], active[:rot]]):
+            ids = st.pools[g]
+            need = min(R, P - ids.size)
+            drawn = st.draw_candidates(need, st.phase_buckets[g]) \
+                if need > 0 else np.empty(0, dtype=np.int64)
+            miss = np.empty(0, dtype=np.int64)
+            if drawn.size:
+                st.in_pool[drawn] = True
+                scored = st.cache_scored[drawn]
+                hits, miss = drawn[scored], drawn[~scored]
+                if hits.size:       # cross-phase reuse: already cached
+                    st.stats.cache_hits += int(hits.size)
+                    ids = np.concatenate([ids, hits])
+                    st.pools[g] = ids
+            if ids.size == 0 and miss.size == 0:
+                # shattered remainder: seed fresh growth points directly
+                vs = st.random_unassigned(
+                    min(t, int(targets[g] - acc[g])))
+                if vs.size:
+                    st.stats.random_restarts += 1
+                    st.assign_now(vs, g)
+                    st.activate_phase(vs, g)
+                    acc[g] += vs.size
+                    progress += int(vs.size)
+                continue
+            fresh[g, :miss.size] = miss
+            bias[g, :miss.size] = np.where(
+                st.deg[miss] > st.tile_l, scoring.TRUNC_PENALTY, 0.0)
+            pool_arr[g, :ids.size] = ids
+            fresh_snap[g] = miss
+            pool_snap[g] = ids
+            st.stats.kernel_rows += int(miss.size)
+
+        if any(f is not None for f in fresh_snap):
+            sel_idx, sel_val = st.superstep_call(
+                fresh, bias, pool_arr, fringe, delta_cap, select_k=t)
+            adm_vs: list = []
+            adm_ph: list = []
+            for g in active:
+                if fresh_snap[g] is None:
+                    continue
+                fr, ids = fresh_snap[g], pool_snap[g]
+                st.cache_scored[fr] = True
+                admit = []
+                remaining = int(targets[g] - acc[g])
+                for j in range(t):
+                    if len(admit) >= remaining:
+                        break
+                    if sel_val[g, j] >= SELECT_PAD:
+                        break       # sel_val ascending: nothing left
+                    ii = int(sel_idx[g, j])
+                    admit.append(fr[ii] if ii < R else ids[ii - R])
+                merged = np.concatenate([ids, fr])
+                if admit:
+                    admit = np.asarray(admit, dtype=np.int64)
+                    st.assign_now(admit, g)
+                    # pool/fresh ids are exclusive to this phase, so the
+                    # admitted ones are exactly the newly assigned ones
+                    merged = merged[st.assignment[merged] < 0]
+                    adm_vs.append(admit)
+                    adm_ph.append(np.full(admit.size, g, dtype=np.int64))
+                    acc[g] += admit.size
+                    progress += int(admit.size)
+                st.pools[g] = merged
+                if acc[g] >= targets[g]:        # phase done: release pool
+                    st.in_pool[st.pools[g]] = False
+                    st.pools[g] = np.empty(0, dtype=np.int64)
+            if adm_vs:      # one vectorized edge-activation pass
+                st.activate_many(np.concatenate(adm_vs),
+                                 np.concatenate(adm_ph))
+        if progress == 0:
+            break       # starved: remaining vertices sit in other pools
+
+    # safety net: balance-fill any stragglers into underfull phases
+    rem_v = np.flatnonzero(st.assignment < 0)
+    if rem_v.size:
+        deficit = np.maximum(targets - acc, 0)
+        fill = np.repeat(np.arange(k), deficit)[:rem_v.size]
+        for g in np.unique(fill):
+            st.assign_now(rem_v[fill == g], g)
+    st.in_pool[:] = False
+    # the device image syncs at superstep boundaries only; the final
+    # admissions' delta dies with the state (the host assignment is
+    # authoritative). Tests needing device/host parity flush explicitly
+    # through superstep_call.
+    st.delta_ids, st.delta_vals = [], []
+    return st.assignment, st
+
+
+def hype_superstep_partition(hg: Hypergraph, k: int,
+                             params: Optional[SuperstepParams] = None,
+                             return_stats: bool = False):
+    """Partition ``hg`` with the device-resident superstep engine.
+
+    Same contract as ``hype_batched_partition`` (complete int32
+    assignment, max - min <= 1 vertex balance) but all ``k`` partitions
+    grow *concurrently*: every superstep stacks the fresh candidates of
+    all growing phases into one fused ``hype_score_select`` device call
+    against a graph image (CSR + assignment + score cache) that was
+    uploaded once. Scores survive across refills and phases — admissions
+    *decrement* their neighbors' cached scores instead of wiping the
+    cache. Falls back to ``hype_batched_partition`` when the adjacency
+    guard trips (pathological hub expansion).
+    """
+    if params is None:
+        params = SuperstepParams()
+    if params.rows is None:
+        params = dataclasses.replace(params, rows=max(8, params.t))
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    if params.t < 1 or params.rows < 1 or params.pool_cap < 1:
+        raise ValueError("rows, pool_cap, t must all be >= 1")
+    if k == 1:
+        out = np.zeros(hg.n, dtype=np.int32)
+        return (out, BatchedStats()) if return_stats else out
+    assignment, st = _run_superstep(hg, k, params)
+    if assignment is None:
+        return hype_batched_partition(hg, k, params, return_stats)
+    assert (assignment >= 0).all()
+    if return_stats:
+        return assignment, st.stats
+    return assignment
 
 
 def hype_batched_partition(hg: Hypergraph, k: int,

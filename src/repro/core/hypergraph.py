@@ -151,6 +151,32 @@ class Hypergraph:
         cache[max_expanded] = adj               # frozen-dataclass memo
         return adj
 
+    def device_adjacency(self, max_expanded: int = 80_000_000):
+        """``vertex_adjacency`` uploaded to the device once, memoized.
+
+        Returns ``(indptr_dev, indices_dev)`` jax arrays (int32 where ids
+        fit, otherwise int64) or None when the host-side expansion guard
+        trips. The superstep engine gathers its candidate tiles from this
+        image so refills never ship a freshly built (B, L) tile across
+        the host boundary — only candidate *ids* move.
+        """
+        cache = self.__dict__.get("_device_adj_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_device_adj_cache", cache)
+        if max_expanded in cache:
+            return cache[max_expanded]
+        adj = self.vertex_adjacency(max_expanded)
+        if adj is None:
+            dev = None
+        else:
+            import jax.numpy as jnp
+            indptr, indices = adj
+            ptr_t = jnp.int32 if indices.size < 2**31 else jnp.int64
+            dev = (jnp.asarray(indptr, ptr_t), jnp.asarray(indices))
+        cache[max_expanded] = dev
+        return dev
+
     # ------------------------------------------------------------------ #
     # Transformations
     # ------------------------------------------------------------------ #

@@ -7,20 +7,23 @@ an assignment produced here, so partitioners are interchangeable.
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
 from .hypergraph import Hypergraph
 from .hype import HypeParams, hype_partition
-from .hype_batched import BatchedParams, hype_batched_partition
+from .hype_batched import (BatchedParams, SuperstepParams,
+                           hype_batched_partition,
+                           hype_superstep_partition)
 from .minmax import hashing_partition, minmax_partition, random_partition
 from .shp import shp_partition
 from .multilevel import multilevel_partition
 from . import metrics
 
-METHODS = ("hype", "hype_batched", "hype_weighted", "minmax_nb",
-           "minmax_eb", "shp", "multilevel", "random", "hashing")
+METHODS = ("hype", "hype_batched", "hype_superstep", "hype_weighted",
+           "minmax_nb", "minmax_eb", "shp", "multilevel", "random",
+           "hashing")
 
 
 def partition(hg: Hypergraph, k: int, method: str = "hype", *,
@@ -29,6 +32,9 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
         return hype_partition(hg, k, HypeParams(seed=seed, **kw))
     if method == "hype_batched":
         return hype_batched_partition(hg, k, BatchedParams(seed=seed, **kw))
+    if method == "hype_superstep":
+        return hype_superstep_partition(
+            hg, k, SuperstepParams(seed=seed, **kw))
     if method == "hype_weighted":
         return hype_partition(hg, k, HypeParams(seed=seed, balance="weighted", **kw))
     if method == "minmax_nb":
@@ -47,7 +53,15 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
 
 
 def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
-                         seed: int = 0, **kw) -> dict:
+                         seed: int = 0,
+                         **kw) -> Tuple[dict, np.ndarray]:
+    """Partition and measure: returns ``(report, assignment)``.
+
+    ``report`` is ``metrics.all_metrics`` plus ``method``/``k``/
+    ``runtime_s``; ``assignment`` is the int32 array ``partition``
+    produced (the pair, not just the dict — callers feed the assignment
+    to placement code and the report to dashboards).
+    """
     t0 = time.perf_counter()
     assignment = partition(hg, k, method, seed=seed, **kw)
     dt = time.perf_counter() - t0

@@ -267,6 +267,88 @@ def batched_dext_numpy(hg, vs: np.ndarray, in_fringe: np.ndarray,
     return scores
 
 
+# ------------------------------------------------------------- superstep
+# Device-resident superstep program: one jitted call performs the whole
+# per-superstep device work of the superstep engine (hype_batched.py) —
+# apply the host's assignment delta, decrement-invalidate the cached
+# scores of the delta's neighbors, gather the fresh candidate tiles from
+# the device CSR, run the fused score+select kernel, and write the fresh
+# scores back into the device cache. Only ids cross the host boundary.
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _superstep_program():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hype_score.ops import hype_score_select
+
+    @_functools.partial(
+        jax.jit, static_argnames=("tile_l", "select_k", "interpret"))
+    def step(indptr, indices, assign, cache, delta_ids, delta_vals,
+             dirty_ids, dirty_counts, fresh, bias, pool, fringe, *,
+             tile_l, select_k, interpret):
+        n = assign.shape[0]
+        # 1. apply the host's assignment delta (admissions + seeds)
+        assign = assign.at[jnp.where(delta_ids >= 0, delta_ids, n)].set(
+            delta_vals, mode="drop")
+        # 2. decrement-invalidate: every neighbor of a newly assigned
+        #    vertex has exactly one fewer unassigned neighbor, so the
+        #    cached score is updated in place — it stays *exact* instead
+        #    of being wiped. The host pre-aggregates the neighbor
+        #    multiset into (unique id, count) pairs so the scatter is
+        #    O(unique dirtied), not O(sum of degrees).
+        cache = cache.at[jnp.where(dirty_ids >= 0, dirty_ids, n)].add(
+            -dirty_counts, mode="drop")
+        # 3. gather fresh candidate tiles from the device CSR; assigned
+        #    neighbors are masked to -1 in place (no compaction needed —
+        #    the kernel counts valid entries, not positions).
+        G, R = fresh.shape
+        flat = fresh.reshape(-1)
+        fsafe = jnp.where(flat >= 0, flat, 0)
+        fstart = indptr[fsafe]
+        fdeg = indptr[fsafe + 1] - fstart
+        col = jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0], tile_l),
+                                       1)
+        fvalid = (col < fdeg[:, None]) & (flat >= 0)[:, None]
+        nbr = indices[jnp.where(fvalid, fstart[:, None] + col, 0)]
+        unassigned = assign[jnp.where(fvalid, nbr, 0)] < 0
+        tile = jnp.where(fvalid & unassigned, nbr, -1).astype(jnp.int32)
+        # 4. held pool scores ride along from the device cache
+        prev = jnp.where(pool >= 0,
+                         cache[jnp.where(pool >= 0, pool, 0)],
+                         jnp.inf).astype(jnp.float32)
+        # 5. fused score + per-phase top-select
+        scores, sel_idx, sel_val = hype_score_select(
+            tile.reshape(G, R, tile_l), fringe, bias, prev,
+            select_k=select_k, interpret=interpret)
+        # 6. fresh scores enter the cache (pad rows dropped)
+        cache = cache.at[jnp.where(flat >= 0, flat, n)].set(
+            scores.reshape(-1), mode="drop")
+        return assign, cache, sel_idx, sel_val
+
+    return step
+
+
+def superstep_device(indptr, indices, assign, cache, delta_ids, delta_vals,
+                     dirty_ids, dirty_counts, fresh, bias, pool, fringe,
+                     *, tile_l: int, select_k: int, interpret: bool):
+    """Run one device superstep; see ``_superstep_program`` for the plan.
+
+    All array arguments are device-resident jax arrays except the small
+    per-superstep id buffers (delta, dirty, fresh, bias, pool, fringe),
+    which are the only host->device traffic. ``tile_l`` is a static
+    gather width (bucketed by the caller so the program retraces only a
+    handful of times); ``select_k`` is the per-phase admission count.
+    Returns ``(assign', cache', sel_idx, sel_val)``.
+    """
+    return _superstep_program()(
+        indptr, indices, assign, cache, delta_ids, delta_vals, dirty_ids,
+        dirty_counts, fresh, bias, pool, fringe, tile_l=tile_l,
+        select_k=select_k, interpret=interpret)
+
+
 # --------------------------------------------------------------------- JAX
 # (imported lazily by callers that run on device; keeping the import at
 # module level is fine — the repo is a JAX codebase — but the numpy helpers

@@ -1,1 +1,1 @@
-from .ops import hype_scores
+from .ops import hype_score_select, hype_scores

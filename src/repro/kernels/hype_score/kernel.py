@@ -61,3 +61,114 @@ def hype_scores_kernel(nbrs, fringe, *, tile_b: int = 256,
         interpret=interpret,
     )(fringe2d, nbrs)
     return out[:, 0]
+
+
+# --------------------------------------------------------------------- #
+# Fused score + select: the superstep engine's one-call-per-step kernel.
+# --------------------------------------------------------------------- #
+
+# Scores at or above this value are "not a candidate" (padded rows /
+# empty pool slots). Finite so that exclusion during the running-argmin
+# loop (set to +inf) stays distinguishable from a pad; any real score,
+# including the 1e12 hub penalty, sits far below it.
+SELECT_PAD = 1e30
+
+
+def _score_select_kernel(fringe_ref, prev_ref, bias_ref, nbrs_ref,
+                         score_ref, idx_ref, val_ref, *, select_k: int,
+                         rows: int):
+    """A *group* of growth phases per grid step: score + top-k select.
+
+    The block stacks ``TG`` phases of ``rows`` fresh-candidate rows each.
+    Scoring is exactly ``_score_kernel`` (fringe membership subtracted on
+    the VPU, per-phase fringe rows) plus the per-row ``bias`` (hub
+    penalty / +inf row pad). Selection then runs a running-argmin
+    reduction in VMEM over each phase's scored rows *concatenated with*
+    its held pool scores — vectorized across the TG phases of the block —
+    so one kernel call performs refill-scoring plus the multi-admission
+    selection the host used to argsort for. Selected indices < rows refer
+    to fresh tile rows, >= rows to pool slots.
+    """
+    nbrs = nbrs_ref[...]                      # (TG * rows, L)
+    fringe = fringe_ref[...]                  # (TG, s)
+    prev = prev_ref[...]                      # (TG, P)
+    tg = fringe.shape[0]
+    valid = nbrs >= 0
+    member = jnp.zeros_like(valid)
+    for j in range(fringe.shape[-1]):         # s is a small static constant
+        fj = jnp.repeat(fringe[:, j], rows)[:, None]   # phase -> its rows
+        member = jnp.logical_or(member, nbrs == fj)
+    member = jnp.logical_and(member, valid)
+    score = (valid.sum(axis=1) - member.sum(axis=1)).astype(jnp.float32)
+    score = score + bias_ref[...][:, 0]
+    score_ref[...] = score[:, None]
+
+    # merge fresh scores with the held pool scores; clamp +inf pads to the
+    # finite SELECT_PAD so the exclusion sentinel (+inf) stays unique.
+    merged = jnp.concatenate([score.reshape(tg, rows), prev], axis=1)
+    merged = jnp.minimum(merged, jnp.float32(SELECT_PAD))
+    n_slots = merged.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, merged.shape, 1)
+    sel_i, sel_v = [], []
+    for _ in range(select_k):                 # select_k is small and static
+        mv = jnp.min(merged, axis=1, keepdims=True)          # (TG, 1)
+        am = jnp.min(jnp.where(merged == mv, pos, n_slots), axis=1)
+        sel_i.append(am)
+        sel_v.append(mv[:, 0])
+        merged = jnp.where(pos == am[:, None], jnp.float32(jnp.inf),
+                           merged)
+    idx_ref[...] = jnp.stack(sel_i, axis=1).astype(jnp.int32)
+    val_ref[...] = jnp.stack(sel_v, axis=1).astype(jnp.float32)
+
+
+def hype_score_select_kernel(nbrs, fringe, bias, prev, *, select_k: int,
+                             tile_g: int = 8, interpret: bool = False):
+    """Fused scoring + per-phase top-``select_k`` selection.
+
+    nbrs:   (G*R, L) int32, -1 padded — G stacked phase tiles of R rows.
+    fringe: (G, s)   int32, -1 padded — one fringe row per phase.
+    bias:   (G*R,)   float32 — additive per-row bias (TRUNC_PENALTY for
+            truncated hubs, +inf for absent/pad rows).
+    prev:   (G, P)   float32 — held pool scores per phase (+inf = empty).
+
+    ``tile_g`` phases are processed per grid step (selection vectorized
+    across them); G must be a multiple of it — the jitted ``ops`` wrapper
+    pads. Returns ``(scores, sel_idx, sel_val)``: scores (G*R,) f32
+    (fresh rows, bias included); sel_idx (G, select_k) int32 into the
+    phase's [fresh rows | pool slots] concatenation; sel_val
+    (G, select_k) f32 (>= SELECT_PAD means "nothing there").
+    """
+    G, s = fringe.shape
+    B, L = nbrs.shape
+    assert B % G == 0, "stacked tile rows must divide evenly into phases"
+    R = B // G
+    P = prev.shape[1]
+    assert prev.shape[0] == G and bias.shape == (B,)
+    assert 1 <= select_k <= R + P
+    tile_g = min(tile_g, G)
+    assert G % tile_g == 0, "pad the phase count to a tile_g multiple"
+    scores, idx, val = pl.pallas_call(
+        functools.partial(_score_select_kernel, select_k=select_k,
+                          rows=R),
+        grid=(G // tile_g,),
+        in_specs=[
+            pl.BlockSpec((tile_g, s), lambda g: (g, 0)),
+            pl.BlockSpec((tile_g, P), lambda g: (g, 0)),
+            pl.BlockSpec((tile_g * R, 1), lambda g: (g, 0)),
+            pl.BlockSpec((tile_g * R, L), lambda g: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_g * R, 1), lambda g: (g, 0)),
+            pl.BlockSpec((tile_g, select_k), lambda g: (g, 0)),
+            pl.BlockSpec((tile_g, select_k), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((G, select_k), jnp.int32),
+            jax.ShapeDtypeStruct((G, select_k), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(fringe, prev, bias[:, None], nbrs)
+    return scores[:, 0], idx, val

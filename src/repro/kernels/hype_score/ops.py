@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import hype_scores_kernel
+from .kernel import hype_score_select_kernel, hype_scores_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
@@ -20,3 +20,35 @@ def hype_scores(nbrs, fringe, *, tile_b: int = 256, interpret=None):
         nbrs = jnp.pad(nbrs, ((0, pad), (0, 0)), constant_values=-1)
     out = hype_scores_kernel(nbrs, fringe, tile_b=tile, interpret=interpret)
     return out[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("select_k", "tile_g",
+                                             "interpret"))
+def hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
+                      tile_g: int = 8, interpret=None):
+    """Fused score + per-phase top-``select_k`` selection (auto-interpret).
+
+    nbrs: (G, R, L) int32 stacked phase tiles; fringe: (G, s) int32;
+    bias: (G, R) float32 additive row bias; prev: (G, P) float32 held
+    pool scores. The phase count is padded to a ``tile_g`` multiple for
+    the kernel grid. Returns ``(scores (G, R), sel_idx (G, select_k),
+    sel_val (G, select_k))``; sel_idx < R points at fresh rows, >= R at
+    pool slot ``idx - R``. See ``kernel.hype_score_select_kernel``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    G, R, L = nbrs.shape
+    tg = min(tile_g, G)
+    pad = (-G) % tg
+    if pad:
+        nbrs = jnp.pad(nbrs, ((0, pad), (0, 0), (0, 0)),
+                       constant_values=-1)
+        fringe = jnp.pad(fringe, ((0, pad), (0, 0)), constant_values=-1)
+        bias = jnp.pad(bias, ((0, pad), (0, 0)),
+                       constant_values=jnp.inf)
+        prev = jnp.pad(prev, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    scores, idx, val = hype_score_select_kernel(
+        nbrs.reshape((G + pad) * R, L), fringe,
+        bias.reshape((G + pad) * R), prev, select_k=select_k, tile_g=tg,
+        interpret=interpret)
+    return scores.reshape(G + pad, R)[:G], idx[:G], val[:G]

@@ -7,6 +7,7 @@ the fringe.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def hype_scores_ref(nbrs, fringe):
@@ -18,3 +19,26 @@ def hype_scores_ref(nbrs, fringe):
     member = jnp.any(nbrs[..., None] == fringe[None, None, :], axis=-1)
     member &= valid
     return (valid.sum(-1) - member.sum(-1)).astype(jnp.int32)
+
+
+def hype_score_select_ref(nbrs, fringe, bias, prev, select_k):
+    """Oracle for the fused score+select kernel (numpy, exact).
+
+    nbrs: (G, R, L) int32; fringe: (G, s) int32; bias: (G, R) f32;
+    prev: (G, P) f32. Returns ``(scores (G, R), sel_idx (G, select_k),
+    sel_val (G, select_k))`` with the kernel's tie-break (lowest index
+    first — a stable sort) and its +inf -> SELECT_PAD clamp.
+    """
+    from .kernel import SELECT_PAD
+
+    nbrs, fringe = np.asarray(nbrs), np.asarray(fringe)
+    bias, prev = np.asarray(bias), np.asarray(prev)
+    valid = nbrs >= 0                                          # (G, R, L)
+    member = np.any(nbrs[..., None] == fringe[:, None, None, :], axis=-1)
+    member &= valid
+    scores = (valid.sum(-1) - member.sum(-1)).astype(np.float32) + bias
+    merged = np.minimum(np.concatenate([scores, prev], axis=1),
+                        np.float32(SELECT_PAD))
+    order = np.argsort(merged, axis=1, kind="stable")[:, :select_k]
+    vals = np.take_along_axis(merged, order, axis=1)
+    return scores, order.astype(np.int32), vals.astype(np.float32)

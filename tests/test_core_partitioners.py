@@ -67,6 +67,22 @@ def test_hype_k1_single_partition(hg):
     assert metrics.k_minus_1(hg, a) == 0
 
 
+def test_partition_and_report_contract(hg):
+    """Pins the documented return shape: ``(report dict, assignment)``."""
+    from repro.core.partition_api import partition_and_report
+    out = partition_and_report(hg, 4, "hype_batched", seed=0)
+    assert isinstance(out, tuple) and len(out) == 2
+    rep, assignment = out
+    assert isinstance(rep, dict)
+    for key in ("k_minus_1", "method", "k", "runtime_s"):
+        assert key in rep
+    assert rep["method"] == "hype_batched" and rep["k"] == 4
+    assert isinstance(assignment, np.ndarray)
+    assert assignment.shape == (hg.n,) and assignment.dtype == np.int32
+    np.testing.assert_array_equal(
+        assignment, partition(hg, 4, "hype_batched", seed=0))
+
+
 def test_minmax_nb_slack_respected(hg):
     from repro.core.minmax import minmax_partition
     a = minmax_partition(hg, 8, mode="nb", slack=50, seed=0)

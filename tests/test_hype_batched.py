@@ -1,11 +1,15 @@
 """Batched-candidate engine: validity, cross-engine agreement, kernel use,
-shared-scoring equivalences, and the fringe-release regression."""
+shared-scoring equivalences, the fringe-release regression, and the
+device-resident superstep engine (validity, stats, exact cache)."""
 import numpy as np
 import pytest
 
 from repro.core import metrics
 from repro.core.hype import HypeParams, hype_partition
-from repro.core.hype_batched import (BatchedParams, hype_batched_partition)
+from repro.core.hype_batched import (BatchedParams, SuperstepParams,
+                                     _SuperstepState,
+                                     hype_batched_partition,
+                                     hype_superstep_partition)
 from repro.core.hype_jax import PaddedHypergraph, hype_jax_partition
 from repro.core.hypergraph import Hypergraph
 from repro.core.partition_api import METHODS, partition
@@ -184,6 +188,129 @@ def test_vertex_adjacency_matches_neighbors():
     for v in (0, 7, int(np.argmax(hg.vertex_degrees)), hg.n - 1):
         row = indices[indptr[v]:indptr[v + 1]]
         np.testing.assert_array_equal(np.sort(row), hg.neighbors(v))
+
+
+# ------------------------------------------------------ superstep engine
+
+@pytest.mark.parametrize("k", [2, 5, 16])
+def test_superstep_complete_and_balanced(hg, k):
+    a = hype_superstep_partition(hg, k, SuperstepParams(seed=0))
+    assert a.shape == (hg.n,)
+    assert a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < k
+    sizes = metrics.partition_sizes(a, k)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_superstep_deterministic(hg):
+    a1 = hype_superstep_partition(hg, 6, SuperstepParams(seed=3))
+    a2 = hype_superstep_partition(hg, 6, SuperstepParams(seed=3))
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_superstep_registered_in_api(hg):
+    assert "hype_superstep" in METHODS
+    a = partition(hg, 4, "hype_superstep", seed=0)
+    assert a.min() >= 0 and a.max() < 4
+
+
+def test_superstep_quality_regime(hg):
+    """Concurrent k-way growth stays in the sequential engines' quality
+    regime (same tolerance as the batched engine's agreement tests)."""
+    k = 8
+    a_s = hype_superstep_partition(hg, k, SuperstepParams(seed=0))
+    a_n = hype_partition(hg, k, HypeParams(seed=0))
+    km_s = metrics.k_minus_1(hg, a_s)
+    km_n = metrics.k_minus_1(hg, a_n)
+    assert km_s <= 1.35 * km_n + 20
+
+
+def test_superstep_edge_cases():
+    hg = Hypergraph.from_edge_lists(6, [[0, 1], [1, 2, 3], []])
+    for k in (1, 2, 3, 8):
+        a = hype_superstep_partition(hg, k, SuperstepParams(seed=0))
+        assert (a >= 0).all() and (a < k).all()
+        sizes = np.bincount(a, minlength=min(k, 6))
+        assert sizes.max() - sizes.min() <= 1
+
+
+def test_superstep_stats_counters(hg):
+    """The superstep/transfer counters must measure the device traffic."""
+    _, stt = hype_superstep_partition(hg, 8, SuperstepParams(seed=0),
+                                      return_stats=True)
+    assert stt.supersteps > 0
+    assert stt.kernel_calls == stt.supersteps
+    assert stt.kernel_rows > 0
+    assert stt.device_image_bytes > 0
+    assert stt.host_to_device_bytes > 0
+    assert stt.cache_invalidations > 0
+    assert stt.host_rows == 0            # no host-scoring fallback path
+    # per-superstep traffic is ids + small bias buffers, not (B, L) tiles
+    per_step = (stt.host_to_device_bytes / stt.supersteps)
+    assert per_step < 8 * 64 * scoring.L_BUCKETS[-1]
+
+
+def test_superstep_cache_exact_after_admissions():
+    """Property check for decrement-based invalidation: after ANY
+    admission sequence, every cached score equals a fresh
+    ``batched_dext_adj`` recompute — the stale-score drift the old
+    per-phase wipe was hiding cannot exist."""
+    for seed in (0, 1, 2):
+        hg = powerlaw_hypergraph(300, 200, seed=10 + seed, max_edge=18,
+                                 max_degree=12)
+        k, R = 4, 8
+        rng = np.random.default_rng(seed)
+        st = _SuperstepState(hg, k, SuperstepParams(seed=seed))
+        fringe = np.full((k, 1), -1, np.int32)
+        empty_pool = np.full((k, 4), -1, np.int32)
+        for step in range(10):
+            # score a random batch of never-scored vertices ...
+            cand = np.flatnonzero(~st.cache_scored & (st.assignment < 0))
+            if cand.size:
+                pick = rng.choice(cand, size=min(k * R, cand.size),
+                                  replace=False)
+                fresh = np.full((k, R), -1, np.int32)
+                fresh.reshape(-1)[:pick.size] = pick
+                bias = np.where(fresh >= 0, 0,
+                                np.inf).astype(np.float32)
+                st.superstep_call(fresh, bias, empty_pool, fringe,
+                                  delta_cap=32, select_k=1)
+                st.cache_scored[pick] = True
+            # ... then admit a random batch to a random phase
+            un = np.flatnonzero(st.assignment < 0)
+            if un.size == 0:
+                break
+            vs = rng.choice(un, size=min(int(rng.integers(1, 8)),
+                                         un.size), replace=False)
+            st.assign_now(vs, int(rng.integers(0, k)))
+        while st.delta_ids:      # flush pending deltas to the device
+            st.superstep_call(np.full((k, 1), -1, np.int32),
+                              np.full((k, 1), np.inf, np.float32),
+                              np.full((k, 1), -1, np.int32), fringe,
+                              delta_cap=32, select_k=1)
+        cache = np.asarray(st.dev_cache, dtype=np.float64)
+        # rows wider than the run's tile width are truncated hubs parked
+        # at ~1e12 — the exactness contract covers everything else
+        scored = np.flatnonzero(st.cache_scored & (st.deg <= st.tile_l))
+        assert scored.size > 50
+        ref = scoring.batched_dext_adj(st.adj, scored,
+                                       np.zeros(hg.n, dtype=bool),
+                                       st.assignment)
+        assert (ref > 0).any()           # the recompute is not trivial
+        np.testing.assert_allclose(cache[scored], ref)
+
+
+def test_superstep_cross_phase_cache_reuse():
+    """Scores survive phase completion: when a finished phase releases
+    its pool and another phase redraws those vertices, they are cache
+    hits — impossible under the old per-phase wipe."""
+    for seed in range(3):
+        hg = powerlaw_hypergraph(300, 500, seed=21 + seed, max_edge=10,
+                                 max_degree=30)
+        _, stt = hype_superstep_partition(
+            hg, 24, SuperstepParams(seed=seed, pool_cap=16),
+            return_stats=True)
+        assert stt.cache_hits > 0
 
 
 # --------------------------------------------- fringe-release regression

@@ -8,8 +8,10 @@ from _hyp_compat import given, settings, st
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.hype_score.ops import hype_scores
-from repro.kernels.hype_score.ref import hype_scores_ref
+from repro.kernels.hype_score.kernel import SELECT_PAD
+from repro.kernels.hype_score.ops import hype_score_select, hype_scores
+from repro.kernels.hype_score.ref import (hype_score_select_ref,
+                                          hype_scores_ref)
 from repro.kernels.embedding_bag.ops import embedding_bag
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.neighbor_agg.ops import neighbor_agg
@@ -95,6 +97,89 @@ def test_hype_scores_property(B, L, s, seed):
     # invariant: 0 <= score <= #valid
     assert (out >= 0).all()
     assert (out <= (nbrs >= 0).sum(1)).all()
+
+
+# ------------------------------------------------------ fused score+select
+
+def _select_case(G, R, L, s, P, select_k, seed, fringe_fill="full"):
+    """Run kernel + oracle on one randomized case and compare exactly."""
+    rng = np.random.default_rng(seed)
+    nbrs = rng.integers(-1, 3 * L, size=(G, R, L)).astype(np.int32)
+    fringe = rng.integers(0, 3 * L, size=(G, s)).astype(np.int32)
+    if fringe_fill == "empty":
+        fringe[:] = -1
+    elif fringe_fill == "partial":
+        fringe[:, s // 2:] = -1
+    bias = np.where(rng.random((G, R)) < 0.25, np.inf,
+                    np.where(rng.random((G, R)) < 0.2, 1e12,
+                             0.0)).astype(np.float32)
+    prev = np.where(rng.random((G, P)) < 0.5,
+                    (rng.random((G, P)) * 30).astype(np.float32),
+                    np.float32(np.inf))
+    out = hype_score_select(jnp.asarray(nbrs), jnp.asarray(fringe),
+                            jnp.asarray(bias), jnp.asarray(prev),
+                            select_k=select_k)
+    ref = hype_score_select_ref(nbrs, fringe, bias, prev, select_k)
+    for got, want, name in zip(out, ref, ("scores", "sel_idx", "sel_val")):
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=name)
+
+
+@pytest.mark.parametrize("L", [32, 128, 512, 2048])   # every L bucket
+def test_score_select_matches_ref_all_widths(L):
+    from repro.core.scoring import L_BUCKETS
+    assert L in L_BUCKETS
+    _select_case(G=3, R=4, L=L, s=8, P=6, select_k=5, seed=L)
+
+
+@pytest.mark.parametrize("fill", ["empty", "partial", "full"])
+def test_score_select_fringe_fill_levels(fill):
+    _select_case(G=4, R=8, L=64, s=10, P=8, select_k=6, seed=7,
+                 fringe_fill=fill)
+
+
+def test_score_select_all_pad_rows():
+    """All -1 rows + all-inf pool must select nothing real, in order."""
+    G, R, L, P, k = 2, 4, 32, 4, 5
+    nbrs = np.full((G, R, L), -1, np.int32)
+    fringe = np.full((G, 3), -1, np.int32)
+    bias = np.full((G, R), np.inf, np.float32)
+    prev = np.full((G, P), np.inf, np.float32)
+    scores, idx, val = hype_score_select(
+        jnp.asarray(nbrs), jnp.asarray(fringe), jnp.asarray(bias),
+        jnp.asarray(prev), select_k=k)
+    ref = hype_score_select_ref(nbrs, fringe, bias, prev, k)
+    np.testing.assert_array_equal(np.asarray(idx), ref[1])
+    assert (np.asarray(val) >= SELECT_PAD).all()     # "nothing there"
+
+
+def test_score_select_orders_admissions():
+    """Selections come back best-first and point at the true minima."""
+    G, R, L, P, k = 1, 4, 8, 3, 4
+    nbrs = np.full((G, R, L), -1, np.int32)
+    nbrs[0, 0, :3] = [5, 6, 7]       # score 3
+    nbrs[0, 1, :1] = [9]             # score 1
+    nbrs[0, 2, :2] = [5, 9]          # score 2
+    nbrs[0, 3, :5] = [1, 2, 3, 4, 5]  # score 5
+    fringe = np.full((G, 2), -1, np.int32)
+    bias = np.zeros((G, R), np.float32)
+    prev = np.asarray([[2.0, np.inf, 0.0]], np.float32)
+    _, idx, val = hype_score_select(
+        jnp.asarray(nbrs), jnp.asarray(fringe), jnp.asarray(bias),
+        jnp.asarray(prev), select_k=k)
+    # pool slot 2 (score 0), row 1 (1), then the score-2 tie: row 2 wins
+    # over pool slot 0 by lowest-index-first
+    np.testing.assert_array_equal(np.asarray(idx)[0], [R + 2, 1, 2, R + 0])
+    np.testing.assert_array_equal(np.asarray(val)[0], [0.0, 1.0, 2.0, 2.0])
+
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(1, 16),
+       st.integers(1, 6), st.integers(0, 99))
+@settings(max_examples=12, deadline=None)
+def test_score_select_property(G, R, L, P, seed):
+    rng = np.random.default_rng(seed)
+    select_k = int(rng.integers(1, R + P + 1))
+    _select_case(G=G, R=R, L=L, s=int(rng.integers(1, 6)), P=P,
+                 select_k=select_k, seed=seed + 1000)
 
 
 # ---------------------------------------------------------- embedding bag
