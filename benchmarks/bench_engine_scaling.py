@@ -23,8 +23,10 @@ import numpy as np
 
 from repro.core import metrics
 from repro.core.hype import HypeParams, hype_partition
-from repro.core.hype_batched import (BatchedParams, SuperstepParams,
+from repro.core.hype_batched import (BatchedParams, ShardedParams,
+                                     SuperstepParams,
                                      hype_batched_partition,
+                                     hype_sharded_partition,
                                      hype_superstep_partition)
 from repro.data.synthetic import powerlaw_hypergraph
 
@@ -35,6 +37,9 @@ REPEATS = 2
 KS = (8, 32)
 TS = (1, 8, 16)          # batched-engine admissions-per-step knob
 SUPERSTEP_TS = (8, 16)   # superstep engine: admissions per phase per step
+SHARDED_K = 32           # device-count scaling axis runs at the large k
+SHARDED_T = 16
+SHARDED_DEVICES = (1, 2, 4)   # clamped to the simulated mesh size
 JAX_N = 300              # hype_jax validation row size
 
 
@@ -66,12 +71,18 @@ def run():
     rows = []
     meta = {"quick": QUICK, "repeats": REPEATS,
             "adjacency_build_s": {}, "speedups": {},
-            "superstep_stats": {}}
+            "superstep_stats": {}, "sharded_stats": {}}
 
     # warm the Pallas interpret traces once (process-wide)
+    import jax
+    n_dev = len(jax.devices())
     warm = powerlaw_hypergraph(200, 150, seed=1)
     hype_batched_partition(warm, 4, BatchedParams(seed=0))
     hype_superstep_partition(warm, 4, SuperstepParams(seed=0))
+    for d in SHARDED_DEVICES:
+        if d <= n_dev:
+            hype_sharded_partition(warm, 4,
+                                   ShardedParams(seed=0, devices=d))
 
     for name in ("github", "stackoverflow", "reddit"):
         hg = dataset(name)
@@ -84,6 +95,7 @@ def run():
             base = _row(name, hg, k, "hype", dt, a)
             rows.append(base)
             batched_t8_s = None
+            superstep_ref = None
             for t in TS:
                 a, dt = _run(hype_batched_partition, hg, k,
                              BatchedParams(seed=0, t=t))
@@ -123,6 +135,44 @@ def run():
                         stt.host_to_device_bytes
                         / max(stt.supersteps, 1)),
                 }
+                if k == SHARDED_K and t == SHARDED_T:
+                    superstep_ref = (dt, metrics.k_minus_1(hg, a))
+            # device-count scaling axis: the mesh-sharded engine at the
+            # large k (CPU-simulated mesh; the row records architecture
+            # metrics — collective traffic, conflicts — alongside time)
+            if k == SHARDED_K and superstep_ref is not None:
+                for d in SHARDED_DEVICES:
+                    if d > n_dev:
+                        continue
+                    (a, stt), dt = _run(
+                        hype_sharded_partition, hg, k,
+                        ShardedParams(seed=0, t=SHARDED_T, devices=d),
+                        return_stats=True)
+                    km = metrics.k_minus_1(hg, a)
+                    rec = _row(name, hg, k, f"hype_sharded_d{d}", dt, a,
+                               {"t": SHARDED_T, "devices": d,
+                                "speedup_vs_hype": round(
+                                    base["runtime_s"] / max(dt, 1e-9),
+                                    2),
+                                "km1_ratio_vs_hype": round(
+                                    rec_ratio(a, base, hg), 4),
+                                "km1_ratio_vs_superstep": round(
+                                    km / max(superstep_ref[1], 1), 4)})
+                    rows.append(rec)
+                    meta["sharded_stats"][f"{name}_k{k}_d{d}"] = {
+                        "supersteps": stt.supersteps,
+                        "collectives": stt.collectives,
+                        "collective_bytes": stt.collective_bytes,
+                        "collective_bytes_per_superstep": round(
+                            stt.collective_bytes
+                            / max(stt.collectives, 1)),
+                        "admission_conflicts": stt.admission_conflicts,
+                        "cache_invalidations": stt.cache_invalidations,
+                        "device_image_bytes": stt.device_image_bytes,
+                        "host_to_device_bytes": stt.host_to_device_bytes,
+                        "runtime_vs_superstep_t16": round(
+                            dt / max(superstep_ref[0], 1e-9), 3),
+                    }
 
     # small-n row including the jittable engines (validation scale)
     from repro.core.hype_jax import (hype_jax_partition,
@@ -143,13 +193,16 @@ def run():
     for r in rows:
         if r["dataset"] == "reddit" and r["k"] == 32 \
                 and (r["engine"].startswith("hype_batched")
-                     or r["engine"].startswith("hype_superstep")):
+                     or r["engine"].startswith("hype_superstep")
+                     or r["engine"].startswith("hype_sharded")):
             head = {
                 "speedup_vs_hype": r["speedup_vs_hype"],
                 "km1_ratio_vs_hype": r["km1_ratio_vs_hype"],
             }
             if "speedup_vs_batched_t8" in r:
                 head["speedup_vs_batched_t8"] = r["speedup_vs_batched_t8"]
+            if "km1_ratio_vs_superstep" in r:
+                head["km1_ratio_vs_superstep"] = r["km1_ratio_vs_superstep"]
             meta["speedups"][f"reddit_k32_{r['engine']}"] = head
 
     payload = {"meta": meta, "rows": rows}

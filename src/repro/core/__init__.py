@@ -2,6 +2,8 @@
 #   hypergraph.py    — dual-CSR hypergraph structure + flip trick
 #   hype.py          — faithful Alg. 1-3 engine (s/r/caching opts)
 #   hype_jax.py      — jittable JAX engine + parallel k-way growth
+#   hype_batched.py  — batched / superstep / mesh-sharded engines
+#   scoring.py       — shared batched d_ext scoring + device programs
 #   minmax.py        — streaming MinMax EB/NB baseline (NIPS'15)
 #   shp.py           — Social-Hash-style swap baseline (VLDB'17)
 #   multilevel.py    — mini-hMETIS (coarsen/bisect/FM) baseline

@@ -25,6 +25,11 @@ first-time candidates.
 This is the first real consumer of ``kernels/hype_score`` — on CPU the
 kernel runs in interpret mode (still one fused batched evaluation); on
 TPU the same call compiles to the VPU tile loop the kernel was built for.
+
+The module holds the top three rungs of the engine ladder (DESIGN.md §1):
+``hype_batched_partition`` (host tiles), ``hype_superstep_partition``
+(device-resident image, §4b) and ``hype_sharded_partition`` (phase
+groups sharded over a device mesh, §4c).
 """
 from __future__ import annotations
 
@@ -68,6 +73,12 @@ class BatchedStats:
     host_to_device_bytes: int = 0   # per-call id/bias buffers — the whole
     #                                 steady-state H2D traffic
     cache_invalidations: int = 0    # cached scores decremented by admission
+    # sharded-engine counters (zero for the single-device engines):
+    collectives: int = 0            # all_gather ops (one per superstep)
+    collective_bytes: int = 0       # bytes materialized by the gathers:
+    #                                 devices x global payload per superstep
+    admission_conflicts: int = 0    # proposed admissions lost to the
+    #                                 lowest-phase-wins conflict rule
 
 
 class _BatchedState:
@@ -102,12 +113,19 @@ class _BatchedState:
         self.adj = hg.vertex_adjacency()
 
     # ------------------------------------------------------------------ #
-    def random_unassigned(self, count: int = 1) -> np.ndarray:
+    def random_unassigned(self, count: int = 1,
+                          in_pool: Optional[np.ndarray] = None
+                          ) -> np.ndarray:
         """Next ``count`` unassigned non-pool vertices of the random stream.
 
         Vectorized skip-pointer scan over the shuffled order; the pointer
         only advances past consumed positions so no vertex is skipped.
+        ``in_pool`` selects which pool-membership mask to respect (the
+        sharded engine keeps one per device group); default is the
+        engine-wide mask.
         """
+        if in_pool is None:
+            in_pool = self.in_pool
         n = self.hg.n
         out: list = []
         got = 0
@@ -115,7 +133,7 @@ class _BatchedState:
             chunk = self.rand_order[self.rand_ptr:
                                     self.rand_ptr + max(1024, count)]
             ok = np.flatnonzero((self.assignment[chunk] < 0)
-                                & ~self.in_pool[chunk])
+                                & ~in_pool[chunk])
             if ok.size >= count - got:
                 ok = ok[:count - got]
                 self.rand_ptr += int(ok[-1]) + 1
@@ -126,7 +144,7 @@ class _BatchedState:
             if take.size:
                 out.append(take)
         if got < count:     # stream exhausted; the stragglers sit earlier
-            rem = np.flatnonzero((self.assignment < 0) & ~self.in_pool)
+            rem = np.flatnonzero((self.assignment < 0) & ~in_pool)
             if out:
                 rem = np.setdiff1d(rem, np.concatenate(out),
                                    assume_unique=True)
@@ -163,7 +181,8 @@ class _BatchedState:
 
     # ------------------------------------------------------------------ #
     def draw_candidates(self, need: int,
-                        buckets: Optional[dict] = None) -> np.ndarray:
+                        buckets: Optional[dict] = None,
+                        in_pool: Optional[np.ndarray] = None) -> np.ndarray:
         """Up to ``need`` distinct universe vertices from smallest edges.
 
         One vectorized pass: pull edges smallest-size-first under a pin
@@ -173,9 +192,15 @@ class _BatchedState:
         requeue, without the heap). ``buckets`` selects which active-edge
         queues to draw from (the superstep engine keeps one dict per
         concurrently growing phase); default is the single shared dict.
+        ``in_pool`` selects the pool-membership mask that filters
+        already-held candidates (the sharded engine keeps one per device
+        group, so groups draw independently — by design they may overlap,
+        which is what the admission conflict rule resolves).
         """
         if buckets is None:
             buckets = self.buckets
+        if in_pool is None:
+            in_pool = self.in_pool
         if need <= 0:
             return np.empty(0, dtype=np.int64)
         budget = max(4 * need, 512)
@@ -219,7 +244,7 @@ class _BatchedState:
                 buckets.setdefault(
                     int(s), collections.deque()).appendleft(
                         live_edges[lkey == s])
-        fresh = unassigned & ~self.in_pool[pins]
+        fresh = unassigned & ~in_pool[pins]
         cand = pins[fresh]
         if cand.size:
             _, first = np.unique(cand, return_index=True)
@@ -368,9 +393,10 @@ class _SuperstepState(_BatchedState):
     decrement rule in ``scoring.superstep_device`` — no per-phase wipe.
     """
 
-    def __init__(self, hg: Hypergraph, k: int, p: SuperstepParams):
+    def __init__(self, hg: Hypergraph, k: int, p: SuperstepParams,
+                 mesh=None):
         super().__init__(hg, k, p)
-        self.dev = hg.device_adjacency()
+        self.dev = hg.device_adjacency(mesh=mesh)
         if self.dev is None:       # hub-expansion guard tripped on host
             return
         import jax
@@ -380,6 +406,11 @@ class _SuperstepState(_BatchedState):
         self.interpret = jax.default_backend() != "tpu"
         self.dev_assign = jnp.full((n,), -1, jnp.int32)
         self.dev_cache = jnp.full((n,), -1.0, jnp.float32)
+        if mesh is not None:       # replicate the mutable image too
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(mesh, PartitionSpec())
+            self.dev_assign = jax.device_put(self.dev_assign, rep)
+            self.dev_cache = jax.device_put(self.dev_cache, rep)
         self.cache_scored = np.zeros(n, dtype=bool)
         self.pools = [np.empty(0, dtype=np.int64) for _ in range(k)]
         self.phase_buckets: list = [dict() for _ in range(k)]
@@ -471,21 +502,29 @@ class _SuperstepState(_BatchedState):
         self.delta_vals = [vals[cap:]]
         return ids[:cap], vals[:cap]
 
-    def superstep_call(self, fresh, bias, pool_arr, fringe, delta_cap,
-                       select_k):
-        """One fused device call; updates the device image in place."""
+    def _pack_delta_dirty(self, delta_cap, extra_dirty=()):
+        """Drain queued assignments into the padded device buffers.
+
+        Pre-aggregates the dirtied-neighbor multiset of the drained
+        delta — one CSR gather + bincount, shipped as (unique id, count)
+        pairs padded to a power-of-two bucket (bounded retraces,
+        O(unique) device scatter). ``extra_dirty`` merges additional raw
+        neighbor-id arrays into the multiset (the sharded engine's
+        queued decrement tails). Returns ``(delta, vals, dirty, dcnt)``;
+        shared by both device engines so their cache-exactness
+        bookkeeping cannot drift apart.
+        """
         d_ids, d_vals = self.take_delta(delta_cap)
         delta = np.full(delta_cap, -1, dtype=np.int32)
         vals = np.zeros(delta_cap, dtype=np.int32)
         delta[:d_ids.size] = d_ids
         vals[:d_ids.size] = d_vals
-        # pre-aggregate the dirtied-neighbor multiset: one CSR gather +
-        # bincount, shipped as (unique id, count) pairs padded to a
-        # power-of-two bucket (bounded retraces, O(unique) device scatter)
         nbrs, _ = scoring.gather_csr_rows(self.adj[0], self.adj[1], d_ids)
+        parts = list(extra_dirty)
         if nbrs.size:
-            counts = np.bincount(nbrs.astype(np.int64),
-                                 minlength=0)
+            parts.append(nbrs.astype(np.int64))
+        if parts:
+            counts = np.bincount(np.concatenate(parts))
             uniq = np.flatnonzero(counts)
             self.stats.cache_invalidations += int(uniq.size)
         else:
@@ -498,6 +537,12 @@ class _SuperstepState(_BatchedState):
         dcnt = np.zeros(cap, dtype=np.float32)
         dirty[:uniq.size] = uniq
         dcnt[:uniq.size] = counts[uniq]
+        return delta, vals, dirty, dcnt
+
+    def superstep_call(self, fresh, bias, pool_arr, fringe, delta_cap,
+                       select_k):
+        """One fused device call; updates the device image in place."""
+        delta, vals, dirty, dcnt = self._pack_delta_dirty(delta_cap)
         tile_l = self.tile_l
         self.stats.host_to_device_bytes += (
             fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
@@ -644,6 +689,285 @@ def _run_superstep(hg: Hypergraph, k: int, p: SuperstepParams):
     # through superstep_call.
     st.delta_ids, st.delta_vals = [], []
     return st.assignment, st
+
+
+# --------------------------------------------------------------------- #
+# Mesh-sharded superstep engine: phase groups sharded over a device mesh.
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class ShardedParams(SuperstepParams):
+    """Knobs for the mesh-sharded superstep engine (DESIGN.md §4c).
+
+    Inherits every superstep knob. ``devices`` sets the 1-D mesh size the
+    k phase groups are sharded over; ``None`` uses every local JAX device
+    (capped at ``k``). On CPU, simulate a mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+    """
+    devices: Optional[int] = None
+
+
+class _ShardedState(_SuperstepState):
+    """Superstep state plus the mesh and per-device-group pool masks.
+
+    The CSR image, assignment and score cache are *replicated* on every
+    mesh device; the phase groups are sharded. Pool membership is
+    tracked per device group (``group_pool``) — groups draw candidates
+    independently, so two groups may pool (and propose) the same vertex;
+    the device program's lowest-phase-wins rule resolves it, and the
+    host mirrors winners without re-queuing them as deltas.
+    """
+
+    def __init__(self, hg: Hypergraph, k_padded: int, p: ShardedParams,
+                 num_devices: int):
+        self.D = num_devices
+        self.kL = k_padded // num_devices
+        mesh = scoring._sharded_mesh(num_devices)
+        super().__init__(hg, k_padded, p, mesh=mesh)
+        if self.dev is None:
+            return
+        self.mesh = mesh
+        self.group_pool = np.zeros((num_devices, hg.n), dtype=bool)
+        self.pending_dirty: list = []   # decrement tails of wide winners
+        # the image lives once per device
+        self.stats.device_image_bytes *= num_devices
+
+    def group_of(self, g: int) -> int:
+        return g // self.kL
+
+    def sharded_call(self, fresh, bias, pool_arr, fringe, admit_cap,
+                     delta_cap):
+        """One mesh-sharded superstep; returns the (kG, t) winner ids.
+
+        Host->device traffic is the same id/bias buffers as the
+        single-device engine plus the admission caps; the host-side
+        dirty pairs carry the injections' neighbor multisets *and* the
+        decrement tails of last superstep's wider-than-tile winners
+        (the device clips its own decrement gather at ``tile_l``), so
+        the replicated cache stays exact.
+        """
+        tails = self.pending_dirty
+        self.pending_dirty = []
+        delta, vals, dirty, dcnt = self._pack_delta_dirty(
+            delta_cap, extra_dirty=tails)
+        admit_cap = np.asarray(admit_cap, dtype=np.int32)
+        self.stats.host_to_device_bytes += (
+            fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
+            + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes
+            + admit_cap.nbytes)
+        self.stats.supersteps += 1
+        self.stats.kernel_calls += 1
+        kG, R = fresh.shape
+        t = self.p.t
+        # one all_gather per superstep: every device materializes the
+        # global (kG, R + t) int32 payload of fresh scores + admissions
+        self.stats.collectives += 1
+        self.stats.collective_bytes += self.D * kG * (R + t) * 4
+        self.dev_assign, self.dev_cache, winners, ncf = \
+            scoring.sharded_superstep_device(
+                self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
+                delta, vals, dirty, dcnt, fresh, bias, pool_arr, fringe,
+                admit_cap, num_devices=self.D, group_l=self.kL,
+                tile_l=self.tile_l, select_k=t, interpret=self.interpret)
+        winners = np.asarray(winners).astype(np.int64)
+        self.stats.admission_conflicts += int(ncf)
+        # exact-decrement invariant: queue the clipped tails of winners
+        # wider than the device gather for the next superstep
+        w = winners[winners >= 0]
+        wide = w[self.deg[w] > self.tile_l]
+        indptr, indices = self.adj
+        for v in wide:
+            self.pending_dirty.append(
+                indices[indptr[v] + self.tile_l:indptr[v + 1]].astype(
+                    np.int64))
+        # the decrements the device performed itself
+        if w.size:
+            self.stats.cache_invalidations += int(
+                np.minimum(self.deg[w], self.tile_l).sum())
+        return winners
+
+
+def _run_sharded(hg: Hypergraph, k: int, p: ShardedParams,
+                 num_devices: int):
+    """Grow all ``k`` partitions concurrently across the device mesh.
+
+    Mirrors ``_run_superstep``; the differences are exactly the sharded
+    semantics: phases are padded to ``num_devices`` equal groups, pool
+    membership is per group (overlaps across groups are allowed and
+    resolved by the device's lowest-phase-wins rule), admission caps are
+    enforced on device, and the host mirrors the returned winners
+    instead of selecting admissions itself.
+    """
+    kL = -(-k // num_devices)
+    kG = kL * num_devices
+    st = _ShardedState(hg, kG, p, num_devices)
+    if st.dev is None:
+        return None, None                       # caller falls back
+    n = hg.n
+    base, rem = divmod(n, k)
+    targets = np.zeros(kG, dtype=np.int64)
+    targets[:k] = base + (np.arange(k) < rem)
+    acc = np.zeros(kG, dtype=np.int64)
+    R, P, t = p.rows, p.pool_cap, p.t
+    delta_cap = max(2 * kG * t, kG)
+    fringe = np.full((kG, 1), -1, dtype=np.int32)   # fringe-free scoring
+
+    seeds = st.random_unassigned(int((targets > 0).sum()))
+    gi = 0
+    for g in range(kG):
+        if targets[g] == 0 or gi >= seeds.size:
+            continue
+        v = seeds[gi:gi + 1]
+        gi += 1
+        st.assign_now(v, g)
+        st.activate_phase(v, g)
+        acc[g] += 1
+
+    while True:
+        active = np.flatnonzero(acc < targets)
+        if active.size == 0:
+            break
+        progress = 0
+        fresh = np.full((kG, R), -1, dtype=np.int32)
+        bias = np.full((kG, R), np.inf, dtype=np.float32)
+        pool_arr = np.full((kG, P), -1, dtype=np.int32)
+        fresh_snap: list = [None] * kG
+        pool_snap: list = [None] * kG
+        rot = st.stats.supersteps % active.size
+        for g in np.concatenate([active[rot:], active[:rot]]):
+            gp = st.group_pool[st.group_of(g)]
+            ids = st.pools[g]
+            if ids.size:        # other groups' winners may sit in here
+                keep = st.assignment[ids] < 0
+                if not keep.all():
+                    gp[ids[~keep]] = False
+                    ids = ids[keep]
+                    st.pools[g] = ids
+            need = min(R, P - ids.size)
+            drawn = st.draw_candidates(need, st.phase_buckets[g],
+                                       in_pool=gp) \
+                if need > 0 else np.empty(0, dtype=np.int64)
+            miss = np.empty(0, dtype=np.int64)
+            if drawn.size:
+                gp[drawn] = True
+                scored = st.cache_scored[drawn]
+                hits, miss = drawn[scored], drawn[~scored]
+                if hits.size:   # cross-phase/-device reuse: cached
+                    st.stats.cache_hits += int(hits.size)
+                    ids = np.concatenate([ids, hits])
+                    st.pools[g] = ids
+            if ids.size == 0 and miss.size == 0:
+                vs = st.random_unassigned(
+                    min(t, int(targets[g] - acc[g])), in_pool=gp)
+                if vs.size:
+                    st.stats.random_restarts += 1
+                    st.assign_now(vs, g)
+                    st.activate_phase(vs, g)
+                    acc[g] += vs.size
+                    progress += int(vs.size)
+                continue
+            fresh[g, :miss.size] = miss
+            bias[g, :miss.size] = np.where(
+                st.deg[miss] > st.tile_l, scoring.TRUNC_PENALTY, 0.0)
+            pool_arr[g, :ids.size] = ids
+            fresh_snap[g] = miss
+            pool_snap[g] = ids
+            st.stats.kernel_rows += int(miss.size)
+
+        if any(f is not None for f in fresh_snap):
+            admit_cap = np.maximum(targets - acc, 0).astype(np.int32)
+            winners = st.sharded_call(fresh, bias, pool_arr, fringe,
+                                      admit_cap, delta_cap)
+            adm_vs: list = []
+            adm_ph: list = []
+            for g in active:
+                if fresh_snap[g] is None:
+                    continue
+                fr, ids = fresh_snap[g], pool_snap[g]
+                st.cache_scored[fr] = True
+                grp = st.group_of(g)
+                w = winners[g]
+                w = w[w >= 0]
+                if w.size:      # mirror the device's admissions
+                    st.assignment[w] = g
+                    st.group_pool[grp][w] = False
+                    acc[g] += w.size
+                    progress += int(w.size)
+                    adm_vs.append(w)
+                    adm_ph.append(np.full(w.size, g, dtype=np.int64))
+                merged = np.concatenate([ids, fr])
+                keep = st.assignment[merged] < 0
+                st.group_pool[grp][merged[~keep]] = False
+                st.pools[g] = merged[keep]
+                if acc[g] >= targets[g]:        # phase done: release pool
+                    st.group_pool[grp][st.pools[g]] = False
+                    st.pools[g] = np.empty(0, dtype=np.int64)
+            if adm_vs:
+                st.activate_many(np.concatenate(adm_vs),
+                                 np.concatenate(adm_ph))
+        if progress == 0:
+            break       # starved: remaining vertices sit in other pools
+
+    rem_v = np.flatnonzero(st.assignment < 0)
+    if rem_v.size:
+        deficit = np.maximum(targets - acc, 0)
+        fill = np.repeat(np.arange(kG), deficit)[:rem_v.size]
+        for g in np.unique(fill):
+            st.assignment[rem_v[fill == g]] = np.int32(g)
+    st.group_pool[:] = False
+    st.delta_ids, st.delta_vals = [], []
+    return st.assignment, st
+
+
+def hype_sharded_partition(hg: Hypergraph, k: int,
+                           params: Optional[ShardedParams] = None,
+                           return_stats: bool = False):
+    """Partition ``hg`` with the mesh-sharded superstep engine.
+
+    Same contract as ``hype_superstep_partition`` (complete int32
+    assignment, ``max - min <= 1`` vertex balance, all k phases grown
+    concurrently) but the phase groups are sharded over a 1-D JAX device
+    mesh with ``shard_map``: the CSR graph image, assignment vector and
+    score cache are replicated per device, each device runs the fused
+    ``hype_score_select`` superstep for its own contiguous phase group,
+    and a single ``all_gather`` per superstep exchanges fresh scores and
+    proposed admissions so every replica stays globally consistent —
+    including the exact-decrement score-cache invalidations. Cross-device
+    admission conflicts (two groups proposing the same vertex in one
+    superstep) are resolved deterministically: the lowest phase id wins
+    and losers redraw from their pools next superstep.
+
+    ``params.devices`` picks the mesh size (default: all local devices,
+    capped at ``k``); on CPU simulate devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. With one
+    device the engine degenerates to (slightly reordered) single-device
+    superstep growth. Falls back to ``hype_superstep_partition``'s own
+    fallback chain when the adjacency guard trips.
+    """
+    if params is None:
+        params = ShardedParams()
+    if params.rows is None:
+        params = dataclasses.replace(params, rows=max(8, params.t))
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    if params.t < 1 or params.rows < 1 or params.pool_cap < 1:
+        raise ValueError("rows, pool_cap, t must all be >= 1")
+    if params.devices is not None and params.devices < 1:
+        raise ValueError("devices must be >= 1")
+    if k == 1:
+        out = np.zeros(hg.n, dtype=np.int32)
+        return (out, BatchedStats()) if return_stats else out
+    import jax
+    avail = len(jax.devices())
+    num = params.devices if params.devices is not None else avail
+    num = max(1, min(num, avail, k))
+    assignment, st = _run_sharded(hg, k, params, num)
+    if assignment is None:
+        return hype_superstep_partition(hg, k, params, return_stats)
+    assert (assignment >= 0).all()
+    if return_stats:
+        return assignment, st.stats
+    return assignment
 
 
 def hype_superstep_partition(hg: Hypergraph, k: int,

@@ -36,7 +36,27 @@ class Hypergraph:
     @classmethod
     def from_pins(cls, n: int, m: int, vertex_ids: np.ndarray,
                   edge_ids: np.ndarray) -> "Hypergraph":
-        """Build from parallel pin arrays (vertex_ids[i] ∈ edge edge_ids[i])."""
+        """Build from parallel pin arrays (vertex_ids[i] ∈ edge edge_ids[i]).
+
+        Parameters
+        ----------
+        n, m : int
+            Vertex and hyperedge counts; ids outside ``[0, n)`` /
+            ``[0, m)`` raise ``ValueError``. Vertices or edges with no
+            pins are legal (they become empty CSR rows).
+        vertex_ids, edge_ids : array-like of int
+            Parallel arrays, one entry per pin. Duplicate
+            (vertex, edge) pins are deduplicated — a vertex appears at
+            most once per hyperedge.
+
+        Returns
+        -------
+        Hypergraph
+            Immutable, with both CSR directions built; index dtype is
+            int32 when ids fit, int64 otherwise. This is the
+            construction path every loader and generator funnels
+            through (``from_edge_lists`` included).
+        """
         vertex_ids = np.asarray(vertex_ids, dtype=np.int64)
         edge_ids = np.asarray(edge_ids, dtype=np.int64)
         if vertex_ids.shape != edge_ids.shape:
@@ -72,7 +92,13 @@ class Hypergraph:
 
     @classmethod
     def from_edge_lists(cls, n: int, edges: Sequence[Iterable[int]]) -> "Hypergraph":
-        """Build from a list of hyperedges, each an iterable of vertex ids."""
+        """Build from a list of hyperedges, each an iterable of vertex ids.
+
+        Convenience wrapper over ``from_pins`` for tests and small
+        graphs (it materializes python lists — use ``from_pins``
+        directly for anything large). ``len(edges)`` becomes ``m``;
+        empty iterables are legal and become empty hyperedges.
+        """
         edge_ids, vertex_ids = [], []
         for e, pins in enumerate(edges):
             for v in pins:
@@ -151,30 +177,43 @@ class Hypergraph:
         cache[max_expanded] = adj               # frozen-dataclass memo
         return adj
 
-    def device_adjacency(self, max_expanded: int = 80_000_000):
-        """``vertex_adjacency`` uploaded to the device once, memoized.
+    def device_adjacency(self, max_expanded: int = 80_000_000, *,
+                         mesh=None):
+        """``vertex_adjacency`` uploaded to the device(s) once, memoized.
 
         Returns ``(indptr_dev, indices_dev)`` jax arrays (int32 where ids
         fit, otherwise int64) or None when the host-side expansion guard
         trips. The superstep engine gathers its candidate tiles from this
         image so refills never ship a freshly built (B, L) tile across
         the host boundary — only candidate *ids* move.
+
+        With ``mesh`` (a ``jax.sharding.Mesh``), the CSR image is placed
+        *replicated* across every mesh device — the layout the sharded
+        superstep engine wants: each device gathers its own phase group's
+        tiles from a full local copy, so sharding the phases never
+        shards (or ships) the graph. Memoized per (max_expanded, mesh).
         """
         cache = self.__dict__.get("_device_adj_cache")
         if cache is None:
             cache = {}
             object.__setattr__(self, "_device_adj_cache", cache)
-        if max_expanded in cache:
-            return cache[max_expanded]
+        key = (max_expanded, mesh)
+        if key in cache:
+            return cache[key]
         adj = self.vertex_adjacency(max_expanded)
         if adj is None:
             dev = None
         else:
+            import jax
             import jax.numpy as jnp
             indptr, indices = adj
             ptr_t = jnp.int32 if indices.size < 2**31 else jnp.int64
             dev = (jnp.asarray(indptr, ptr_t), jnp.asarray(indices))
-        cache[max_expanded] = dev
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                rep = NamedSharding(mesh, PartitionSpec())
+                dev = tuple(jax.device_put(a, rep) for a in dev)
+        cache[key] = dev
         return dev
 
     # ------------------------------------------------------------------ #

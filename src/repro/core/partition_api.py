@@ -3,38 +3,178 @@
 ``partition(hg, k, method=...)`` returns an int32 assignment; every
 distributed component (GNN halo sharding, embedding-table placement) takes
 an assignment produced here, so partitioners are interchangeable.
+
+Engine selection in one line each (see DESIGN.md for the full ladder):
+``hype`` is the paper-faithful reference, ``hype_batched`` the
+throughput default, ``hype_superstep`` the device-resident large-k
+engine, ``hype_sharded`` the multi-device mesh engine, and the
+remaining methods are the paper's baselines. ``describe_methods()``
+returns these one-liners programmatically.
 """
 from __future__ import annotations
 
 import time
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from .hypergraph import Hypergraph
 from .hype import HypeParams, hype_partition
-from .hype_batched import (BatchedParams, SuperstepParams,
+from .hype_batched import (BatchedParams, ShardedParams, SuperstepParams,
                            hype_batched_partition,
+                           hype_sharded_partition,
                            hype_superstep_partition)
 from .minmax import hashing_partition, minmax_partition, random_partition
 from .shp import shp_partition
 from .multilevel import multilevel_partition
 from . import metrics
 
-METHODS = ("hype", "hype_batched", "hype_superstep", "hype_weighted",
-           "minmax_nb", "minmax_eb", "shp", "multilevel", "random",
-           "hashing")
+# method -> (one-line description, vertex-balance slack). The slack is the
+# engine's documented guarantee on max(part size) - min(part size): the
+# HYPE family and the random baseline are perfectly balanced (<= 1); the
+# streaming/swap baselines run with their papers' slack-100 constraint;
+# hashing and the recursive-bisection multilevel partitioner only promise
+# proportional balance (a fraction of n/k), recorded here as callables of
+# (n, k) so the registry test can enforce exactly what is documented.
+METHOD_INFO: Dict[str, dict] = {
+    "hype": {
+        "desc": "paper-faithful numpy HYPE: heap + per-vertex growth "
+                "steps (fidelity reference, ablations)",
+        "balance_slack": lambda n, k: 1,
+    },
+    "hype_batched": {
+        "desc": "batched-candidate HYPE on the Pallas hype_scores "
+                "kernel (host tiles; bit-stable throughput default)",
+        "balance_slack": lambda n, k: 1,
+    },
+    "hype_jax": {
+        "desc": "sequential HYPE as one jitted lax.while_loop program "
+                "on dense padded arrays (on-device validation, small n)",
+        "balance_slack": lambda n, k: 1,
+    },
+    "hype_parallel": {
+        "desc": "jitted parallel k-way growth (paper §VI future work; "
+                "validation scale)",
+        "balance_slack": lambda n, k: 1,
+    },
+    "hype_superstep": {
+        "desc": "device-resident HYPE: fused score+select supersteps "
+                "grow all k phases concurrently (large-k choice)",
+        "balance_slack": lambda n, k: 1,
+    },
+    "hype_sharded": {
+        "desc": "mesh-sharded superstep HYPE: phase groups sharded over "
+                "a JAX device mesh, one all_gather per superstep",
+        "balance_slack": lambda n, k: 1,
+    },
+    "hype_weighted": {
+        "desc": "numpy HYPE with degree-weighted balancing (HypeParams"
+                "(balance='weighted'))",
+        "balance_slack": lambda n, k: n,    # balances weight, not counts
+    },
+    "minmax_nb": {
+        "desc": "streaming MinMax, vertex-balanced variant (HYPE paper "
+                "footnote 2: slack of up to 100 vertices)",
+        "balance_slack": lambda n, k: 101,  # slack + the vertex placed
+    },
+    "minmax_eb": {
+        "desc": "streaming MinMax, hyperedge-balanced original "
+                "(Alistarh et al., NIPS'15); vertex counts may skew",
+        "balance_slack": lambda n, k: n,    # balances edges, not vertices
+    },
+    "shp": {
+        "desc": "Social-Hash-style iterative balanced swaps from a "
+                "random start (Kabiljo et al., VLDB'17)",
+        "balance_slack": lambda n, k: 1,    # swaps preserve random init
+    },
+    "multilevel": {
+        "desc": "coarsen + recursive bisection + FM refinement "
+                "(group (I) baseline); ~5% bisection tolerance",
+        "balance_slack": lambda n, k: max(1, int(0.35 * (n / k)) + k),
+    },
+    "random": {
+        "desc": "balanced random assignment (quality lower bound)",
+        "balance_slack": lambda n, k: 1,
+    },
+    "hashing": {
+        "desc": "deterministic multiplicative hashing (what production "
+                "systems default to); only statistically balanced",
+        "balance_slack": lambda n, k: n,
+    },
+}
+
+METHODS = tuple(METHOD_INFO)
+
+
+def describe_methods() -> Dict[str, str]:
+    """One-line description per registered method, keyed like ``METHODS``.
+
+    The strings are the engine table of DESIGN.md in programmatic form —
+    surfaces (CLIs, dashboards, docs generators) render them instead of
+    hard-coding an engine list that drifts from the registry.
+    """
+    return {name: info["desc"] for name, info in METHOD_INFO.items()}
+
+
+def balance_slack(method: str, n: int, k: int) -> int:
+    """Documented worst-case ``max - min`` partition-size gap.
+
+    For the perfectly balancing engines this is 1; streaming baselines
+    return their slack constant; hashing/multilevel return proportional
+    bounds. Used by the registry drift test to enforce exactly what each
+    engine documents.
+    """
+    return int(METHOD_INFO[method]["balance_slack"](n, k))
 
 
 def partition(hg: Hypergraph, k: int, method: str = "hype", *,
               seed: int = 0, **kw) -> np.ndarray:
+    """Partition ``hg`` into ``k`` parts; the single entry point.
+
+    Parameters
+    ----------
+    hg : Hypergraph
+        The hypergraph to partition (see ``Hypergraph.from_pins`` /
+        ``from_edge_lists`` for construction).
+    k : int
+        Number of partitions (>= 1).
+    method : str
+        One of ``METHODS``; see ``describe_methods()`` for one-line
+        summaries. Engine choice rule of thumb: ``hype`` for fidelity,
+        ``hype_batched`` (default engine of the HYPE family) for host
+        throughput, ``hype_superstep`` for large k on one accelerator,
+        ``hype_sharded`` for a multi-device mesh.
+    seed : int
+        Seeds every stochastic engine; equal seeds give identical
+        assignments for the same method and knobs.
+    **kw
+        Engine-specific knobs, forwarded to the engine's params
+        (e.g. ``t=16`` for the batched engines, ``devices=4`` for
+        ``hype_sharded``, ``iters=8`` for ``shp``).
+
+    Returns
+    -------
+    np.ndarray
+        Complete int32 assignment of shape ``(hg.n,)`` with values in
+        ``[0, k)``. Balance is engine-specific (``balance_slack``): the
+        HYPE family guarantees ``max - min <= 1`` vertex counts.
+    """
     if method == "hype":
         return hype_partition(hg, k, HypeParams(seed=seed, **kw))
     if method == "hype_batched":
         return hype_batched_partition(hg, k, BatchedParams(seed=seed, **kw))
+    if method == "hype_jax":
+        from .hype_jax import hype_jax_partition
+        return hype_jax_partition(hg, k, seed=seed, **kw)
+    if method == "hype_parallel":
+        from .hype_jax import hype_parallel_partition
+        return hype_parallel_partition(hg, k, seed=seed, **kw)
     if method == "hype_superstep":
         return hype_superstep_partition(
             hg, k, SuperstepParams(seed=seed, **kw))
+    if method == "hype_sharded":
+        return hype_sharded_partition(
+            hg, k, ShardedParams(seed=seed, **kw))
     if method == "hype_weighted":
         return hype_partition(hg, k, HypeParams(seed=seed, balance="weighted", **kw))
     if method == "minmax_nb":
@@ -57,7 +197,9 @@ def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
                          **kw) -> Tuple[dict, np.ndarray]:
     """Partition and measure: returns ``(report, assignment)``.
 
-    ``report`` is ``metrics.all_metrics`` plus ``method``/``k``/
+    Parameters are exactly ``partition``'s. ``report`` is
+    ``metrics.all_metrics`` (``k_minus_1``, ``hyperedge_cut``,
+    ``imbalance``, ``replication_factor``, ...) plus ``method``/``k``/
     ``runtime_s``; ``assignment`` is the int32 array ``partition``
     produced (the pair, not just the dict — callers feed the assignment
     to placement code and the report to dashboards).

@@ -349,6 +349,167 @@ def superstep_device(indptr, indices, assign, cache, delta_ids, delta_vals,
         select_k=select_k, interpret=interpret)
 
 
+# ---------------------------------------------------------- sharded superstep
+# Mesh-sharded superstep program: the per-superstep device work of the
+# sharded engine, run under shard_map over a 1-D device mesh. The CSR
+# image, assignment and score cache are *replicated* on every device;
+# the k phase groups are sharded — each device gathers, scores and
+# selects only its own contiguous group of phases, then ONE all_gather
+# per superstep exchanges (fresh scores | admissions) so every replica
+# applies the same cache writes, conflict resolution and exact-decrement
+# invalidations. Replicas therefore stay bit-identical without ever
+# shipping the (n,)-sized state between devices.
+
+
+@_functools.lru_cache(maxsize=None)
+def _sharded_mesh(num_devices: int):
+    """1-D device mesh over the first ``num_devices`` local devices."""
+    import jax
+    import numpy as _np
+    from jax.sharding import Mesh
+
+    return Mesh(_np.asarray(jax.devices()[:num_devices]), ("shard",))
+
+
+@_functools.lru_cache(maxsize=None)
+def _sharded_program(num_devices: int, group_l: int, tile_l: int,
+                     select_k: int, interpret: bool):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    from repro.kernels.hype_score.kernel import SELECT_PAD
+    from repro.kernels.hype_score.ops import hype_score_select_shard
+
+    kL = group_l
+
+    def step(indptr, indices, assign, cache, delta_ids, delta_vals,
+             dirty_ids, dirty_counts, fresh, bias, pool, fringe,
+             admit_cap):
+        n = assign.shape[0]
+        G, R = fresh.shape
+        t = select_k
+        # 1. host injections (seeds / restarts / their pre-aggregated
+        #    neighbor decrements) — replicated inputs, applied identically
+        #    on every replica.
+        assign = assign.at[jnp.where(delta_ids >= 0, delta_ids, n)].set(
+            delta_vals, mode="drop")
+        cache = cache.at[jnp.where(dirty_ids >= 0, dirty_ids, n)].add(
+            -dirty_counts, mode="drop")
+        # 2. this device's phase-group shard
+        off = jax.lax.axis_index("shard") * kL
+        fresh_l = jax.lax.dynamic_slice_in_dim(fresh, off, kL, 0)
+        pool_l = jax.lax.dynamic_slice_in_dim(pool, off, kL, 0)
+        cap_l = jax.lax.dynamic_slice_in_dim(admit_cap, off, kL, 0)
+        # 3. gather ONLY the shard's fresh-candidate tiles from the
+        #    replicated CSR (assigned neighbors masked in place)
+        flat = fresh_l.reshape(-1)
+        fsafe = jnp.where(flat >= 0, flat, 0)
+        fstart = indptr[fsafe]
+        fdeg = indptr[fsafe + 1] - fstart
+        col = jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0], tile_l),
+                                       1)
+        fvalid = (col < fdeg[:, None]) & (flat >= 0)[:, None]
+        nbr = indices[jnp.where(fvalid, fstart[:, None] + col, 0)]
+        unassigned = assign[jnp.where(fvalid, nbr, 0)] < 0
+        tile = jnp.where(fvalid & unassigned, nbr, -1).astype(jnp.int32)
+        # 4. held pool scores ride along from the replicated cache
+        prev = jnp.where(pool >= 0,
+                         cache[jnp.where(pool >= 0, pool, 0)],
+                         jnp.inf).astype(jnp.float32)
+        # 5. fused score + top-select on the local phase group
+        scores_l, sel_idx, sel_val = hype_score_select_shard(
+            tile.reshape(kL, R, tile_l), fringe, bias, prev,
+            select_k=t, shard_offset=off, interpret=interpret)
+        # 6. map selected slots to vertex ids and apply the per-phase
+        #    admission cap (remaining target): slots are score-ascending,
+        #    so the cap keeps the best ``cap`` admissible ones.
+        slots = jnp.concatenate([fresh_l, pool_l], axis=1)
+        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
+        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
+        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
+        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+        adm = ok & (rank <= cap_l[:, None])
+        adm_ids = jnp.where(adm, cand, -1)              # (kL, t)
+        # 7. the superstep's single collective: all devices exchange
+        #    [fresh scores | proposed admissions] in one all_gather
+        payload = jnp.concatenate(
+            [jax.lax.bitcast_convert_type(scores_l, jnp.int32), adm_ids],
+            axis=1)                                     # (kL, R + t)
+        gathered = jax.lax.all_gather(payload, "shard", axis=0,
+                                      tiled=True)       # (G, R + t)
+        g_scores = jax.lax.bitcast_convert_type(gathered[:, :R],
+                                                jnp.float32)
+        g_adm = gathered[:, R:]                         # (G, t)
+        # 8. fresh scores enter every replica's cache (fresh ids are a
+        #    replicated input, so the write is identical everywhere)
+        flat_g = fresh.reshape(-1)
+        cache = cache.at[jnp.where(flat_g >= 0, flat_g, n)].set(
+            g_scores.reshape(-1), mode="drop")
+        # 9. deterministic conflict resolution: when several phases
+        #    propose the same vertex in one superstep, the LOWEST phase
+        #    id wins; losers keep the vertex out and redraw from their
+        #    pools next superstep. Sort (id, phase) pairs and keep each
+        #    id's first occurrence.
+        ids_f = g_adm.reshape(-1)                       # (G * t,)
+        phase_f = (jax.lax.iota(jnp.int32, G * t) // t)
+        ids_key = jnp.where(ids_f >= 0, ids_f, n)
+        order = jnp.lexsort((phase_f, ids_key))
+        sorted_ids = ids_f[order]
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+        win_sorted = first & (sorted_ids >= 0)
+        winner = jnp.zeros((G * t,), bool).at[order].set(win_sorted)
+        n_conflicts = ((ids_f >= 0) & ~winner).sum().astype(jnp.int32)
+        # 10. apply the winners to every replica's assignment
+        assign = assign.at[jnp.where(winner, ids_f, n)].set(
+            phase_f, mode="drop")
+        # 11. exact-decrement invalidation for the winners: every
+        #     neighbor of a newly assigned vertex has one fewer
+        #     unassigned neighbor. Gather width is the run's tile_l;
+        #     the (rare) winners with more neighbors than that get their
+        #     tail decrements queued by the host into the next
+        #     superstep's dirty buffer, keeping the cache exact.
+        wsafe = jnp.where(winner, ids_f, 0)
+        wstart = indptr[wsafe]
+        wdeg = jnp.minimum(indptr[wsafe + 1] - wstart, tile_l)
+        wcol = jax.lax.broadcasted_iota(jnp.int32, (G * t, tile_l), 1)
+        wvalid = (wcol < wdeg[:, None]) & winner[:, None]
+        wnbr = indices[jnp.where(wvalid, wstart[:, None] + wcol, 0)]
+        cache = cache.at[jnp.where(wvalid, wnbr, n)].add(
+            -1.0, mode="drop")
+        winners = jnp.where(winner, ids_f, -1).reshape(G, t)
+        return assign, cache, winners, n_conflicts
+
+    mesh = _sharded_mesh(num_devices)
+    rep = P()     # every array is replicated; devices differ via axis_index
+    return jax.jit(shard_map(
+        step, mesh=mesh,
+        in_specs=(rep,) * 13, out_specs=(rep, rep, rep, rep),
+        check_rep=False))
+
+
+def sharded_superstep_device(indptr, indices, assign, cache, delta_ids,
+                             delta_vals, dirty_ids, dirty_counts, fresh,
+                             bias, pool, fringe, admit_cap, *,
+                             num_devices: int, group_l: int, tile_l: int,
+                             select_k: int, interpret: bool):
+    """Run one mesh-sharded superstep; see ``_sharded_program``.
+
+    ``fresh``/``bias``/``pool``/``fringe``/``admit_cap`` stack all
+    ``G = num_devices * group_l`` phases; each device processes the
+    contiguous group ``[axis_index * group_l, ...)`` and ONE all_gather
+    per call exchanges (fresh scores | proposed admissions), after which
+    every replica applies identical cache writes, lowest-phase-wins
+    conflict resolution and exact decrements. Returns ``(assign',
+    cache', winners (G, select_k) int32 ids (-1 = none), n_conflicts)``.
+    """
+    return _sharded_program(num_devices, group_l, tile_l, select_k,
+                            interpret)(
+        indptr, indices, assign, cache, delta_ids, delta_vals, dirty_ids,
+        dirty_counts, fresh, bias, pool, fringe, admit_cap)
+
+
 # --------------------------------------------------------------------- JAX
 # (imported lazily by callers that run on device; keeping the import at
 # module level is fine — the repo is a JAX codebase — but the numpy helpers

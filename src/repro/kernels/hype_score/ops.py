@@ -22,6 +22,31 @@ def hype_scores(nbrs, fringe, *, tile_b: int = 256, interpret=None):
     return out[:B]
 
 
+def hype_score_select_shard(nbrs_local, fringe, bias, prev, *,
+                            select_k: int, shard_offset, tile_g: int = 8,
+                            interpret=None):
+    """Fused score + select for one *phase-group shard* of a superstep.
+
+    The mesh-sharded engine stacks all ``G`` phases' per-superstep arrays
+    globally but each device only gathers and scores its own contiguous
+    group of ``gL = nbrs_local.shape[0]`` phases. This wrapper keeps the
+    per-shard offset convention in one place: ``fringe``/``bias``/``prev``
+    are the **global** ``(G, ...)`` stacked arrays, ``nbrs_local`` is the
+    shard's already-gathered ``(gL, R, L)`` tile, and ``shard_offset`` is
+    the shard's first global phase id — typically the traced value
+    ``jax.lax.axis_index(axis) * gL`` under ``shard_map``. Returns the
+    same ``(scores, sel_idx, sel_val)`` triple as ``hype_score_select``,
+    restricted to the shard's ``gL`` phases.
+    """
+    gL = nbrs_local.shape[0]
+    fringe_l = jax.lax.dynamic_slice_in_dim(fringe, shard_offset, gL, 0)
+    bias_l = jax.lax.dynamic_slice_in_dim(bias, shard_offset, gL, 0)
+    prev_l = jax.lax.dynamic_slice_in_dim(prev, shard_offset, gL, 0)
+    return hype_score_select(nbrs_local, fringe_l, bias_l, prev_l,
+                             select_k=select_k, tile_g=tile_g,
+                             interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("select_k", "tile_g",
                                              "interpret"))
 def hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,

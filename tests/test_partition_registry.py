@@ -1,0 +1,50 @@
+"""Registry drift guard: every entry in ``partition_api.METHODS`` must
+produce a valid full assignment within its *documented* balance slack on
+a small synthetic hypergraph, and the description surface
+(``describe_methods``) must cover the registry exactly. A method added
+to ``partition()`` without registry metadata — or whose balance claim
+drifts from its implementation — fails here, not in production."""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.partition_api import (METHOD_INFO, METHODS, balance_slack,
+                                      describe_methods, partition)
+from repro.data.synthetic import powerlaw_hypergraph
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(500, 350, seed=9, max_edge=24,
+                               max_degree=16)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("k", [3, 8])
+def test_registry_method_contract(hg, method, k):
+    a = partition(hg, k, method, seed=0)
+    assert a.shape == (hg.n,)
+    assert a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < k          # full assignment
+    sizes = metrics.partition_sizes(a, k)
+    assert sizes.max() - sizes.min() <= balance_slack(method, hg.n, k), \
+        f"{method} exceeded its documented balance slack"
+
+
+def test_describe_methods_covers_registry():
+    desc = describe_methods()
+    assert tuple(desc) == METHODS                # same names, same order
+    for name, line in desc.items():
+        assert isinstance(line, str) and len(line) > 10, name
+        assert "\n" not in line                  # one-liners
+
+
+def test_registry_metadata_complete():
+    for name, info in METHOD_INFO.items():
+        assert callable(info["balance_slack"]), name
+        assert info["balance_slack"](1000, 8) >= 1, name
+
+
+def test_unknown_method_raises(hg):
+    with pytest.raises(ValueError, match="unknown method"):
+        partition(hg, 4, "definitely_not_registered")
