@@ -40,6 +40,8 @@ SUPERSTEP_TS = (8, 16)   # superstep engine: admissions per phase per step
 SHARDED_K = 32           # device-count scaling axis runs at the large k
 SHARDED_T = 16
 SHARDED_DEVICES = (1, 2, 4)   # clamped to the simulated mesh size
+PIPELINE_K = 32          # pipeline-depth axis: k/t of the acceptance row
+PIPELINE_T = 16          # (depth-1 vs default depth-2, host/device split)
 JAX_N = 300              # hype_jax validation row size
 
 
@@ -71,7 +73,7 @@ def run():
     rows = []
     meta = {"quick": QUICK, "repeats": REPEATS,
             "adjacency_build_s": {}, "speedups": {},
-            "superstep_stats": {}, "sharded_stats": {}}
+            "superstep_stats": {}, "sharded_stats": {}, "pipeline": {}}
 
     # warm the Pallas interpret traces once (process-wide)
     import jax
@@ -134,9 +136,45 @@ def run():
                     "h2d_bytes_per_superstep": round(
                         stt.host_to_device_bytes
                         / max(stt.supersteps, 1)),
+                    "host_s": round(stt.host_s, 4),
+                    "device_s": round(stt.device_s, 4),
+                    "pipeline_stalls": stt.pipeline_stalls,
+                    "stale_redraws": stt.stale_redraws,
                 }
                 if k == SHARDED_K and t == SHARDED_T:
                     superstep_ref = (dt, metrics.k_minus_1(hg, a))
+                # pipeline-depth axis: depth-1 (lock-step) vs the
+                # default double-buffered engine on the acceptance row,
+                # with the host/device wall-clock split of each
+                if k == PIPELINE_K and t == PIPELINE_T:
+                    (a1, st1), dt1 = _run(
+                        hype_superstep_partition, hg, k,
+                        SuperstepParams(seed=0, t=t, pipeline_depth=1),
+                        return_stats=True)
+                    km1_d1 = metrics.k_minus_1(hg, a1)
+                    rows.append(_row(
+                        name, hg, k, f"hype_superstep_t{t}_pd1", dt1,
+                        a1, {"t": t, "pipeline_depth": 1,
+                             "speedup_vs_hype": round(
+                                 base["runtime_s"] / max(dt1, 1e-9), 2),
+                             "km1_ratio_vs_hype": round(
+                                 rec_ratio(a1, base, hg), 4)}))
+                    meta["pipeline"][f"{name}_k{k}_t{t}"] = {
+                        "depth1_s": round(dt1, 4),
+                        "depth2_s": round(dt, 4),
+                        "speedup_depth2_vs_depth1": round(
+                            dt1 / max(dt, 1e-9), 3),
+                        "km1_ratio_depth2_vs_depth1": round(
+                            rec["k_minus_1"] / max(km1_d1, 1), 4),
+                        "depth1_host_s": round(st1.host_s, 4),
+                        "depth1_device_s": round(st1.device_s, 4),
+                        "depth2_host_s": round(stt.host_s, 4),
+                        "depth2_device_s": round(stt.device_s, 4),
+                        "depth2_stale_redraws": stt.stale_redraws,
+                        "depth2_pipeline_stalls": stt.pipeline_stalls,
+                        "supersteps_depth1": st1.supersteps,
+                        "supersteps_depth2": stt.supersteps,
+                    }
             # device-count scaling axis: the mesh-sharded engine at the
             # large k (CPU-simulated mesh; the row records architecture
             # metrics — collective traffic, conflicts — alongside time)
@@ -161,6 +199,9 @@ def run():
                     rows.append(rec)
                     meta["sharded_stats"][f"{name}_k{k}_d{d}"] = {
                         "supersteps": stt.supersteps,
+                        "host_s": round(stt.host_s, 4),
+                        "device_s": round(stt.device_s, 4),
+                        "stale_redraws": stt.stale_redraws,
                         "collectives": stt.collectives,
                         "collective_bytes": stt.collective_bytes,
                         "collective_bytes_per_superstep": round(

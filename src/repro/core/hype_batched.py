@@ -29,7 +29,11 @@ TPU the same call compiles to the VPU tile loop the kernel was built for.
 The module holds the top three rungs of the engine ladder (DESIGN.md §1):
 ``hype_batched_partition`` (host tiles), ``hype_superstep_partition``
 (device-resident image, §4b) and ``hype_sharded_partition`` (phase
-groups sharded over a device mesh, §4c).
+groups sharded over a device mesh, §4c). The two device engines share
+the double-buffered superstep pipeline of §4d (``_run_pipeline``):
+dispatch/harvest-split device calls with on-device admission, so host
+orchestration overlaps device compute; ``pipeline_depth=1`` reproduces
+the lock-step schedule bit for bit.
 """
 from __future__ import annotations
 
@@ -79,6 +83,16 @@ class BatchedStats:
     #                                 devices x global payload per superstep
     admission_conflicts: int = 0    # proposed admissions lost to the
     #                                 lowest-phase-wins conflict rule
+    # pipeline counters (superstep/sharded engines):
+    host_s: float = 0.0             # wall-clock spent in host packing +
+    #                                 harvest mirroring (overlappable)
+    device_s: float = 0.0           # wall-clock blocked waiting on device
+    #                                 results at harvest time
+    pipeline_stalls: int = 0        # rounds where the host could pack
+    #                                 nothing and the device went idle
+    stale_redraws: int = 0          # pool slots skipped on device because
+    #                                 an interleaved superstep of the
+    #                                 pipeline had already assigned them
 
 
 class _BatchedState:
@@ -180,27 +194,19 @@ class _BatchedState:
                 fresh[sizes == sz])
 
     # ------------------------------------------------------------------ #
-    def draw_candidates(self, need: int,
-                        buckets: Optional[dict] = None,
-                        in_pool: Optional[np.ndarray] = None) -> np.ndarray:
+    def draw_candidates(self, need: int) -> np.ndarray:
         """Up to ``need`` distinct universe vertices from smallest edges.
 
         One vectorized pass: pull edges smallest-size-first under a pin
         budget, scan all their pins at once, retire dead edges (no
         unassigned pin left — forever), requeue the still-live ones at the
         bucket fronts so they are rescanned first next time (the heap's
-        requeue, without the heap). ``buckets`` selects which active-edge
-        queues to draw from (the superstep engine keeps one dict per
-        concurrently growing phase); default is the single shared dict.
-        ``in_pool`` selects the pool-membership mask that filters
-        already-held candidates (the sharded engine keeps one per device
-        group, so groups draw independently — by design they may overlap,
-        which is what the admission conflict rule resolves).
+        requeue, without the heap). Serves the classic batched engine;
+        the superstep engines draw all phases at once from the flat
+        bucket store instead (``pack_superstep``).
         """
-        if buckets is None:
-            buckets = self.buckets
-        if in_pool is None:
-            in_pool = self.in_pool
+        buckets = self.buckets
+        in_pool = self.in_pool
         if need <= 0:
             return np.empty(0, dtype=np.int64)
         budget = max(4 * need, 512)
@@ -382,41 +388,77 @@ class SuperstepParams(BatchedParams):
     # fresh candidate rows per phase per superstep; None = max(8, t) so
     # refills keep up with the admission drain at any t
     rows: Optional[int] = None
+    # in-flight supersteps of the double-buffered pipeline (DESIGN.md
+    # §4d). 1 = lock-step (bit-identical to the pre-pipeline engine);
+    # 2 = the default overlap: while the device runs superstep N the
+    # host mirrors superstep N-1's admissions and packs superstep N+1.
+    pipeline_depth: int = 2
+
+
+# Flat bucket-store key layout: one sorted int64 per queued (phase,
+# class, edge) activation — phase in the top bits, the power-of-two
+# size-class exponent below it, and a sequence number in the low bits.
+# Keeping the store sorted by this key makes "draw smallest classes
+# first, FIFO within a class, requeues at the front" a pure prefix scan
+# per phase: back-appends allocate increasing sequence numbers, front
+# requeues allocate decreasing ones.
+_PH_SHIFT = 50
+_CLS_SHIFT = 44
+_SEQ_START = np.int64(1) << 43
 
 
 class _SuperstepState(_BatchedState):
     """Adds the device-resident graph image and per-phase growth state.
 
     The host keeps only ids and flags (assignment mirror, pool id lists,
-    per-phase active-edge buckets, a has-been-scored bitmask); every
+    the flat active-edge bucket store, a has-been-scored bitmask); every
     *score* lives in the device cache and is maintained exactly by the
-    decrement rule in ``scoring.superstep_device`` — no per-phase wipe.
+    decrement rule in ``scoring._pipeline_program`` — no per-phase wipe.
+    Admissions are selected, capped and applied *on device*
+    (``dispatch``); the host mirrors them at ``harvest`` time, possibly
+    several supersteps later, which is what lets the pipeline driver
+    overlap host orchestration with device compute.
     """
 
     def __init__(self, hg: Hypergraph, k: int, p: SuperstepParams,
                  mesh=None):
         super().__init__(hg, k, p)
+        if k >= 1 << (63 - _PH_SHIFT):      # bucket-store key width
+            self.dev = None
+            return
         self.dev = hg.device_adjacency(mesh=mesh)
         if self.dev is None:       # hub-expansion guard tripped on host
             return
         import jax
         import jax.numpy as jnp
+        from repro.kernels._compat import pallas_interpret
 
         n, m = hg.n, hg.m
-        self.interpret = jax.default_backend() != "tpu"
+        self.interpret = pallas_interpret()
         self.dev_assign = jnp.full((n,), -1, jnp.int32)
         self.dev_cache = jnp.full((n,), -1.0, jnp.float32)
+        self.dev_acc = jnp.zeros((k,), jnp.int32)
         if mesh is not None:       # replicate the mutable image too
             from jax.sharding import NamedSharding, PartitionSpec
             rep = NamedSharding(mesh, PartitionSpec())
             self.dev_assign = jax.device_put(self.dev_assign, rep)
             self.dev_cache = jax.device_put(self.dev_cache, rep)
+            self.dev_acc = jax.device_put(self.dev_acc, rep)
         self.cache_scored = np.zeros(n, dtype=bool)
         self.pools = [np.empty(0, dtype=np.int64) for _ in range(k)]
-        self.phase_buckets: list = [dict() for _ in range(k)]
+        # flat (phase, class, edge) bucket store — two parallel arrays
+        # sorted by the composite key above, replacing the per-phase
+        # dict-of-deques
+        self.bq_key = np.empty(0, dtype=np.int64)
+        self.bq_edge = np.empty(0, dtype=np.int64)
+        self._bq_pending: list = []     # rows awaiting the lazy merge
+        self._seq_back = np.int64(_SEQ_START)
+        self._seq_front = np.int64(_SEQ_START) - 1
         self.edge_queued = np.zeros((k, m), dtype=bool)
         self.delta_ids: list = []
         self.delta_vals: list = []
+        self.pending_dirty: list = []   # queued winner decrements
+        self._excl_scratch = np.zeros(n, dtype=bool)
         deg = np.diff(self.adj[0])
         self.deg = deg
         # One gather-width per run: every distinct shape retraces the
@@ -435,9 +477,29 @@ class _SuperstepState(_BatchedState):
         self._dirty_ratchet = 1 << int(np.ceil(np.log2(expect + 1)))
         self.stats.device_image_bytes = int(
             self.dev[0].nbytes + self.dev[1].nbytes
-            + self.dev_assign.nbytes + self.dev_cache.nbytes)
+            + self.dev_assign.nbytes + self.dev_cache.nbytes
+            + self.dev_acc.nbytes)
 
     # ------------------------------------------------------------------ #
+    def _pmask(self, g: int) -> np.ndarray:
+        """Pool-membership mask governing phase ``g``'s draws.
+
+        Engine-wide for the single-device engine; the sharded engine
+        overrides this with the per-device-group mask.
+        """
+        return self.in_pool
+
+    def _restart_mask(self) -> np.ndarray:
+        """Mask a restart injection must avoid: every engine pool.
+
+        Injections are applied to the device image with an unconditional
+        scatter, so they must never name a vertex an in-flight superstep
+        could still admit — i.e. anything in ANY pool. For the
+        single-device engine that is exactly ``in_pool``; the sharded
+        engine unions its per-group masks.
+        """
+        return self.in_pool
+
     def assign_now(self, vs: np.ndarray, phase: int) -> None:
         """Assign ``vs`` to ``phase``; queue the device delta + dirtying."""
         vs = np.asarray(vs, dtype=np.int64)
@@ -455,8 +517,8 @@ class _SuperstepState(_BatchedState):
         """Queue incident edges for a whole superstep's admissions at once.
 
         ``vs``/``phases`` are parallel arrays; one CSR gather + one
-        lexsort covers every (phase, edge) activation of the superstep
-        instead of a per-phase python pass.
+        lexsort appends every fresh (phase, edge) activation to the back
+        of the flat sorted bucket store — no per-phase python pass.
         """
         edges, owner = scoring.gather_csr_rows(
             self.hg.v2e_indptr, self.hg.v2e_indices, vs)
@@ -473,28 +535,121 @@ class _SuperstepState(_BatchedState):
         self.edge_queued[ph, edges] = True
         # power-of-two size classes instead of exact sizes: smallest-first
         # drawing is a heuristic, and ~12 classes keep the number of
-        # (phase, class) groups — hence python-level queue churn — small.
+        # (phase, class) segments small.
         sizes = self.edge_sizes[edges]
         cls = np.where(
-            sizes <= 1, np.int64(1),
-            np.int64(1) << np.ceil(
-                np.log2(np.maximum(sizes, 2))).astype(np.int64))
+            sizes <= 1, np.int64(0),
+            np.ceil(np.log2(np.maximum(sizes, 2))).astype(np.int64))
         order = np.lexsort((cls, ph))
         ph, edges, cls = ph[order], edges[order], cls[order]
-        cuts = np.flatnonzero((np.diff(ph) != 0)
-                              | (np.diff(cls) != 0)) + 1
-        starts = np.concatenate([[0], cuts])
-        for start, grp in zip(starts, np.split(edges, cuts)):
-            self.phase_buckets[int(ph[start])].setdefault(
-                int(cls[start]), collections.deque()).append(grp)
+        seq = np.arange(self._seq_back, self._seq_back + edges.size,
+                        dtype=np.int64)
+        self._seq_back += edges.size
+        self._store_insert(
+            (ph << _PH_SHIFT) | (cls << _CLS_SHIFT) | seq, edges)
+
+    # ------------------------------------------------------ bucket store
+    def _store_insert(self, key: np.ndarray, edges: np.ndarray) -> None:
+        """Queue rows for the store; merged lazily at the next draw.
+
+        Batching the merges (one sorted-merge per pack instead of one
+        per activation) keeps store maintenance O(store) *per superstep*
+        rather than per call — visibility is identical because draws
+        only happen at pack time, after ``_store_flush``.
+        """
+        if key.size:
+            self._bq_pending.append((key, edges))
+
+    def _store_flush(self) -> None:
+        if not self._bq_pending:
+            return
+        key = np.concatenate([kk for kk, _ in self._bq_pending])
+        edges = np.concatenate([ee for _, ee in self._bq_pending])
+        self._bq_pending = []
+        order = np.argsort(key, kind="stable")
+        key, edges = key[order], edges[order]
+        if self.bq_key.size == 0:
+            self.bq_key, self.bq_edge = key, edges
+            return
+        pos = np.searchsorted(self.bq_key, key)
+        self.bq_key = np.insert(self.bq_key, pos, key)
+        self.bq_edge = np.insert(self.bq_edge, pos, edges)
+
+    def _store_take(self, budget: np.ndarray):
+        """Greedy smallest-class-first prefix take for every phase.
+
+        ``budget`` is the per-phase pin budget; each queued edge
+        contributes its power-of-two class value (the same accounting
+        the dict-of-deques draw used). Only each phase's front slice
+        (at most ``budget`` rows — every edge costs >= 1 unit) is ever
+        decoded, so the take is O(sum budgets + k log store), not
+        O(store). Returns the taken rows' ``(edges, ph, cls_log)``
+        columns, phase-major (the store is key-sorted), and drops them
+        from the store.
+        """
+        self._store_flush()
+        key = self.bq_key
+        if key.size == 0 or not budget.any():
+            empty = np.empty(0, dtype=np.int64)
+            return empty, empty, empty
+        k = self.k
+        bounds = np.searchsorted(
+            key, np.arange(k + 1, dtype=np.int64) << _PH_SHIFT)
+        start = bounds[:k]
+        cap = np.minimum(bounds[1:] - start, budget)
+        tot = int(cap.sum())
+        if tot == 0:
+            empty = np.empty(0, dtype=np.int64)
+            return empty, empty, empty
+        head = np.cumsum(cap) - cap
+        local = np.arange(tot, dtype=np.int64) - np.repeat(head, cap)
+        rows = np.repeat(start, cap) + local
+        ph_r = np.repeat(np.arange(k, dtype=np.int64), cap)
+        ckey = key[rows]
+        cls_log = (ckey >> _CLS_SHIFT) & np.int64(63)
+        csize = np.int64(1) << cls_log
+        cum = np.cumsum(csize)
+        excl = cum - csize
+        base = np.zeros(k, dtype=np.int64)
+        has = cap > 0
+        base[has] = excl[head[has]]
+        take = (excl - base[ph_r]) < budget[ph_r]
+        tk = rows[take]
+        edges_t, ph_t, cls_t = self.bq_edge[tk], ph_r[take], cls_log[take]
+        if tk.size:     # drop taken rows NOW — restarts may insert
+            keep = np.ones(key.size, dtype=bool)
+            keep[tk] = False
+            self.bq_key = key[keep]
+            self.bq_edge = self.bq_edge[keep]
+        return edges_t, ph_t, cls_t
+
+    def _store_requeue(self, rq_ph: list, rq_cls: list,
+                       rq_edge: list) -> None:
+        """Requeue still-live taken rows at their queue fronts."""
+        if not rq_ph:
+            return
+        ph = np.concatenate(rq_ph)
+        cls = np.concatenate(rq_cls)
+        edges = np.concatenate(rq_edge)
+        seq = np.arange(self._seq_front - edges.size + 1,
+                        self._seq_front + 1, dtype=np.int64)
+        self._seq_front -= edges.size
+        key = (ph << _PH_SHIFT) | (cls << _CLS_SHIFT) | seq
+        order = np.argsort(key, kind="stable")
+        self._store_insert(key[order], edges[order])
 
     def take_delta(self, cap: int):
-        """Drain up to ``cap`` queued (id, phase) assignment pairs."""
+        """Drain up to ``cap`` queued (id, phase) assignment pairs.
+
+        FIFO across calls: an overflowing drain leaves the tail queued
+        (int64 ids / int32 phases preserved) for the next superstep.
+        """
         if not self.delta_ids:
             return (np.empty(0, dtype=np.int64),
                     np.empty(0, dtype=np.int32))
-        ids = np.concatenate(self.delta_ids)
-        vals = np.concatenate(self.delta_vals)
+        ids = np.concatenate(self.delta_ids).astype(np.int64, copy=False)
+        vals = np.concatenate(self.delta_vals).astype(np.int32,
+                                                      copy=False)
         if ids.size <= cap:
             self.delta_ids, self.delta_vals = [], []
             return ids, vals
@@ -539,49 +694,289 @@ class _SuperstepState(_BatchedState):
         dcnt[:uniq.size] = counts[uniq]
         return delta, vals, dirty, dcnt
 
-    def superstep_call(self, fresh, bias, pool_arr, fringe, delta_cap,
-                       select_k):
-        """One fused device call; updates the device image in place."""
-        delta, vals, dirty, dcnt = self._pack_delta_dirty(delta_cap)
-        tile_l = self.tile_l
+    # ---------------------------------------------------- pipeline hooks
+    def pack_superstep(self, active, R: int, P: int, t: int,
+                       targets: np.ndarray, acc: np.ndarray):
+        """Host half of one superstep: draw, dedup, tile-pack, restart.
+
+        One flat store scan + ONE pins gather covers every active
+        phase's candidate draw (stage A, assignment-independent); a thin
+        rotation-ordered pass then applies the order-sensitive pieces —
+        edge liveness, candidate acceptance against the live pool masks,
+        and random restarts (stage B). Mutates pools/masks/acc for the
+        injections and returns ``(packed, injected)`` where ``packed``
+        is ``(fresh, bias, pool_arr, fresh_ids)`` or None when no phase
+        had anything to score.
+        """
+        kG = self.k
+        rot = self.stats.supersteps % active.size
+        order = np.concatenate([active[rot:], active[:rot]])
+        # stage 0: drop ids that went stale (admitted meanwhile) from
+        # the held pools, then size each phase's draw
+        need = np.zeros(kG, dtype=np.int64)
+        budget = np.zeros(kG, dtype=np.int64)
+        for g in order:
+            gi = int(g)
+            ids = self.pools[gi]
+            if ids.size:
+                keep = self.assignment[ids] < 0
+                if not keep.all():
+                    self._pmask(gi)[ids[~keep]] = False
+                    ids = ids[keep]
+                    self.pools[gi] = ids
+            need[gi] = min(R, P - ids.size)
+            if need[gi] > 0:
+                budget[gi] = max(4 * need[gi], 512)
+        # stage A: one prefix take over the sorted store + one CSR
+        # gather for every taken edge of every phase
+        edges_t, ph_t, cls_t = self._store_take(budget)
+        pins, prow = scoring.gather_csr_rows(
+            self.hg.e2v_indptr, self.hg.e2v_indices, edges_t)
+        pins = pins.astype(np.int64)
+        self.stats.edges_scanned += int(pins.size)
+        edge_lo = np.searchsorted(ph_t, np.arange(kG + 1, dtype=np.int64))
+        pin_lo = np.searchsorted(prow, edge_lo)
+        # per-phase first-occurrence dedup of the pin streams. The
+        # acceptance filters below are per-pin properties, so deduping
+        # before filtering equals the old filter-then-dedup, row for row.
+        if pins.size:
+            pph = ph_t[prow]
+            _, first = np.unique(pph * np.int64(self.hg.n) + pins,
+                                 return_index=True)
+            first = np.sort(first)
+            cand_all = pins[first]
+            cand_lo = np.searchsorted(pph[first],
+                                      np.arange(kG + 1, dtype=np.int64))
+        else:
+            cand_all = pins
+            cand_lo = np.zeros(kG + 1, dtype=np.int64)
+        # stage B: rotation-ordered liveness / acceptance / restarts
+        fresh = np.full((kG, R), -1, dtype=np.int32)
+        bias = np.full((kG, R), np.inf, dtype=np.float32)
+        pool_arr = np.full((kG, P), -1, dtype=np.int32)
+        fresh_parts: list = []
+        rq_ph: list = []
+        rq_cls: list = []
+        rq_edge: list = []
+        injected = 0
+        packed_any = False
+        rmask = None    # injection-safety mask, computed at most once
+        #                 per pack (the sharded union is O(devices * n))
+        for g in order:
+            gi = int(g)
+            e0, e1 = int(edge_lo[gi]), int(edge_lo[gi + 1])
+            if e1 > e0:     # edge liveness at this phase's turn
+                p0, p1 = int(pin_lo[gi]), int(pin_lo[gi + 1])
+                unas = self.assignment[pins[p0:p1]] < 0
+                live = np.bincount(prow[p0:p1][unas] - e0,
+                                   minlength=e1 - e0) > 0
+                eg = edges_t[e0:e1]
+                if not live.all():
+                    self.edge_dead[eg[~live]] = True    # dead forever
+                if live.any():
+                    rq_ph.append(ph_t[e0:e1][live])
+                    rq_cls.append(cls_t[e0:e1][live])
+                    rq_edge.append(eg[live])
+            pmask = self._pmask(gi)
+            cg = cand_all[int(cand_lo[gi]):int(cand_lo[gi + 1])]
+            drawn = cg
+            if cg.size:
+                okc = (self.assignment[cg] < 0) & ~pmask[cg]
+                drawn = cg[okc][:need[gi]]
+            ids = self.pools[gi]
+            miss = np.empty(0, dtype=np.int64)
+            if drawn.size:
+                pmask[drawn] = True
+                if rmask is not None and rmask is not pmask:
+                    rmask[drawn] = True     # keep the union mask live
+                scored = self.cache_scored[drawn]
+                hits, miss = drawn[scored], drawn[~scored]
+                if hits.size:       # cross-phase reuse: already cached
+                    self.stats.cache_hits += int(hits.size)
+                    ids = np.concatenate([ids, hits])
+            if ids.size == 0 and miss.size == 0:
+                # shattered remainder: seed fresh growth points directly
+                if rmask is None:
+                    rmask = self._restart_mask()
+                vs = self.random_unassigned(
+                    min(t, int(targets[gi] - acc[gi])), in_pool=rmask)
+                if vs.size:
+                    self.stats.random_restarts += 1
+                    self.assign_now(vs, gi)
+                    self.activate_phase(vs, gi)
+                    acc[gi] += vs.size
+                    injected += int(vs.size)
+                continue
+            fresh[gi, :miss.size] = miss
+            bias[gi, :miss.size] = np.where(
+                self.deg[miss] > self.tile_l, scoring.TRUNC_PENALTY, 0.0)
+            pool_arr[gi, :ids.size] = ids
+            self.pools[gi] = np.concatenate([ids, miss])
+            fresh_parts.append(miss)
+            self.stats.kernel_rows += int(miss.size)
+            packed_any = True
+        self._store_requeue(rq_ph, rq_cls, rq_edge)
+        if not packed_any:
+            return None, injected
+        fresh_ids = (np.concatenate(fresh_parts) if fresh_parts
+                     else np.empty(0, dtype=np.int64))
+        return (fresh, bias, pool_arr, fresh_ids), injected
+
+    def dispatch(self, fresh, bias, pool_arr, fringe, fresh_ids,
+                 targets_i32, delta_cap: int, select_k: int):
+        """Launch one superstep on the device (async); returns a handle.
+
+        JAX's async dispatch returns immediately — the returned handle's
+        arrays are futures the driver blocks on only at ``harvest``, so
+        the host keeps packing while the device computes. The previous
+        (donated) image arrays ride the handle: deleting a donated
+        buffer synchronizes with the execution consuming it, so their
+        last reference must not drop before the harvest-time block.
+        """
+        tails = self.pending_dirty
+        self.pending_dirty = []
+        delta, vals, dirty, dcnt = self._pack_delta_dirty(
+            delta_cap, extra_dirty=tails)
         self.stats.host_to_device_bytes += (
             fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
-            + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes)
+            + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes
+            + targets_i32.nbytes)
         self.stats.supersteps += 1
         self.stats.kernel_calls += 1
-        self.dev_assign, self.dev_cache, sel_idx, sel_val = \
-            scoring.superstep_device(
-                self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
-                delta, vals, dirty, dcnt, fresh, bias, pool_arr, fringe,
-                tile_l=tile_l, select_k=select_k,
-                interpret=self.interpret)
-        return np.asarray(sel_idx), np.asarray(sel_val)
+        donated = (self.dev_assign, self.dev_cache, self.dev_acc)
+        (self.dev_assign, self.dev_cache, self.dev_acc, winners,
+         n_stale) = scoring.pipeline_superstep_device(
+            self.dev[0], self.dev[1], *donated, delta, vals, dirty,
+            dcnt, fresh, bias, pool_arr, fringe, targets_i32,
+            tile_l=self.tile_l, select_k=select_k,
+            interpret=self.interpret)
+        return winners, n_stale, fresh_ids, donated
+
+    def harvest(self, handle, acc: np.ndarray, targets: np.ndarray,
+                exclude=()) -> int:
+        """Block on one in-flight superstep and mirror its admissions.
+
+        The only blocking transfer of the steady state: everything else
+        the driver does (packing superstep N+1) happens while the device
+        still computes superstep N. Admission mirroring is fully
+        vectorized — no per-slot python loop. ``exclude`` carries the
+        fresh-id arrays of the supersteps still in flight: their scores
+        were computed *after* this superstep's winners were applied, so
+        the queued winner decrements must skip them (double-decrement
+        otherwise).
+        """
+        import time as _time
+
+        winners_dev, stale_dev, fresh_ids = handle[:3]
+        t0 = _time.perf_counter()
+        winners = np.asarray(winners_dev)
+        n_stale = int(stale_dev)
+        self.stats.device_s += _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        self.stats.stale_redraws += n_stale
+        if fresh_ids.size:
+            self.cache_scored[fresh_ids] = True
+        kG, t = winners.shape
+        flat = winners.reshape(-1).astype(np.int64)
+        mask = flat >= 0
+        vs = flat[mask]
+        progress = int(vs.size)
+        if vs.size:
+            ph = np.repeat(np.arange(kG, dtype=np.int64), t)[mask]
+            self.assignment[vs] = ph.astype(np.int32)
+            self._release_members(vs, ph)
+            acc += np.bincount(ph, minlength=kG)
+            self.activate_many(vs, ph)
+            self._queue_decrements(vs, exclude)
+            for g in np.unique(ph):
+                if acc[g] >= targets[g]:    # phase done: release pool
+                    gi = int(g)
+                    self._pmask(gi)[self.pools[gi]] = False
+                    self.pools[gi] = np.empty(0, dtype=np.int64)
+        self.stats.host_s += _time.perf_counter() - t0
+        return progress
+
+    def _release_members(self, vs: np.ndarray, ph: np.ndarray) -> None:
+        """Clear pool membership for freshly mirrored winners."""
+        self.in_pool[vs] = False
+
+    def _filter_rescored(self, nbrs: np.ndarray, exclude) -> np.ndarray:
+        """Drop ids fresh-rescored by a still-in-flight superstep.
+
+        Their cache entries are written *after* the winners applied, so
+        they already reflect the admissions — decrementing them again
+        would double-count. O(|nbrs| + |exclude|) via a reusable
+        boolean scratch.
+        """
+        parts = [e for e in exclude if e.size]
+        if not parts or nbrs.size == 0:
+            return nbrs
+        ex = np.concatenate(parts)
+        scratch = self._excl_scratch
+        scratch[ex] = True
+        out = nbrs[~scratch[nbrs]]
+        scratch[ex] = False
+        return out
+
+    def _queue_decrements(self, vs: np.ndarray, exclude=()) -> None:
+        """Queue the winners' neighbor decrements for the next dispatch.
+
+        The full multiset — one CSR gather, pre-aggregated into
+        (unique id, count) pairs by ``_pack_delta_dirty`` — exactly the
+        lock-step engine's decrement schedule at depth 1; ids rescored
+        by an in-flight superstep are excluded (see
+        ``_filter_rescored``).
+        """
+        nbrs, _ = scoring.gather_csr_rows(self.adj[0], self.adj[1], vs)
+        if nbrs.size == 0:
+            return
+        nbrs = self._filter_rescored(nbrs.astype(np.int64), exclude)
+        if nbrs.size:
+            self.pending_dirty.append(nbrs)
 
 
-def _run_superstep(hg: Hypergraph, k: int, p: SuperstepParams):
+def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
+                  num_devices: Optional[int] = None):
     """Grow all ``k`` partitions concurrently; returns (assignment, state).
 
-    Each *superstep* is one fused device call that scores the stacked
-    fresh-candidate tiles of every growing phase and selects each phase's
-    ``t`` admissions (paper §VI k-way growth on the fast engine).
+    The shared double-buffered superstep driver of the device engines
+    (DESIGN.md §4d). Each *superstep* is one fused device call that
+    scores the stacked fresh-candidate tiles of every growing phase and
+    admits each phase's top-``t`` on device (paper §VI k-way growth).
+    Up to ``p.pipeline_depth`` supersteps stay in flight: while the
+    device computes superstep N, the host mirrors superstep N-1's
+    admissions and speculatively draws/packs superstep N+1; proposals
+    that went stale in between are skipped on device by the
+    deterministic redraw rule, so results are seeded-deterministic at
+    any depth and ``pipeline_depth=1`` reproduces the lock-step engine
+    bit for bit.
     """
-    from repro.kernels.hype_score.kernel import SELECT_PAD
+    import time as _time
 
-    st = _SuperstepState(hg, k, p)
+    if num_devices is None:
+        kG = k
+        st = _SuperstepState(hg, k, p)
+    else:
+        kL = -(-k // num_devices)
+        kG = kL * num_devices
+        st = _ShardedState(hg, kG, p, num_devices)
     if st.dev is None:
         return None, None                       # caller falls back
     n = hg.n
     base, rem = divmod(n, k)
-    targets = base + (np.arange(k) < rem).astype(np.int64)
-    acc = np.zeros(k, dtype=np.int64)
+    targets = np.zeros(kG, dtype=np.int64)
+    targets[:k] = base + (np.arange(k) < rem)
+    targets_i32 = targets.astype(np.int32)
+    acc = np.zeros(kG, dtype=np.int64)
     R, P, t = p.rows, p.pool_cap, p.t
-    delta_cap = max(2 * k * t, k)
-    fringe = np.full((k, 1), -1, dtype=np.int32)   # fringe-free scoring
+    delta_cap = max(2 * kG * t, kG)
+    depth = max(1, int(p.pipeline_depth))
+    fringe = np.full((kG, 1), -1, dtype=np.int32)   # fringe-free scoring
 
     # seed every phase with one random vertex (paper §III-B1 step 1)
     seeds = st.random_unassigned(int((targets > 0).sum()))
     gi = 0
-    for g in range(k):
+    for g in range(kG):
         if targets[g] == 0 or gi >= seeds.size:
             continue
         v = seeds[gi:gi + 1]
@@ -590,103 +985,60 @@ def _run_superstep(hg: Hypergraph, k: int, p: SuperstepParams):
         st.activate_phase(v, g)
         acc[g] += 1
 
+    inflight: collections.deque = collections.deque()
+    cur_depth = depth
     while True:
         active = np.flatnonzero(acc < targets)
         if active.size == 0:
             break
         progress = 0
-        fresh = np.full((k, R), -1, dtype=np.int32)
-        bias = np.full((k, R), np.inf, dtype=np.float32)
-        pool_arr = np.full((k, P), -1, dtype=np.int32)
-        fresh_snap: list = [None] * k
-        pool_snap: list = [None] * k
-        # rotate the draw order so no phase always gets first pick
-        rot = st.stats.supersteps % active.size
-        for g in np.concatenate([active[rot:], active[:rot]]):
-            ids = st.pools[g]
-            need = min(R, P - ids.size)
-            drawn = st.draw_candidates(need, st.phase_buckets[g]) \
-                if need > 0 else np.empty(0, dtype=np.int64)
-            miss = np.empty(0, dtype=np.int64)
-            if drawn.size:
-                st.in_pool[drawn] = True
-                scored = st.cache_scored[drawn]
-                hits, miss = drawn[scored], drawn[~scored]
-                if hits.size:       # cross-phase reuse: already cached
-                    st.stats.cache_hits += int(hits.size)
-                    ids = np.concatenate([ids, hits])
-                    st.pools[g] = ids
-            if ids.size == 0 and miss.size == 0:
-                # shattered remainder: seed fresh growth points directly
-                vs = st.random_unassigned(
-                    min(t, int(targets[g] - acc[g])))
-                if vs.size:
-                    st.stats.random_restarts += 1
-                    st.assign_now(vs, g)
-                    st.activate_phase(vs, g)
-                    acc[g] += vs.size
-                    progress += int(vs.size)
-                continue
-            fresh[g, :miss.size] = miss
-            bias[g, :miss.size] = np.where(
-                st.deg[miss] > st.tile_l, scoring.TRUNC_PENALTY, 0.0)
-            pool_arr[g, :ids.size] = ids
-            fresh_snap[g] = miss
-            pool_snap[g] = ids
-            st.stats.kernel_rows += int(miss.size)
-
-        if any(f is not None for f in fresh_snap):
-            sel_idx, sel_val = st.superstep_call(
-                fresh, bias, pool_arr, fringe, delta_cap, select_k=t)
-            adm_vs: list = []
-            adm_ph: list = []
-            for g in active:
-                if fresh_snap[g] is None:
-                    continue
-                fr, ids = fresh_snap[g], pool_snap[g]
-                st.cache_scored[fr] = True
-                admit = []
-                remaining = int(targets[g] - acc[g])
-                for j in range(t):
-                    if len(admit) >= remaining:
-                        break
-                    if sel_val[g, j] >= SELECT_PAD:
-                        break       # sel_val ascending: nothing left
-                    ii = int(sel_idx[g, j])
-                    admit.append(fr[ii] if ii < R else ids[ii - R])
-                merged = np.concatenate([ids, fr])
-                if admit:
-                    admit = np.asarray(admit, dtype=np.int64)
-                    st.assign_now(admit, g)
-                    # pool/fresh ids are exclusive to this phase, so the
-                    # admitted ones are exactly the newly assigned ones
-                    merged = merged[st.assignment[merged] < 0]
-                    adm_vs.append(admit)
-                    adm_ph.append(np.full(admit.size, g, dtype=np.int64))
-                    acc[g] += admit.size
-                    progress += int(admit.size)
-                st.pools[g] = merged
-                if acc[g] >= targets[g]:        # phase done: release pool
-                    st.in_pool[st.pools[g]] = False
-                    st.pools[g] = np.empty(0, dtype=np.int64)
-            if adm_vs:      # one vectorized edge-activation pass
-                st.activate_many(np.concatenate(adm_vs),
-                                 np.concatenate(adm_ph))
-        if progress == 0:
+        while len(inflight) >= cur_depth:   # tail heuristic shrank depth
+            h = inflight.popleft()
+            progress += st.harvest(h, acc, targets,
+                                   [e[2] for e in inflight])
+        t0 = _time.perf_counter()
+        packed, injected = st.pack_superstep(active, R, P, t, targets,
+                                             acc)
+        progress += injected
+        if packed is not None:
+            fresh, bias, pool_arr, fresh_ids = packed
+            handle = st.dispatch(fresh, bias, pool_arr, fringe,
+                                 fresh_ids, targets_i32, delta_cap, t)
+        st.stats.host_s += _time.perf_counter() - t0
+        if packed is not None:
+            inflight.append(handle)
+        elif inflight:
+            st.stats.pipeline_stalls += 1   # device idles this round
+        if inflight and (len(inflight) >= cur_depth or packed is None):
+            h = inflight.popleft()
+            harvested = st.harvest(h, acc, targets,
+                                   [e[2] for e in inflight])
+            progress += harvested
+            # adaptive depth: while a superstep admits less than half
+            # its capacity the draw view — not the device — is the
+            # bottleneck, and speculative packs only waste fixed-cost
+            # device calls; drop to lock-step until admissions recover.
+            # Deterministic: based solely on mirrored results.
+            cur_depth = 1 if 2 * harvested < active.size * t else depth
+        if progress == 0 and not inflight:
             break       # starved: remaining vertices sit in other pools
+    while inflight:     # drain the pipeline before the safety net
+        h = inflight.popleft()
+        st.harvest(h, acc, targets, [e[2] for e in inflight])
 
     # safety net: balance-fill any stragglers into underfull phases
     rem_v = np.flatnonzero(st.assignment < 0)
     if rem_v.size:
         deficit = np.maximum(targets - acc, 0)
-        fill = np.repeat(np.arange(k), deficit)[:rem_v.size]
-        for g in np.unique(fill):
-            st.assign_now(rem_v[fill == g], g)
+        fill = np.repeat(np.arange(kG), deficit)[:rem_v.size]
+        st.assignment[rem_v[:fill.size]] = fill.astype(np.int32)
     st.in_pool[:] = False
+    if num_devices is not None:
+        st.group_pool[:] = False
     # the device image syncs at superstep boundaries only; the final
-    # admissions' delta dies with the state (the host assignment is
+    # injections' delta dies with the state (the host assignment is
     # authoritative). Tests needing device/host parity flush explicitly
-    # through superstep_call.
+    # through dispatch/harvest.
     st.delta_ids, st.delta_vals = [], []
     return st.assignment, st
 
@@ -710,12 +1062,15 @@ class ShardedParams(SuperstepParams):
 class _ShardedState(_SuperstepState):
     """Superstep state plus the mesh and per-device-group pool masks.
 
-    The CSR image, assignment and score cache are *replicated* on every
-    mesh device; the phase groups are sharded. Pool membership is
-    tracked per device group (``group_pool``) — groups draw candidates
-    independently, so two groups may pool (and propose) the same vertex;
-    the device program's lowest-phase-wins rule resolves it, and the
-    host mirrors winners without re-queuing them as deltas.
+    The CSR image, assignment, score cache and admission totals are
+    *replicated* on every mesh device; the phase groups are sharded.
+    Pool membership is tracked per device group (``group_pool``) —
+    groups draw candidates independently, so two groups may pool (and
+    propose) the same vertex; the device program's lowest-phase-wins
+    rule resolves it, and the host mirrors winners without re-queuing
+    them as deltas. Shares the pipeline driver with the single-device
+    engine: only ``dispatch`` (the shard_map program + collective
+    counters) and the pool-mask hooks differ.
     """
 
     def __init__(self, hg: Hypergraph, k_padded: int, p: ShardedParams,
@@ -728,195 +1083,85 @@ class _ShardedState(_SuperstepState):
             return
         self.mesh = mesh
         self.group_pool = np.zeros((num_devices, hg.n), dtype=bool)
-        self.pending_dirty: list = []   # decrement tails of wide winners
         # the image lives once per device
         self.stats.device_image_bytes *= num_devices
 
     def group_of(self, g: int) -> int:
         return g // self.kL
 
-    def sharded_call(self, fresh, bias, pool_arr, fringe, admit_cap,
-                     delta_cap):
-        """One mesh-sharded superstep; returns the (kG, t) winner ids.
+    def _pmask(self, g: int) -> np.ndarray:
+        return self.group_pool[g // self.kL]
+
+    def _restart_mask(self) -> np.ndarray:
+        # groups pool independently, so an injection-safe vertex must
+        # sit in NO group's pool (it could be an in-flight slot there)
+        return self.group_pool.any(axis=0)
+
+    def _release_members(self, vs: np.ndarray, ph: np.ndarray) -> None:
+        self.group_pool[ph // self.kL, vs] = False
+
+    def _queue_decrements(self, vs: np.ndarray, exclude=()) -> None:
+        """Sharded: the device program already decremented each winner's
+        first ``tile_l`` neighbors; only the clipped tails of the (rare)
+        wider winners ride the next dispatch's dirty pairs — with the
+        same in-flight rescore exclusion as the single-device engine."""
+        self.stats.cache_invalidations += int(
+            np.minimum(self.deg[vs], self.tile_l).sum())
+        wide = vs[self.deg[vs] > self.tile_l]
+        if wide.size == 0:
+            return
+        indptr, indices = self.adj
+        nbrs, owner = scoring.gather_csr_rows(indptr, indices, wide)
+        lens = (indptr[wide + 1] - indptr[wide]).astype(np.int64)
+        start = np.cumsum(lens) - lens
+        off = np.arange(nbrs.size, dtype=np.int64) - start[owner]
+        tail = self._filter_rescored(
+            nbrs[off >= self.tile_l].astype(np.int64), exclude)
+        if tail.size:
+            self.pending_dirty.append(tail)
+
+    def dispatch(self, fresh, bias, pool_arr, fringe, fresh_ids,
+                 targets_i32, delta_cap: int, select_k: int):
+        """Launch one mesh-sharded superstep (async); returns a handle.
 
         Host->device traffic is the same id/bias buffers as the
-        single-device engine plus the admission caps; the host-side
-        dirty pairs carry the injections' neighbor multisets *and* the
-        decrement tails of last superstep's wider-than-tile winners
-        (the device clips its own decrement gather at ``tile_l``), so
-        the replicated cache stays exact.
+        single-device engine; the host-side dirty pairs carry the
+        injections' neighbor multisets *and* the decrement tails of
+        earlier wider-than-tile winners (the device clips its own
+        decrement gather at ``tile_l``), so the replicated cache stays
+        exact.
         """
         tails = self.pending_dirty
         self.pending_dirty = []
         delta, vals, dirty, dcnt = self._pack_delta_dirty(
             delta_cap, extra_dirty=tails)
-        admit_cap = np.asarray(admit_cap, dtype=np.int32)
         self.stats.host_to_device_bytes += (
             fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
             + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes
-            + admit_cap.nbytes)
+            + targets_i32.nbytes)
         self.stats.supersteps += 1
         self.stats.kernel_calls += 1
         kG, R = fresh.shape
-        t = self.p.t
         # one all_gather per superstep: every device materializes the
         # global (kG, R + t) int32 payload of fresh scores + admissions
         self.stats.collectives += 1
-        self.stats.collective_bytes += self.D * kG * (R + t) * 4
-        self.dev_assign, self.dev_cache, winners, ncf = \
-            scoring.sharded_superstep_device(
-                self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
-                delta, vals, dirty, dcnt, fresh, bias, pool_arr, fringe,
-                admit_cap, num_devices=self.D, group_l=self.kL,
-                tile_l=self.tile_l, select_k=t, interpret=self.interpret)
-        winners = np.asarray(winners).astype(np.int64)
-        self.stats.admission_conflicts += int(ncf)
-        # exact-decrement invariant: queue the clipped tails of winners
-        # wider than the device gather for the next superstep
-        w = winners[winners >= 0]
-        wide = w[self.deg[w] > self.tile_l]
-        indptr, indices = self.adj
-        for v in wide:
-            self.pending_dirty.append(
-                indices[indptr[v] + self.tile_l:indptr[v + 1]].astype(
-                    np.int64))
-        # the decrements the device performed itself
-        if w.size:
-            self.stats.cache_invalidations += int(
-                np.minimum(self.deg[w], self.tile_l).sum())
-        return winners
+        self.stats.collective_bytes += self.D * kG * (R + select_k) * 4
+        donated = (self.dev_assign, self.dev_cache, self.dev_acc)
+        (self.dev_assign, self.dev_cache, self.dev_acc, winners, ncf,
+         n_stale) = scoring.sharded_superstep_device(
+            self.dev[0], self.dev[1], *donated, delta, vals, dirty,
+            dcnt, fresh, bias, pool_arr, fringe, targets_i32,
+            num_devices=self.D, group_l=self.kL, tile_l=self.tile_l,
+            select_k=select_k, interpret=self.interpret)
+        return winners, n_stale, fresh_ids, donated, ncf
 
-
-def _run_sharded(hg: Hypergraph, k: int, p: ShardedParams,
-                 num_devices: int):
-    """Grow all ``k`` partitions concurrently across the device mesh.
-
-    Mirrors ``_run_superstep``; the differences are exactly the sharded
-    semantics: phases are padded to ``num_devices`` equal groups, pool
-    membership is per group (overlaps across groups are allowed and
-    resolved by the device's lowest-phase-wins rule), admission caps are
-    enforced on device, and the host mirrors the returned winners
-    instead of selecting admissions itself.
-    """
-    kL = -(-k // num_devices)
-    kG = kL * num_devices
-    st = _ShardedState(hg, kG, p, num_devices)
-    if st.dev is None:
-        return None, None                       # caller falls back
-    n = hg.n
-    base, rem = divmod(n, k)
-    targets = np.zeros(kG, dtype=np.int64)
-    targets[:k] = base + (np.arange(k) < rem)
-    acc = np.zeros(kG, dtype=np.int64)
-    R, P, t = p.rows, p.pool_cap, p.t
-    delta_cap = max(2 * kG * t, kG)
-    fringe = np.full((kG, 1), -1, dtype=np.int32)   # fringe-free scoring
-
-    seeds = st.random_unassigned(int((targets > 0).sum()))
-    gi = 0
-    for g in range(kG):
-        if targets[g] == 0 or gi >= seeds.size:
-            continue
-        v = seeds[gi:gi + 1]
-        gi += 1
-        st.assign_now(v, g)
-        st.activate_phase(v, g)
-        acc[g] += 1
-
-    while True:
-        active = np.flatnonzero(acc < targets)
-        if active.size == 0:
-            break
-        progress = 0
-        fresh = np.full((kG, R), -1, dtype=np.int32)
-        bias = np.full((kG, R), np.inf, dtype=np.float32)
-        pool_arr = np.full((kG, P), -1, dtype=np.int32)
-        fresh_snap: list = [None] * kG
-        pool_snap: list = [None] * kG
-        rot = st.stats.supersteps % active.size
-        for g in np.concatenate([active[rot:], active[:rot]]):
-            gp = st.group_pool[st.group_of(g)]
-            ids = st.pools[g]
-            if ids.size:        # other groups' winners may sit in here
-                keep = st.assignment[ids] < 0
-                if not keep.all():
-                    gp[ids[~keep]] = False
-                    ids = ids[keep]
-                    st.pools[g] = ids
-            need = min(R, P - ids.size)
-            drawn = st.draw_candidates(need, st.phase_buckets[g],
-                                       in_pool=gp) \
-                if need > 0 else np.empty(0, dtype=np.int64)
-            miss = np.empty(0, dtype=np.int64)
-            if drawn.size:
-                gp[drawn] = True
-                scored = st.cache_scored[drawn]
-                hits, miss = drawn[scored], drawn[~scored]
-                if hits.size:   # cross-phase/-device reuse: cached
-                    st.stats.cache_hits += int(hits.size)
-                    ids = np.concatenate([ids, hits])
-                    st.pools[g] = ids
-            if ids.size == 0 and miss.size == 0:
-                vs = st.random_unassigned(
-                    min(t, int(targets[g] - acc[g])), in_pool=gp)
-                if vs.size:
-                    st.stats.random_restarts += 1
-                    st.assign_now(vs, g)
-                    st.activate_phase(vs, g)
-                    acc[g] += vs.size
-                    progress += int(vs.size)
-                continue
-            fresh[g, :miss.size] = miss
-            bias[g, :miss.size] = np.where(
-                st.deg[miss] > st.tile_l, scoring.TRUNC_PENALTY, 0.0)
-            pool_arr[g, :ids.size] = ids
-            fresh_snap[g] = miss
-            pool_snap[g] = ids
-            st.stats.kernel_rows += int(miss.size)
-
-        if any(f is not None for f in fresh_snap):
-            admit_cap = np.maximum(targets - acc, 0).astype(np.int32)
-            winners = st.sharded_call(fresh, bias, pool_arr, fringe,
-                                      admit_cap, delta_cap)
-            adm_vs: list = []
-            adm_ph: list = []
-            for g in active:
-                if fresh_snap[g] is None:
-                    continue
-                fr, ids = fresh_snap[g], pool_snap[g]
-                st.cache_scored[fr] = True
-                grp = st.group_of(g)
-                w = winners[g]
-                w = w[w >= 0]
-                if w.size:      # mirror the device's admissions
-                    st.assignment[w] = g
-                    st.group_pool[grp][w] = False
-                    acc[g] += w.size
-                    progress += int(w.size)
-                    adm_vs.append(w)
-                    adm_ph.append(np.full(w.size, g, dtype=np.int64))
-                merged = np.concatenate([ids, fr])
-                keep = st.assignment[merged] < 0
-                st.group_pool[grp][merged[~keep]] = False
-                st.pools[g] = merged[keep]
-                if acc[g] >= targets[g]:        # phase done: release pool
-                    st.group_pool[grp][st.pools[g]] = False
-                    st.pools[g] = np.empty(0, dtype=np.int64)
-            if adm_vs:
-                st.activate_many(np.concatenate(adm_vs),
-                                 np.concatenate(adm_ph))
-        if progress == 0:
-            break       # starved: remaining vertices sit in other pools
-
-    rem_v = np.flatnonzero(st.assignment < 0)
-    if rem_v.size:
-        deficit = np.maximum(targets - acc, 0)
-        fill = np.repeat(np.arange(kG), deficit)[:rem_v.size]
-        for g in np.unique(fill):
-            st.assignment[rem_v[fill == g]] = np.int32(g)
-    st.group_pool[:] = False
-    st.delta_ids, st.delta_vals = [], []
-    return st.assignment, st
+    def harvest(self, handle, acc: np.ndarray, targets: np.ndarray,
+                exclude=()) -> int:
+        progress = super().harvest(handle, acc, targets, exclude)
+        # the conflict count rides the harvested superstep's results, so
+        # reading it here never adds a block
+        self.stats.admission_conflicts += int(handle[4])
+        return progress
 
 
 def hype_sharded_partition(hg: Hypergraph, k: int,
@@ -941,8 +1186,10 @@ def hype_sharded_partition(hg: Hypergraph, k: int,
     capped at ``k``); on CPU simulate devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. With one
     device the engine degenerates to (slightly reordered) single-device
-    superstep growth. Falls back to ``hype_superstep_partition``'s own
-    fallback chain when the adjacency guard trips.
+    superstep growth. Supersteps run on the shared double-buffered
+    pipeline (``params.pipeline_depth``, DESIGN.md §4d). Falls back to
+    ``hype_superstep_partition``'s own fallback chain when the
+    adjacency guard trips.
     """
     if params is None:
         params = ShardedParams()
@@ -952,6 +1199,8 @@ def hype_sharded_partition(hg: Hypergraph, k: int,
         raise ValueError("k must be >= 1")
     if params.t < 1 or params.rows < 1 or params.pool_cap < 1:
         raise ValueError("rows, pool_cap, t must all be >= 1")
+    if params.pipeline_depth < 1:
+        raise ValueError("pipeline_depth must be >= 1")
     if params.devices is not None and params.devices < 1:
         raise ValueError("devices must be >= 1")
     if k == 1:
@@ -961,7 +1210,7 @@ def hype_sharded_partition(hg: Hypergraph, k: int,
     avail = len(jax.devices())
     num = params.devices if params.devices is not None else avail
     num = max(1, min(num, avail, k))
-    assignment, st = _run_sharded(hg, k, params, num)
+    assignment, st = _run_pipeline(hg, k, params, num)
     if assignment is None:
         return hype_superstep_partition(hg, k, params, return_stats)
     assert (assignment >= 0).all()
@@ -982,8 +1231,12 @@ def hype_superstep_partition(hg: Hypergraph, k: int,
     against a graph image (CSR + assignment + score cache) that was
     uploaded once. Scores survive across refills and phases — admissions
     *decrement* their neighbors' cached scores instead of wiping the
-    cache. Falls back to ``hype_batched_partition`` when the adjacency
-    guard trips (pathological hub expansion).
+    cache. ``params.pipeline_depth`` supersteps run double-buffered
+    (DESIGN.md §4d): while the device computes superstep N the host
+    mirrors N-1's admissions and packs N+1; ``pipeline_depth=1`` is the
+    lock-step schedule, bit for bit. Falls back to
+    ``hype_batched_partition`` when the adjacency guard trips
+    (pathological hub expansion).
     """
     if params is None:
         params = SuperstepParams()
@@ -993,10 +1246,12 @@ def hype_superstep_partition(hg: Hypergraph, k: int,
         raise ValueError("k must be >= 1")
     if params.t < 1 or params.rows < 1 or params.pool_cap < 1:
         raise ValueError("rows, pool_cap, t must all be >= 1")
+    if params.pipeline_depth < 1:
+        raise ValueError("pipeline_depth must be >= 1")
     if k == 1:
         out = np.zeros(hg.n, dtype=np.int32)
         return (out, BatchedStats()) if return_stats else out
-    assignment, st = _run_superstep(hg, k, params)
+    assignment, st = _run_pipeline(hg, k, params)
     if assignment is None:
         return hype_batched_partition(hg, k, params, return_stats)
     assert (assignment >= 0).all()

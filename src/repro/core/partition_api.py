@@ -29,23 +29,29 @@ from .shp import shp_partition
 from .multilevel import multilevel_partition
 from . import metrics
 
-# method -> (one-line description, vertex-balance slack). The slack is the
-# engine's documented guarantee on max(part size) - min(part size): the
-# HYPE family and the random baseline are perfectly balanced (<= 1); the
-# streaming/swap baselines run with their papers' slack-100 constraint;
-# hashing and the recursive-bisection multilevel partitioner only promise
-# proportional balance (a fraction of n/k), recorded here as callables of
-# (n, k) so the registry test can enforce exactly what is documented.
+# method -> one-line description, vertex-balance slack, notable knobs.
+# The slack is the engine's documented guarantee on max(part size) -
+# min(part size): the HYPE family and the random baseline are perfectly
+# balanced (<= 1); the streaming/swap baselines run with their papers'
+# slack-100 constraint; hashing and the recursive-bisection multilevel
+# partitioner only promise proportional balance (a fraction of n/k),
+# recorded here as callables of (n, k) so the registry test can enforce
+# exactly what is documented. ``knobs`` lists the engine-specific
+# keyword arguments ``partition()`` forwards — the registry drift test
+# checks each against the engine's params signature, so a renamed or
+# removed knob fails there, not in production.
 METHOD_INFO: Dict[str, dict] = {
     "hype": {
         "desc": "paper-faithful numpy HYPE: heap + per-vertex growth "
                 "steps (fidelity reference, ablations)",
         "balance_slack": lambda n, k: 1,
+        "knobs": ("s", "r", "use_cache", "dext_mode"),
     },
     "hype_batched": {
         "desc": "batched-candidate HYPE on the Pallas hype_scores "
                 "kernel (host tiles; bit-stable throughput default)",
         "balance_slack": lambda n, k: 1,
+        "knobs": ("t", "b", "s", "pool_cap", "kernel_min"),
     },
     "hype_jax": {
         "desc": "sequential HYPE as one jitted lax.while_loop program "
@@ -59,13 +65,17 @@ METHOD_INFO: Dict[str, dict] = {
     },
     "hype_superstep": {
         "desc": "device-resident HYPE: fused score+select supersteps "
-                "grow all k phases concurrently (large-k choice)",
+                "grow all k phases concurrently on a double-buffered "
+                "pipeline (large-k choice; pipeline_depth=1 locks step)",
         "balance_slack": lambda n, k: 1,
+        "knobs": ("t", "rows", "pool_cap", "pipeline_depth"),
     },
     "hype_sharded": {
         "desc": "mesh-sharded superstep HYPE: phase groups sharded over "
-                "a JAX device mesh, one all_gather per superstep",
+                "a JAX device mesh, one all_gather per pipelined "
+                "superstep",
         "balance_slack": lambda n, k: 1,
+        "knobs": ("t", "rows", "pool_cap", "pipeline_depth", "devices"),
     },
     "hype_weighted": {
         "desc": "numpy HYPE with degree-weighted balancing (HypeParams"
@@ -76,6 +86,7 @@ METHOD_INFO: Dict[str, dict] = {
         "desc": "streaming MinMax, vertex-balanced variant (HYPE paper "
                 "footnote 2: slack of up to 100 vertices)",
         "balance_slack": lambda n, k: 101,  # slack + the vertex placed
+        "knobs": ("slack",),
     },
     "minmax_eb": {
         "desc": "streaming MinMax, hyperedge-balanced original "
@@ -86,6 +97,7 @@ METHOD_INFO: Dict[str, dict] = {
         "desc": "Social-Hash-style iterative balanced swaps from a "
                 "random start (Kabiljo et al., VLDB'17)",
         "balance_slack": lambda n, k: 1,    # swaps preserve random init
+        "knobs": ("iters", "swap_frac"),
     },
     "multilevel": {
         "desc": "coarsen + recursive bisection + FM refinement "
@@ -114,6 +126,16 @@ def describe_methods() -> Dict[str, str]:
     hard-coding an engine list that drifts from the registry.
     """
     return {name: info["desc"] for name, info in METHOD_INFO.items()}
+
+
+def method_knobs(method: str) -> tuple:
+    """Engine-specific keyword knobs ``partition()`` forwards.
+
+    Empty for methods whose only knob is ``seed``. The registry drift
+    test verifies every listed knob against the engine's params
+    signature, so this tuple is safe to render in docs and CLIs.
+    """
+    return tuple(METHOD_INFO[method].get("knobs", ()))
 
 
 def balance_slack(method: str, n: int, k: int) -> int:

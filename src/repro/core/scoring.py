@@ -270,55 +270,111 @@ def batched_dext_numpy(hg, vs: np.ndarray, in_fringe: np.ndarray,
 # ------------------------------------------------------------- superstep
 # Device-resident superstep program: one jitted call performs the whole
 # per-superstep device work of the superstep engine (hype_batched.py) —
-# apply the host's assignment delta, decrement-invalidate the cached
-# scores of the delta's neighbors, gather the fresh candidate tiles from
-# the device CSR, run the fused score+select kernel, and write the fresh
-# scores back into the device cache. Only ids cross the host boundary.
+# apply the host's injection delta (seeds / restarts), decrement-
+# invalidate the cached scores of the delta's neighbors, gather the
+# fresh candidate tiles from the device CSR, run the fused score+select
+# kernel, write the fresh scores back into the device cache, and apply
+# the per-phase admissions *on device*: stale proposals (candidates
+# assigned by an interleaved superstep of the pipeline) are masked out,
+# and the per-phase remaining-target cap is enforced against a device-
+# resident admission counter. Winner-neighbor decrements ride the NEXT
+# dispatch's host-preaggregated dirty pairs (the lock-step schedule).
+# Only ids cross the host boundary, and the (n,)-sized assignment/cache
+# (plus the (k,) counter) are *donated* — each superstep updates the
+# image in place instead of copying it.
 
 import functools as _functools
 
 
-@_functools.lru_cache(maxsize=None)
-def _superstep_program():
+def _apply_host_injections(assign, cache, acc, delta_ids, delta_vals,
+                           dirty_ids, dirty_counts):
+    """Traced prefix shared by BOTH superstep programs.
+
+    Applies the host's injection delta (seeds / restarts) to the
+    assignment, counts the injections into the per-phase admission
+    totals, and applies the pre-aggregated (unique id, count) dirty
+    decrements to the score cache. Keeping this in one function is what
+    keeps the single-device and sharded programs semantically identical
+    — edit here, not in the program bodies.
+    """
+    import jax.numpy as jnp
+
+    n = assign.shape[0]
+    inj = delta_ids >= 0
+    assign = assign.at[jnp.where(inj, delta_ids, n)].set(
+        delta_vals, mode="drop")
+    acc = acc.at[jnp.where(inj, delta_vals, acc.shape[0])].add(
+        1, mode="drop")
+    cache = cache.at[jnp.where(dirty_ids >= 0, dirty_ids, n)].add(
+        -dirty_counts, mode="drop")
+    return assign, cache, acc
+
+
+def _gather_fresh_tiles(indptr, indices, assign, flat, tile_l):
+    """Traced helper shared by both superstep programs.
+
+    Gathers the flat fresh-candidate ids' CSR rows at static width
+    ``tile_l``; assigned neighbors are masked to -1 *in place* (no
+    compaction — the kernel counts valid entries, not positions).
+    """
     import jax
     import jax.numpy as jnp
+
+    fsafe = jnp.where(flat >= 0, flat, 0)
+    fstart = indptr[fsafe]
+    fdeg = indptr[fsafe + 1] - fstart
+    col = jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0], tile_l), 1)
+    fvalid = (col < fdeg[:, None]) & (flat >= 0)[:, None]
+    nbr = indices[jnp.where(fvalid, fstart[:, None] + col, 0)]
+    unassigned = assign[jnp.where(fvalid, nbr, 0)] < 0
+    return jnp.where(fvalid & unassigned, nbr, -1).astype(jnp.int32)
+
+
+def _stale_masked_prev(pool, assign, cache):
+    """Traced helper shared by both superstep programs.
+
+    Held pool scores ride along from the device cache; slots that went
+    stale (assigned by an interleaved superstep of the pipeline) are
+    masked to +inf so selection skips them and takes the phase's
+    next-best candidate. Returns ``(prev, n_stale)``.
+    """
+    import jax.numpy as jnp
+
+    psafe = jnp.where(pool >= 0, pool, 0)
+    pool_ok = (pool >= 0) & (assign[psafe] < 0)
+    prev = jnp.where(pool_ok, cache[psafe], jnp.inf).astype(jnp.float32)
+    n_stale = ((pool >= 0) & ~pool_ok).sum().astype(jnp.int32)
+    return prev, n_stale
+
+
+@_functools.lru_cache(maxsize=None)
+def _pipeline_program():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hype_score.kernel import SELECT_PAD
     from repro.kernels.hype_score.ops import hype_score_select
 
     @_functools.partial(
-        jax.jit, static_argnames=("tile_l", "select_k", "interpret"))
-    def step(indptr, indices, assign, cache, delta_ids, delta_vals,
-             dirty_ids, dirty_counts, fresh, bias, pool, fringe, *,
-             tile_l, select_k, interpret):
+        jax.jit, static_argnames=("tile_l", "select_k", "interpret"),
+        donate_argnums=(2, 3, 4))
+    def step(indptr, indices, assign, cache, acc, delta_ids, delta_vals,
+             dirty_ids, dirty_counts, fresh, bias, pool, fringe, targets,
+             *, tile_l, select_k, interpret):
         n = assign.shape[0]
-        # 1. apply the host's assignment delta (admissions + seeds)
-        assign = assign.at[jnp.where(delta_ids >= 0, delta_ids, n)].set(
-            delta_vals, mode="drop")
-        # 2. decrement-invalidate: every neighbor of a newly assigned
-        #    vertex has exactly one fewer unassigned neighbor, so the
-        #    cached score is updated in place — it stays *exact* instead
-        #    of being wiped. The host pre-aggregates the neighbor
-        #    multiset into (unique id, count) pairs so the scatter is
-        #    O(unique dirtied), not O(sum of degrees).
-        cache = cache.at[jnp.where(dirty_ids >= 0, dirty_ids, n)].add(
-            -dirty_counts, mode="drop")
-        # 3. gather fresh candidate tiles from the device CSR; assigned
-        #    neighbors are masked to -1 in place (no compaction needed —
-        #    the kernel counts valid entries, not positions).
         G, R = fresh.shape
+        # 1.-2. host injections (seeds / restarts — decrement-exact: the
+        #    dirty pairs carry their pre-aggregated neighbor multiset
+        #    plus earlier winners' queued decrements); the host only
+        #    injects vertices that cannot sit in any in-flight slot, so
+        #    the scatter is race-free at any pipeline depth.
+        assign, cache, acc = _apply_host_injections(
+            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
+            dirty_counts)
+        # 3. gather fresh candidate tiles from the device CSR
         flat = fresh.reshape(-1)
-        fsafe = jnp.where(flat >= 0, flat, 0)
-        fstart = indptr[fsafe]
-        fdeg = indptr[fsafe + 1] - fstart
-        col = jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0], tile_l),
-                                       1)
-        fvalid = (col < fdeg[:, None]) & (flat >= 0)[:, None]
-        nbr = indices[jnp.where(fvalid, fstart[:, None] + col, 0)]
-        unassigned = assign[jnp.where(fvalid, nbr, 0)] < 0
-        tile = jnp.where(fvalid & unassigned, nbr, -1).astype(jnp.int32)
-        # 4. held pool scores ride along from the device cache
-        prev = jnp.where(pool >= 0,
-                         cache[jnp.where(pool >= 0, pool, 0)],
-                         jnp.inf).astype(jnp.float32)
+        tile = _gather_fresh_tiles(indptr, indices, assign, flat, tile_l)
+        # 4. held pool scores, stale slots masked (the redraw rule)
+        prev, n_stale = _stale_masked_prev(pool, assign, cache)
         # 5. fused score + per-phase top-select
         scores, sel_idx, sel_val = hype_score_select(
             tile.reshape(G, R, tile_l), fringe, bias, prev,
@@ -326,27 +382,57 @@ def _superstep_program():
         # 6. fresh scores enter the cache (pad rows dropped)
         cache = cache.at[jnp.where(flat >= 0, flat, n)].set(
             scores.reshape(-1), mode="drop")
-        return assign, cache, sel_idx, sel_val
+        # 7. map selected slots to vertex ids; admissible = a real score
+        #    on a still-unassigned id. The per-phase cap is the phase's
+        #    remaining target, computed against the *device* totals —
+        #    the host view may lag the pipeline, the device never does.
+        slots = jnp.concatenate([fresh, pool], axis=1)
+        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
+        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
+        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
+        cap = jnp.maximum(targets - acc, 0)
+        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+        adm = ok & (rank <= cap[:, None])
+        winners = jnp.where(adm, cand, -1)
+        # 8. apply the winners on device (the host mirrors them at
+        #    harvest time, possibly supersteps later). Their score-cache
+        #    decrements stay HOST-side: the harvest pre-aggregates the
+        #    winners' neighbor multiset into the next dispatch's dirty
+        #    pairs — shipping (unique id, count) pairs is far cheaper
+        #    than a (G*t, tile_l) gather+scatter here, and at depth 1 it
+        #    reproduces the lock-step decrement schedule exactly.
+        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
+        assign = assign.at[jnp.where(adm, cand, n)].set(
+            phase_row, mode="drop")
+        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
+        return assign, cache, acc, winners, n_stale
 
     return step
 
 
-def superstep_device(indptr, indices, assign, cache, delta_ids, delta_vals,
-                     dirty_ids, dirty_counts, fresh, bias, pool, fringe,
-                     *, tile_l: int, select_k: int, interpret: bool):
-    """Run one device superstep; see ``_superstep_program`` for the plan.
+def pipeline_superstep_device(indptr, indices, assign, cache, acc,
+                              delta_ids, delta_vals, dirty_ids,
+                              dirty_counts, fresh, bias, pool, fringe,
+                              targets, *, tile_l: int, select_k: int,
+                              interpret: bool):
+    """Run one device superstep; see ``_pipeline_program`` for the plan.
 
     All array arguments are device-resident jax arrays except the small
-    per-superstep id buffers (delta, dirty, fresh, bias, pool, fringe),
-    which are the only host->device traffic. ``tile_l`` is a static
+    per-superstep id buffers (delta, dirty, fresh, bias, pool, fringe,
+    targets), which are the only host->device traffic. ``assign``,
+    ``cache`` and ``acc`` are DONATED — callers must keep the returned
+    arrays and never touch the inputs again. ``tile_l`` is a static
     gather width (bucketed by the caller so the program retraces only a
     handful of times); ``select_k`` is the per-phase admission count.
-    Returns ``(assign', cache', sel_idx, sel_val)``.
+    Returns ``(assign', cache', acc', winners, n_stale)`` where
+    ``winners`` is (G, select_k) int32 admitted ids (-1 = none) and
+    ``n_stale`` counts pool slots skipped because an interleaved
+    superstep of the pipeline had already assigned them.
     """
-    return _superstep_program()(
-        indptr, indices, assign, cache, delta_ids, delta_vals, dirty_ids,
-        dirty_counts, fresh, bias, pool, fringe, tile_l=tile_l,
-        select_k=select_k, interpret=interpret)
+    return _pipeline_program()(
+        indptr, indices, assign, cache, acc, delta_ids, delta_vals,
+        dirty_ids, dirty_counts, fresh, bias, pool, fringe, targets,
+        tile_l=tile_l, select_k=select_k, interpret=interpret)
 
 
 # ---------------------------------------------------------- sharded superstep
@@ -383,40 +469,34 @@ def _sharded_program(num_devices: int, group_l: int, tile_l: int,
 
     kL = group_l
 
-    def step(indptr, indices, assign, cache, delta_ids, delta_vals,
+    def step(indptr, indices, assign, cache, acc, delta_ids, delta_vals,
              dirty_ids, dirty_counts, fresh, bias, pool, fringe,
-             admit_cap):
+             targets):
         n = assign.shape[0]
         G, R = fresh.shape
         t = select_k
-        # 1. host injections (seeds / restarts / their pre-aggregated
-        #    neighbor decrements) — replicated inputs, applied identically
-        #    on every replica.
-        assign = assign.at[jnp.where(delta_ids >= 0, delta_ids, n)].set(
-            delta_vals, mode="drop")
-        cache = cache.at[jnp.where(dirty_ids >= 0, dirty_ids, n)].add(
-            -dirty_counts, mode="drop")
-        # 2. this device's phase-group shard
+        # 1. host injections + dirty decrements — replicated inputs,
+        #    applied identically on every replica (shared helper keeps
+        #    this program bit-aligned with the single-device one)
+        assign, cache, acc = _apply_host_injections(
+            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
+            dirty_counts)
+        # 2. this device's phase-group shard; the admission cap is each
+        #    phase's remaining target per the *device* totals (the host
+        #    view may lag the pipeline, the replicas never do)
         off = jax.lax.axis_index("shard") * kL
         fresh_l = jax.lax.dynamic_slice_in_dim(fresh, off, kL, 0)
         pool_l = jax.lax.dynamic_slice_in_dim(pool, off, kL, 0)
-        cap_l = jax.lax.dynamic_slice_in_dim(admit_cap, off, kL, 0)
+        cap = jnp.maximum(targets - acc, 0)
+        cap_l = jax.lax.dynamic_slice_in_dim(cap, off, kL, 0)
         # 3. gather ONLY the shard's fresh-candidate tiles from the
-        #    replicated CSR (assigned neighbors masked in place)
+        #    replicated CSR
         flat = fresh_l.reshape(-1)
-        fsafe = jnp.where(flat >= 0, flat, 0)
-        fstart = indptr[fsafe]
-        fdeg = indptr[fsafe + 1] - fstart
-        col = jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0], tile_l),
-                                       1)
-        fvalid = (col < fdeg[:, None]) & (flat >= 0)[:, None]
-        nbr = indices[jnp.where(fvalid, fstart[:, None] + col, 0)]
-        unassigned = assign[jnp.where(fvalid, nbr, 0)] < 0
-        tile = jnp.where(fvalid & unassigned, nbr, -1).astype(jnp.int32)
-        # 4. held pool scores ride along from the replicated cache
-        prev = jnp.where(pool >= 0,
-                         cache[jnp.where(pool >= 0, pool, 0)],
-                         jnp.inf).astype(jnp.float32)
+        tile = _gather_fresh_tiles(indptr, indices, assign, flat, tile_l)
+        # 4. held pool scores from the replicated cache, stale slots
+        #    masked — computed on the *global* pool so the count is
+        #    replicated
+        prev, n_stale = _stale_masked_prev(pool, assign, cache)
         # 5. fused score + top-select on the local phase group
         scores_l, sel_idx, sel_val = hype_score_select_shard(
             tile.reshape(kL, R, tile_l), fringe, bias, prev,
@@ -461,9 +541,10 @@ def _sharded_program(num_devices: int, group_l: int, tile_l: int,
         win_sorted = first & (sorted_ids >= 0)
         winner = jnp.zeros((G * t,), bool).at[order].set(win_sorted)
         n_conflicts = ((ids_f >= 0) & ~winner).sum().astype(jnp.int32)
-        # 10. apply the winners to every replica's assignment
+        # 10. apply the winners to every replica's assignment + totals
         assign = assign.at[jnp.where(winner, ids_f, n)].set(
             phase_f, mode="drop")
+        acc = acc.at[phase_f].add(winner.astype(acc.dtype))
         # 11. exact-decrement invalidation for the winners: every
         #     neighbor of a newly assigned vertex has one fewer
         #     unassigned neighbor. Gather width is the run's tile_l;
@@ -479,35 +560,39 @@ def _sharded_program(num_devices: int, group_l: int, tile_l: int,
         cache = cache.at[jnp.where(wvalid, wnbr, n)].add(
             -1.0, mode="drop")
         winners = jnp.where(winner, ids_f, -1).reshape(G, t)
-        return assign, cache, winners, n_conflicts
+        return assign, cache, acc, winners, n_conflicts, n_stale
 
     mesh = _sharded_mesh(num_devices)
     rep = P()     # every array is replicated; devices differ via axis_index
     return jax.jit(shard_map(
         step, mesh=mesh,
-        in_specs=(rep,) * 13, out_specs=(rep, rep, rep, rep),
-        check_rep=False))
+        in_specs=(rep,) * 14, out_specs=(rep,) * 6,
+        check_rep=False), donate_argnums=(2, 3, 4))
 
 
-def sharded_superstep_device(indptr, indices, assign, cache, delta_ids,
-                             delta_vals, dirty_ids, dirty_counts, fresh,
-                             bias, pool, fringe, admit_cap, *,
-                             num_devices: int, group_l: int, tile_l: int,
-                             select_k: int, interpret: bool):
+def sharded_superstep_device(indptr, indices, assign, cache, acc,
+                             delta_ids, delta_vals, dirty_ids,
+                             dirty_counts, fresh, bias, pool, fringe,
+                             targets, *, num_devices: int, group_l: int,
+                             tile_l: int, select_k: int, interpret: bool):
     """Run one mesh-sharded superstep; see ``_sharded_program``.
 
-    ``fresh``/``bias``/``pool``/``fringe``/``admit_cap`` stack all
+    ``fresh``/``bias``/``pool``/``fringe``/``targets`` stack all
     ``G = num_devices * group_l`` phases; each device processes the
     contiguous group ``[axis_index * group_l, ...)`` and ONE all_gather
     per call exchanges (fresh scores | proposed admissions), after which
     every replica applies identical cache writes, lowest-phase-wins
-    conflict resolution and exact decrements. Returns ``(assign',
-    cache', winners (G, select_k) int32 ids (-1 = none), n_conflicts)``.
+    conflict resolution and exact decrements. ``assign``/``cache``/
+    ``acc`` are DONATED — keep the returned arrays, never reuse the
+    inputs. Admission caps are each phase's remaining target computed
+    against the device-resident ``acc`` totals, so they stay exact at
+    any pipeline depth. Returns ``(assign', cache', acc', winners
+    (G, select_k) int32 ids (-1 = none), n_conflicts, n_stale)``.
     """
     return _sharded_program(num_devices, group_l, tile_l, select_k,
                             interpret)(
-        indptr, indices, assign, cache, delta_ids, delta_vals, dirty_ids,
-        dirty_counts, fresh, bias, pool, fringe, admit_cap)
+        indptr, indices, assign, cache, acc, delta_ids, delta_vals,
+        dirty_ids, dirty_counts, fresh, bias, pool, fringe, targets)
 
 
 # --------------------------------------------------------------------- JAX

@@ -1,6 +1,32 @@
 """Pallas API compatibility shims shared by all kernels."""
+import os
+
 from jax.experimental.pallas import tpu as pltpu
 
 # jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
 CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def pallas_interpret() -> bool:
+    """Single source of truth for Pallas interpret-mode selection.
+
+    Default: interpret everywhere except on a real TPU backend (the
+    kernels compile only there; interpret mode is the correct-but-slow
+    path on CPU/GPU). The ``REPRO_PALLAS_INTERPRET`` env var overrides
+    either way — ``1/true/yes/on`` forces interpret mode (e.g. to debug
+    a kernel on TPU), ``0/false/no/off`` forces the compiled path (e.g.
+    to exercise GPU/compiled-CPU lowering in CI) — so benchmarks and CI
+    can pin the mode without touching call sites. Read per call, not
+    cached: tests flip the env var at runtime.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    import jax
+    return jax.default_backend() != "tpu"

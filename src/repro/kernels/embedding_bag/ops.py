@@ -5,12 +5,20 @@ import functools
 
 import jax
 
+from repro.kernels._compat import pallas_interpret
+
 from .kernel import embedding_bag_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("combine", "interpret"))
 def embedding_bag(table, ids, *, combine: str = "mean", interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    if interpret is None:    # resolved pre-jit: `interpret` is static,
+        # so an in-trace default would freeze the env override
+        interpret = pallas_interpret()
+    return _embedding_bag(table, ids, combine=combine,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("combine", "interpret"))
+def _embedding_bag(table, ids, *, combine: str, interpret: bool):
     return embedding_bag_kernel(table, ids, combine=combine,
                                 interpret=interpret)

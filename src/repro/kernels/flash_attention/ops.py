@@ -1,7 +1,9 @@
 """Jitted public wrapper for the flash-attention kernel.
 
-``interpret`` defaults to True off-TPU so the same call sites run (slowly
-but correctly) on CPU; on TPU the compiled kernel path is used.
+``interpret`` defaults to ``_compat.pallas_interpret()`` — True off-TPU
+(so the same call sites run, slowly but correctly, on CPU), overridable
+either way via ``REPRO_PALLAS_INTERPRET``; on TPU the compiled kernel
+path is used.
 """
 from __future__ import annotations
 
@@ -10,20 +12,26 @@ from typing import Optional
 
 import jax
 
+from repro.kernels._compat import pallas_interpret
+
 from .kernel import flash_attention_fwd
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    if interpret is None:    # resolved pre-jit: `interpret` is static,
+        # so an in-trace default would freeze the env override
+        interpret = pallas_interpret()
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None, block_q: int = 128,
-                    block_k: int = 128, interpret: Optional[bool] = None):
-    if interpret is None:
-        interpret = not _on_tpu()
+def _flash_attention(q, k, v, *, causal: bool, window: Optional[int],
+                     block_q: int, block_k: int, interpret: bool):
     return flash_attention_fwd(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
                                interpret=interpret)

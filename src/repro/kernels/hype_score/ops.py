@@ -6,13 +6,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._compat import pallas_interpret
+
 from .kernel import hype_score_select_kernel, hype_scores_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
 def hype_scores(nbrs, fringe, *, tile_b: int = 256, interpret=None):
+    # resolve the interpret default OUTSIDE the jit boundary: `interpret`
+    # is a static argname, so resolving it inside would freeze the env
+    # override at first trace (jit would cache on the literal None)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = pallas_interpret()
+    return _hype_scores(nbrs, fringe, tile_b=tile_b, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def _hype_scores(nbrs, fringe, *, tile_b: int, interpret: bool):
     B = nbrs.shape[0]
     tile = min(tile_b, max(8, B))
     pad = (-B) % tile
@@ -47,8 +56,6 @@ def hype_score_select_shard(nbrs_local, fringe, bias, prev, *,
                              interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("select_k", "tile_g",
-                                             "interpret"))
 def hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
                       tile_g: int = 8, interpret=None):
     """Fused score + per-phase top-``select_k`` selection (auto-interpret).
@@ -60,8 +67,17 @@ def hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
     sel_val (G, select_k))``; sel_idx < R points at fresh rows, >= R at
     pool slot ``idx - R``. See ``kernel.hype_score_select_kernel``.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    if interpret is None:    # resolved pre-jit; see hype_scores
+        interpret = pallas_interpret()
+    return _hype_score_select(nbrs, fringe, bias, prev,
+                              select_k=select_k, tile_g=tile_g,
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("select_k", "tile_g",
+                                             "interpret"))
+def _hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
+                       tile_g: int, interpret: bool):
     G, R, L = nbrs.shape
     tg = min(tile_g, G)
     pad = (-G) % tg

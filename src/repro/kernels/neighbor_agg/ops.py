@@ -5,11 +5,18 @@ import functools
 
 import jax
 
+from repro.kernels._compat import pallas_interpret
+
 from .kernel import neighbor_agg_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def neighbor_agg(x, nbrs, w, *, interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    if interpret is None:    # resolved pre-jit: `interpret` is static,
+        # so an in-trace default would freeze the env override
+        interpret = pallas_interpret()
+    return _neighbor_agg(x, nbrs, w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _neighbor_agg(x, nbrs, w, *, interpret: bool):
     return neighbor_agg_kernel(x, nbrs, w, interpret=interpret)

@@ -252,42 +252,53 @@ def test_superstep_stats_counters(hg):
 
 def test_superstep_cache_exact_after_admissions():
     """Property check for decrement-based invalidation: after ANY
-    admission sequence, every cached score equals a fresh
-    ``batched_dext_adj`` recompute — the stale-score drift the old
-    per-phase wipe was hiding cannot exist."""
+    admission sequence — device-selected winners (clipped decrements +
+    host-queued tails) and host injections alike — every cached score
+    equals a fresh ``batched_dext_adj`` recompute: the stale-score
+    drift the old per-phase wipe was hiding cannot exist."""
     for seed in (0, 1, 2):
         hg = powerlaw_hypergraph(300, 200, seed=10 + seed, max_edge=18,
                                  max_degree=12)
-        k, R = 4, 8
+        k, R, t = 4, 8, 2
         rng = np.random.default_rng(seed)
         st = _SuperstepState(hg, k, SuperstepParams(seed=seed))
         fringe = np.full((k, 1), -1, np.int32)
         empty_pool = np.full((k, 4), -1, np.int32)
+        acc = np.zeros(k, dtype=np.int64)
+        targets = np.full(k, hg.n, dtype=np.int64)
         for step in range(10):
-            # score a random batch of never-scored vertices ...
+            # score a random batch of never-scored vertices; the device
+            # admits up to a random per-phase cap of them (cap 0 phases
+            # exercise the selection-without-admission path) ...
             cand = np.flatnonzero(~st.cache_scored & (st.assignment < 0))
+            fresh = np.full((k, R), -1, np.int32)
             if cand.size:
                 pick = rng.choice(cand, size=min(k * R, cand.size),
                                   replace=False)
-                fresh = np.full((k, R), -1, np.int32)
                 fresh.reshape(-1)[:pick.size] = pick
-                bias = np.where(fresh >= 0, 0,
-                                np.inf).astype(np.float32)
-                st.superstep_call(fresh, bias, empty_pool, fringe,
-                                  delta_cap=32, select_k=1)
-                st.cache_scored[pick] = True
-            # ... then admit a random batch to a random phase
+            bias = np.where(fresh >= 0, 0, np.inf).astype(np.float32)
+            cap = rng.integers(0, t + 1, size=k)
+            tgt = (acc + cap).astype(np.int32)
+            handle = st.dispatch(fresh, bias, empty_pool, fringe,
+                                 fresh[fresh >= 0].astype(np.int64),
+                                 tgt, 32, t)
+            st.harvest(handle, acc, targets)
+            # ... then admit a random batch by host injection too
             un = np.flatnonzero(st.assignment < 0)
             if un.size == 0:
                 break
             vs = rng.choice(un, size=min(int(rng.integers(1, 8)),
                                          un.size), replace=False)
-            st.assign_now(vs, int(rng.integers(0, k)))
-        while st.delta_ids:      # flush pending deltas to the device
-            st.superstep_call(np.full((k, 1), -1, np.int32),
-                              np.full((k, 1), np.inf, np.float32),
-                              np.full((k, 1), -1, np.int32), fringe,
-                              delta_cap=32, select_k=1)
+            g = int(rng.integers(0, k))
+            st.assign_now(vs, g)
+            acc[g] += vs.size
+        while st.delta_ids or st.pending_dirty:    # flush tails + deltas
+            handle = st.dispatch(np.full((k, 1), -1, np.int32),
+                                 np.full((k, 1), np.inf, np.float32),
+                                 np.full((k, 1), -1, np.int32), fringe,
+                                 np.empty(0, dtype=np.int64),
+                                 acc.astype(np.int32), 32, 1)
+            st.harvest(handle, acc, targets)
         cache = np.asarray(st.dev_cache, dtype=np.float64)
         # rows wider than the run's tile width are truncated hubs parked
         # at ~1e12 — the exactness contract covers everything else
@@ -298,6 +309,13 @@ def test_superstep_cache_exact_after_admissions():
                                        st.assignment)
         assert (ref > 0).any()           # the recompute is not trivial
         np.testing.assert_allclose(cache[scored], ref)
+        # device/host assignment + totals parity after the flush
+        np.testing.assert_array_equal(np.asarray(st.dev_assign),
+                                      st.assignment)
+        np.testing.assert_array_equal(
+            np.asarray(st.dev_acc),
+            np.bincount(st.assignment[st.assignment >= 0],
+                        minlength=k))
 
 
 def test_superstep_cross_phase_cache_reuse():

@@ -129,21 +129,24 @@ def test_conflict_lowest_phase_wins_program():
     bias = np.where(fresh >= 0, 0, np.inf).astype(np.float32)
     pool = np.full((kG, 4), -1, np.int32)
     fringe = np.full((kG, 1), -1, np.int32)
-    cap = np.full(kG, t, np.int32)
+    targets = np.full(kG, t, np.int32)       # cap = t admissions each
     assign = jnp.full((n,), -1, jnp.int32)
     cache = jnp.full((n,), -1.0, jnp.float32)
+    acc = jnp.zeros((kG,), jnp.int32)
     empty_i = np.full(4, -1, np.int32)
-    a2, c2, winners, ncf = scoring.sharded_superstep_device(
-        dev[0], dev[1], assign, cache, empty_i,
+    a2, c2, acc2, winners, ncf, n_stale = scoring.sharded_superstep_device(
+        dev[0], dev[1], assign, cache, acc, empty_i,
         np.zeros(4, np.int32), empty_i, np.zeros(4, np.float32),
-        fresh, bias, pool, fringe, cap,
+        fresh, bias, pool, fringe, targets,
         num_devices=D, group_l=kL, tile_l=32, select_k=t,
         interpret=True)
     winners = np.asarray(winners)
     assert winners[0, 0] == v                        # lowest phase won
     assert v not in winners[1]                       # loser redraws later
     assert int(ncf) == 1
+    assert int(n_stale) == 0                         # nothing in flight
     assert int(np.asarray(a2)[v]) == 0
+    assert int(np.asarray(acc2)[0]) >= 1             # winner counted
 
 
 @needs_multi
@@ -192,6 +195,8 @@ def test_sharded_cache_exact_after_admissions():
         st = _ShardedState(hg, k, p, D)
         fringe = np.full((k, 1), -1, np.int32)
         empty_pool = np.full((k, 4), -1, np.int32)
+        acc = np.zeros(k, dtype=np.int64)
+        targets = np.full(k, hg.n, dtype=np.int64)
         # make sure the tail path runs: the widest vertex, if wider than
         # the run's tile, must be admitted at least once
         wide_v = int(np.argmax(st.deg))
@@ -208,23 +213,26 @@ def test_sharded_cache_exact_after_admissions():
             # zero bias everywhere: wide rows stay admissible, so the
             # clipped-decrement + tail machinery actually executes
             bias = np.where(fresh >= 0, 0, np.inf).astype(np.float32)
-            cap = rng.integers(0, t + 1, size=k).astype(np.int32)
-            winners = st.sharded_call(fresh, bias, empty_pool, fringe,
-                                      cap, delta_cap=32)
-            st.cache_scored[fresh[fresh >= 0]] = True
-            for g in range(k):
-                w = winners[g][winners[g] >= 0]
-                st.assignment[w] = g          # mirror, like the runner
+            cap = rng.integers(0, t + 1, size=k)
+            tgt = (acc + cap).astype(np.int32)
+            handle = st.dispatch(fresh, bias, empty_pool, fringe,
+                                 fresh[fresh >= 0].astype(np.int64),
+                                 tgt, 32, t)
+            st.harvest(handle, acc, targets)   # mirror, like the runner
             # host-injection path too
             un = np.flatnonzero(st.assignment < 0)
             if un.size and step % 3 == 0:
                 vs = rng.choice(un, size=min(3, un.size), replace=False)
-                st.assign_now(vs, int(rng.integers(0, k)))
+                g = int(rng.integers(0, k))
+                st.assign_now(vs, g)
+                acc[g] += vs.size
         while st.delta_ids or st.pending_dirty:    # flush tails + deltas
-            st.sharded_call(np.full((k, 1), -1, np.int32),
-                            np.full((k, 1), np.inf, np.float32),
-                            np.full((k, 1), -1, np.int32), fringe,
-                            np.zeros(k, np.int32), delta_cap=32)
+            handle = st.dispatch(np.full((k, 1), -1, np.int32),
+                                 np.full((k, 1), np.inf, np.float32),
+                                 np.full((k, 1), -1, np.int32), fringe,
+                                 np.empty(0, dtype=np.int64),
+                                 acc.astype(np.int32), 32, 1)
+            st.harvest(handle, acc, targets)
         cache = np.asarray(st.dev_cache, dtype=np.float64)
         scored = np.flatnonzero(st.cache_scored & (st.deg <= st.tile_l))
         assert scored.size > 50
@@ -233,9 +241,13 @@ def test_sharded_cache_exact_after_admissions():
                                        st.assignment)
         assert (ref > 0).any()
         np.testing.assert_allclose(cache[scored], ref)
-        # device/host assignment parity after the flush
+        # device/host assignment + totals parity after the flush
         np.testing.assert_array_equal(np.asarray(st.dev_assign),
                                       st.assignment)
+        np.testing.assert_array_equal(
+            np.asarray(st.dev_acc),
+            np.bincount(st.assignment[st.assignment >= 0],
+                        minlength=k))
 
 
 # ------------------------------------------------- kernel shard offsets

@@ -4,12 +4,16 @@ a small synthetic hypergraph, and the description surface
 (``describe_methods``) must cover the registry exactly. A method added
 to ``partition()`` without registry metadata — or whose balance claim
 drifts from its implementation — fails here, not in production."""
+import dataclasses
+import inspect
+
 import numpy as np
 import pytest
 
 from repro.core import metrics
 from repro.core.partition_api import (METHOD_INFO, METHODS, balance_slack,
-                                      describe_methods, partition)
+                                      describe_methods, method_knobs,
+                                      partition)
 from repro.data.synthetic import powerlaw_hypergraph
 
 
@@ -43,6 +47,46 @@ def test_registry_metadata_complete():
     for name, info in METHOD_INFO.items():
         assert callable(info["balance_slack"]), name
         assert info["balance_slack"](1000, 8) >= 1, name
+
+
+def test_registered_knobs_match_engine_signatures():
+    """Every knob the registry documents must exist on the engine it is
+    forwarded to — a renamed dataclass field or keyword drifts here."""
+    from repro.core.hype import HypeParams
+    from repro.core.hype_batched import (BatchedParams, ShardedParams,
+                                         SuperstepParams)
+    from repro.core.minmax import minmax_partition
+    from repro.core.shp import shp_partition
+
+    param_fields = {
+        "hype": {f.name for f in dataclasses.fields(HypeParams)},
+        "hype_batched": {f.name
+                         for f in dataclasses.fields(BatchedParams)},
+        "hype_superstep": {f.name
+                           for f in dataclasses.fields(SuperstepParams)},
+        "hype_sharded": {f.name
+                         for f in dataclasses.fields(ShardedParams)},
+        "minmax_nb": set(inspect.signature(minmax_partition).parameters),
+        "shp": set(inspect.signature(shp_partition).parameters),
+    }
+    for method in METHODS:
+        knobs = method_knobs(method)
+        assert isinstance(knobs, tuple), method
+        if method in param_fields:
+            missing = set(knobs) - param_fields[method]
+            assert not missing, (method, missing)
+    # the pipelined scheduler's knob is registered on both engines that
+    # share it — the drift test stays exhaustive as knobs are added
+    assert "pipeline_depth" in method_knobs("hype_superstep")
+    assert "pipeline_depth" in method_knobs("hype_sharded")
+    assert "devices" in method_knobs("hype_sharded")
+
+
+def test_registered_knobs_are_forwarded(hg):
+    """A registered knob must actually reach the engine: pipeline_depth=1
+    vs default must both run to completion through partition()."""
+    a = partition(hg, 4, "hype_superstep", seed=0, pipeline_depth=1)
+    assert (a >= 0).all() and (a < 4).all()
 
 
 def test_unknown_method_raises(hg):

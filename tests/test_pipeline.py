@@ -1,0 +1,227 @@
+"""Pipelined superstep scheduler (DESIGN.md §4d): depth-1 golden parity
+with the pre-pipeline engine, the depth>1 contract (completeness /
+balance / determinism / quality band), pipeline counter consistency,
+``take_delta`` overflow semantics, and the interpret-mode env override."""
+import dataclasses
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.hype_batched import (ShardedParams, SuperstepParams,
+                                     _SuperstepState,
+                                     hype_sharded_partition,
+                                     hype_superstep_partition)
+from repro.core.hypergraph import Hypergraph
+from repro.data.synthetic import powerlaw_hypergraph, reddit_like
+
+
+def _digest(a: np.ndarray) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(a, dtype=np.int32).tobytes()).hexdigest()[:16]
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(600, 400, seed=11, max_edge=30,
+                               max_degree=20)
+
+
+# --------------------------------------------- depth-1 golden parity
+
+# sha256 prefixes of the assignments the lock-step (pre-pipeline)
+# engine produced for these exact configurations, captured at the commit
+# that introduced the pipeline. pipeline_depth=1 must reproduce them bit
+# for bit: the device-side admission move, the flat bucket store and the
+# vectorized harvest are all exact refactors of the lock-step schedule.
+_GOLD_PL600 = {(5, 8): "9e8abe668aa53a74",
+               (16, 8): "bbcd2f732e03af91",
+               (16, 16): "e67c679d4029b7d0"}
+_GOLD_TINY = {2: "a102badbeab32296", 3: "b4293f255e72d527"}
+_GOLD_PL300 = "f821db1120c8d632"
+_GOLD_REDDIT = "13f232f653c9c752"
+
+
+@pytest.mark.parametrize("k,t", sorted(_GOLD_PL600))
+def test_depth1_bit_identical_powerlaw(hg, k, t):
+    a = hype_superstep_partition(
+        hg, k, SuperstepParams(seed=0, t=t, pipeline_depth=1))
+    assert _digest(a) == _GOLD_PL600[(k, t)]
+
+
+def test_depth1_bit_identical_restart_heavy():
+    """Dense short-edge graph at k=24 / pool_cap=16 hits the restart and
+    pool-release paths; the golden pins them too."""
+    hg = powerlaw_hypergraph(300, 500, seed=21, max_edge=10,
+                             max_degree=30)
+    a = hype_superstep_partition(
+        hg, 24, SuperstepParams(seed=1, pool_cap=16, pipeline_depth=1))
+    assert _digest(a) == _GOLD_PL300
+
+
+def test_depth1_bit_identical_edge_cases():
+    hg = Hypergraph.from_edge_lists(6, [[0, 1], [1, 2, 3], []])
+    for k, want in _GOLD_TINY.items():
+        a = hype_superstep_partition(
+            hg, k, SuperstepParams(seed=0, pipeline_depth=1))
+        assert _digest(a) == want
+
+
+def test_depth1_bit_identical_reddit_quick():
+    a = hype_superstep_partition(
+        reddit_like(scale=0.005, seed=0), 32,
+        SuperstepParams(seed=0, t=16, pipeline_depth=1))
+    assert _digest(a) == _GOLD_REDDIT
+
+
+# --------------------------------------------------- depth>1 contract
+
+@pytest.mark.parametrize("depth", [2, 3])
+def test_pipelined_complete_balanced_deterministic(hg, depth):
+    p = SuperstepParams(seed=0, t=8, pipeline_depth=depth)
+    a1 = hype_superstep_partition(hg, 16, p)
+    a2 = hype_superstep_partition(hg, 16, p)
+    np.testing.assert_array_equal(a1, a2)
+    assert a1.dtype == np.int32
+    assert a1.min() >= 0 and a1.max() < 16
+    sizes = metrics.partition_sizes(a1, 16)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_pipelined_quality_band(hg):
+    """Speculative packing may reorder admissions, but the cut must stay
+    in the lock-step engine's regime (same band the engine ladder holds
+    between rungs)."""
+    for k, t in ((16, 8), (8, 16)):
+        km = {}
+        for depth in (1, 2):
+            a = hype_superstep_partition(
+                hg, k, SuperstepParams(seed=0, t=t, pipeline_depth=depth))
+            km[depth] = metrics.k_minus_1(hg, a)
+        assert km[2] <= 1.15 * km[1] + 20, km
+
+
+def test_pipelined_edge_cases():
+    hg = Hypergraph.from_edge_lists(6, [[0, 1], [1, 2, 3], []])
+    for k in (1, 2, 3, 8):
+        a = hype_superstep_partition(
+            hg, k, SuperstepParams(seed=0, pipeline_depth=2))
+        assert (a >= 0).all() and (a < k).all()
+        sizes = np.bincount(a, minlength=min(k, 6))
+        assert sizes.max() - sizes.min() <= 1
+
+
+def test_pipelined_sharded_contract(hg):
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs a simulated multi-device mesh")
+    for depth in (1, 2):
+        p = ShardedParams(seed=0, devices=2, pipeline_depth=depth)
+        a1 = hype_sharded_partition(hg, 16, p)
+        a2 = hype_sharded_partition(hg, 16, p)
+        np.testing.assert_array_equal(a1, a2)
+        sizes = metrics.partition_sizes(a1, 16)
+        assert sizes.max() - sizes.min() <= 1
+
+
+def test_pipeline_depth_validated(hg):
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        hype_superstep_partition(
+            hg, 4, SuperstepParams(seed=0, pipeline_depth=0))
+
+
+# ------------------------------------------------- counter consistency
+
+def test_pipeline_counters(hg):
+    """Counters must be mutually consistent: depth 1 never sees a stale
+    slot; at any depth the stall count is bounded by the supersteps and
+    the host/device split covers real time."""
+    _, s1 = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, pipeline_depth=1),
+        return_stats=True)
+    assert s1.stale_redraws == 0
+    assert s1.supersteps > 0
+    assert s1.pipeline_stalls <= s1.supersteps
+    assert s1.host_s > 0.0 and s1.device_s >= 0.0
+    _, s2 = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, pipeline_depth=2),
+        return_stats=True)
+    assert s2.supersteps > 0
+    assert s2.pipeline_stalls <= s2.supersteps
+    # a stale slot only exists while >1 superstep is in flight, and a
+    # superstep exposes at most the per-phase pool buffer (pool_cap
+    # plus the pipeline's (depth-1)*t slack) to staleness
+    assert s2.stale_redraws <= s2.supersteps * 16 * (64 + 8)
+
+
+def test_pipeline_device_resident_claims(hg):
+    """The pipelined engine keeps the superstep engine's transfer story:
+    one kernel call per superstep, id-sized steady-state H2D traffic."""
+    from repro.core import scoring
+    _, stt = hype_superstep_partition(
+        hg, 8, SuperstepParams(seed=0, pipeline_depth=2),
+        return_stats=True)
+    assert stt.kernel_calls == stt.supersteps
+    assert stt.host_rows == 0
+    per_step = stt.host_to_device_bytes / stt.supersteps
+    assert per_step < 8 * 64 * scoring.L_BUCKETS[-1]
+
+
+# ------------------------------------------------ take_delta overflow
+
+def test_take_delta_cap_overflow():
+    """The leftover path must preserve FIFO order and dtypes (int64 ids,
+    int32 phases) across an overflowing drain."""
+    hg = powerlaw_hypergraph(120, 90, seed=3, max_edge=12, max_degree=8)
+    st = _SuperstepState(hg, 4, SuperstepParams(seed=0))
+    st.assign_now(np.array([5, 7, 9]), 1)
+    st.assign_now(np.array([11, 13]), 2)
+    ids, vals = st.take_delta(3)
+    assert ids.dtype == np.int64 and vals.dtype == np.int32
+    np.testing.assert_array_equal(ids, [5, 7, 9])
+    np.testing.assert_array_equal(vals, [1, 1, 1])
+    # the leftover tail must keep its dtypes and order, and new queued
+    # deltas must drain after it
+    st.assign_now(np.array([17]), 3)
+    ids, vals = st.take_delta(3)
+    assert ids.dtype == np.int64 and vals.dtype == np.int32
+    np.testing.assert_array_equal(ids, [11, 13, 17])
+    np.testing.assert_array_equal(vals, [2, 2, 3])
+    ids, vals = st.take_delta(3)
+    assert ids.size == 0 and vals.size == 0
+    assert ids.dtype == np.int64 and vals.dtype == np.int32
+
+
+def test_take_delta_exact_cap_boundary():
+    hg = powerlaw_hypergraph(120, 90, seed=3, max_edge=12, max_degree=8)
+    st = _SuperstepState(hg, 4, SuperstepParams(seed=0))
+    st.assign_now(np.array([1, 2, 3]), 0)
+    ids, vals = st.take_delta(3)        # exactly cap: no leftover
+    np.testing.assert_array_equal(ids, [1, 2, 3])
+    assert not st.delta_ids and not st.delta_vals
+
+
+# -------------------------------------------- interpret-mode override
+
+def test_pallas_interpret_env_override(monkeypatch):
+    from repro.kernels._compat import pallas_interpret
+    import jax
+    default = jax.default_backend() != "tpu"
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert pallas_interpret() is default
+    for val, want in (("1", True), ("true", True), ("on", True),
+                      ("0", False), ("false", False), ("off", False)):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", val)
+        assert pallas_interpret() is want, val
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "")   # empty = default
+    assert pallas_interpret() is default
+
+
+def test_pallas_interpret_reaches_kernels(monkeypatch, hg):
+    """The env override must actually steer the engines' kernel calls:
+    forcing interpret mode on CPU is a no-op that still completes."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    a = hype_superstep_partition(hg, 4, SuperstepParams(seed=0))
+    assert (a >= 0).all()
