@@ -42,6 +42,9 @@ SHARDED_T = 16
 SHARDED_DEVICES = (1, 2, 4)   # clamped to the simulated mesh size
 PIPELINE_K = 32          # pipeline-depth axis: k/t of the acceptance row
 PIPELINE_T = 16          # (depth-1 vs default depth-2, host/device split)
+REFINE_K = 32            # refinement axis: the k/t acceptance row gets a
+REFINE_T = 16            # refined sibling (engine suffix `_r{passes}`)
+REFINE_PASSES = 4        # kway_refine post-passes for the refined rows
 JAX_N = 300              # hype_jax validation row size
 
 
@@ -73,7 +76,8 @@ def run():
     rows = []
     meta = {"quick": QUICK, "repeats": REPEATS,
             "adjacency_build_s": {}, "speedups": {},
-            "superstep_stats": {}, "sharded_stats": {}, "pipeline": {}}
+            "superstep_stats": {}, "sharded_stats": {}, "pipeline": {},
+            "refine": {}}
 
     # warm the Pallas interpret traces once (process-wide)
     import jax
@@ -143,6 +147,41 @@ def run():
                 }
                 if k == SHARDED_K and t == SHARDED_T:
                     superstep_ref = (dt, metrics.k_minus_1(hg, a))
+                # refinement axis: the acceptance row's refined sibling
+                # (kway_refine post-passes; the km1_ratio_vs_hype of
+                # these rows is the quality win compare_baseline gates)
+                if k == REFINE_K and t == REFINE_T:
+                    (ar, str_), dtr = _run(
+                        hype_superstep_partition, hg, k,
+                        SuperstepParams(seed=0, t=t,
+                                        refine_passes=REFINE_PASSES),
+                        return_stats=True)
+                    rows.append(_row(
+                        name, hg, k,
+                        f"hype_superstep_t{t}_r{REFINE_PASSES}", dtr,
+                        ar, {"t": t, "refine_passes": REFINE_PASSES,
+                             "refined": True,
+                             "speedup_vs_hype": round(
+                                 base["runtime_s"] / max(dtr, 1e-9), 2),
+                             "km1_ratio_vs_hype": round(
+                                 rec_ratio(ar, base, hg), 4)}))
+                    rs = str_.refine
+                    meta["refine"][f"{name}_k{k}_t{t}"] = {
+                        "refine_passes": REFINE_PASSES,
+                        "passes_run": rs.passes_run,
+                        "boundary_rows": rs.boundary_rows,
+                        "kernel_calls": rs.kernel_calls,
+                        "proposals": rs.proposals,
+                        "moves": rs.moves,
+                        "swaps": rs.swaps,
+                        "gain": rs.gain,
+                        "km1_before": rec["k_minus_1"],
+                        "km1_after": metrics.k_minus_1(hg, ar),
+                        "rejected_conflict": rs.rejected_conflict,
+                        "rejected_balance": rs.rejected_balance,
+                        "refine_s_overhead": round(
+                            max(dtr - dt, 0.0), 4),
+                    }
                 # pipeline-depth axis: depth-1 (lock-step) vs the
                 # default double-buffered engine on the acceptance row,
                 # with the host/device wall-clock split of each
@@ -244,6 +283,8 @@ def run():
                 head["speedup_vs_batched_t8"] = r["speedup_vs_batched_t8"]
             if "km1_ratio_vs_superstep" in r:
                 head["km1_ratio_vs_superstep"] = r["km1_ratio_vs_superstep"]
+            if r.get("refined"):
+                head["refined"] = True      # compare_baseline km1 gate
             meta["speedups"][f"reddit_k32_{r['engine']}"] = head
 
     payload = {"meta": meta, "rows": rows}

@@ -7,8 +7,14 @@ blocks (``meta["speedups"]``, written by ``bench_engine_scaling``). A
 row present in both that lost more than ``MAX_REGRESSION`` of its
 baseline speedup fails the check; rows that only exist on one side are
 reported but never fail (engines come and go between PRs). Quality is
-guarded too: a row whose ``km1_ratio_vs_hype`` newly exceeds the 1.10
-acceptance bound fails.
+guarded twice:
+
+* a row whose ``km1_ratio_vs_hype`` newly exceeds the 1.10 acceptance
+  bound fails;
+* a **refined** row (``"refined": true`` — the ``refine_passes`` post-
+  pass rows) whose ``km1_ratio_vs_hype`` regressed by more than
+  ``KM1_REFINED_TOL`` (2%) over its baseline fails, so the quality the
+  refinement subsystem bought stays *enforced*, not just measured.
 
 Pure stdlib — runnable before dependencies are installed.
 """
@@ -19,6 +25,7 @@ import sys
 
 MAX_REGRESSION = 0.25      # fraction of baseline speedup a row may lose
 KM1_BOUND = 1.10           # quality acceptance bound (ISSUE 2)
+KM1_REFINED_TOL = 0.02     # max relative km1 regression on refined rows
 
 
 def load_speedups(path: str) -> dict:
@@ -61,6 +68,14 @@ def compare(base: dict, cur: dict) -> int:
             failures.append(
                 f"{key}: km1_ratio_vs_hype {km_b} -> {km_c} "
                 f"(crossed the {KM1_BOUND} bound)")
+        refined = bool(base[key].get("refined")
+                       or cur[key].get("refined"))
+        if refined and km_b > 0 \
+                and km_c > km_b * (1.0 + KM1_REFINED_TOL):
+            status = "QUALITY"
+            failures.append(
+                f"{key}: refined-row km1_ratio_vs_hype {km_b} -> {km_c} "
+                f"(> {KM1_REFINED_TOL * 100:.0f}% quality regression)")
         print(f"    {key}: {b}x -> {c}x  km1 {km_b} -> {km_c}  [{status}]")
     if failures:
         print("\nFAIL: perf trajectory regressed:")

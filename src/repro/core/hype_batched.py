@@ -58,6 +58,9 @@ class BatchedParams:
     kernel_min: int = 16   # min batch worth a device round-trip; smaller
     #                        dribbles score on host (same formula and hub
     #                        truncation convention as the kernel tiles)
+    refine_passes: int = 0  # post-pass boundary-refinement passes
+    #                         (core/refine.py, DESIGN.md §4e); 0 = off,
+    #                         output bit-identical to the bare engine
     seed: int = 0
 
 
@@ -93,6 +96,8 @@ class BatchedStats:
     stale_redraws: int = 0          # pool slots skipped on device because
     #                                 an interleaved superstep of the
     #                                 pipeline had already assigned them
+    # refinement post-pass (None unless refine_passes > 0 ran):
+    refine: Optional[object] = None     # core.refine.RefineStats
 
 
 class _BatchedState:
@@ -1164,6 +1169,28 @@ class _ShardedState(_SuperstepState):
         return progress
 
 
+def _maybe_refine(hg: Hypergraph, k: int, params: BatchedParams,
+                  assignment: np.ndarray, stats: BatchedStats
+                  ) -> np.ndarray:
+    """Run the k-way refinement post-pass when ``refine_passes`` > 0.
+
+    Shared by every engine of the family (DESIGN.md §4e): boundary
+    vertices are screened on device by the ``kway_gains`` kernel and
+    moved under exact-gain, balance-capped admission, so the engine's
+    ``max - min <= 1`` contract survives. ``refine_passes = 0`` returns
+    the assignment object untouched — the engines stay bit-identical to
+    their pre-refinement outputs (golden-hash-enforced).
+    """
+    passes = getattr(params, "refine_passes", 0)
+    if passes <= 0 or k <= 1:
+        return assignment
+    from .refine import refine_kway
+
+    refined, rstats = refine_kway(hg, assignment, k, passes)
+    stats.refine = rstats
+    return refined
+
+
 def hype_sharded_partition(hg: Hypergraph, k: int,
                            params: Optional[ShardedParams] = None,
                            return_stats: bool = False):
@@ -1214,6 +1241,7 @@ def hype_sharded_partition(hg: Hypergraph, k: int,
     if assignment is None:
         return hype_superstep_partition(hg, k, params, return_stats)
     assert (assignment >= 0).all()
+    assignment = _maybe_refine(hg, k, params, assignment, st.stats)
     if return_stats:
         return assignment, st.stats
     return assignment
@@ -1255,6 +1283,7 @@ def hype_superstep_partition(hg: Hypergraph, k: int,
     if assignment is None:
         return hype_batched_partition(hg, k, params, return_stats)
     assert (assignment >= 0).all()
+    assignment = _maybe_refine(hg, k, params, assignment, st.stats)
     if return_stats:
         return assignment, st.stats
     return assignment
@@ -1287,6 +1316,7 @@ def hype_batched_partition(hg: Hypergraph, k: int,
             break
         _grow_partition(st, i, base + (1 if i < rem else 0))
     assert (st.assignment >= 0).all()
+    assignment = _maybe_refine(hg, k, params, st.assignment, st.stats)
     if return_stats:
-        return st.assignment, st.stats
-    return st.assignment
+        return assignment, st.stats
+    return assignment

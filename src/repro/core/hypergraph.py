@@ -230,17 +230,46 @@ class Hypergraph:
                           e2v_indptr=self.v2e_indptr, e2v_indices=self.v2e_indices)
 
     def validate(self) -> None:
-        assert self.v2e_indptr.shape == (self.n + 1,)
-        assert self.e2v_indptr.shape == (self.m + 1,)
-        assert self.v2e_indptr[-1] == self.v2e_indices.shape[0]
-        assert self.e2v_indptr[-1] == self.e2v_indices.shape[0]
-        assert self.v2e_indices.shape == self.e2v_indices.shape
+        """Check the CSR invariants; raise ``ValueError`` on corruption.
+
+        Raises (never asserts — ``python -O`` strips ``assert``, which
+        would turn validation into a silent no-op) with a message naming
+        the violated invariant. Returns None on a well-formed structure.
+        """
+        if self.v2e_indptr.shape != (self.n + 1,):
+            raise ValueError(
+                f"v2e_indptr shape {self.v2e_indptr.shape} != (n+1,) "
+                f"= ({self.n + 1},)")
+        if self.e2v_indptr.shape != (self.m + 1,):
+            raise ValueError(
+                f"e2v_indptr shape {self.e2v_indptr.shape} != (m+1,) "
+                f"= ({self.m + 1},)")
+        if self.v2e_indptr[-1] != self.v2e_indices.shape[0]:
+            raise ValueError(
+                f"v2e_indptr[-1] = {int(self.v2e_indptr[-1])} does not "
+                f"match v2e_indices size {self.v2e_indices.shape[0]}")
+        if self.e2v_indptr[-1] != self.e2v_indices.shape[0]:
+            raise ValueError(
+                f"e2v_indptr[-1] = {int(self.e2v_indptr[-1])} does not "
+                f"match e2v_indices size {self.e2v_indices.shape[0]}")
+        if self.v2e_indices.shape != self.e2v_indices.shape:
+            raise ValueError(
+                f"pin-count mismatch: {self.v2e_indices.shape[0]} v2e "
+                f"pins vs {self.e2v_indices.shape[0]} e2v pins")
         if self.e2v_indices.size:
-            assert self.e2v_indices.min() >= 0
-            assert self.e2v_indices.max() < self.n
+            if self.e2v_indices.min() < 0:
+                raise ValueError("negative vertex id in e2v_indices")
+            if self.e2v_indices.max() >= self.n:
+                raise ValueError(
+                    f"vertex id {int(self.e2v_indices.max())} out of "
+                    f"range [0, {self.n})")
         if self.v2e_indices.size:
-            assert self.v2e_indices.min() >= 0
-            assert self.v2e_indices.max() < self.m
+            if self.v2e_indices.min() < 0:
+                raise ValueError("negative edge id in v2e_indices")
+            if self.v2e_indices.max() >= self.m:
+                raise ValueError(
+                    f"edge id {int(self.v2e_indices.max())} out of "
+                    f"range [0, {self.m})")
 
     def stats(self) -> dict:
         es, vd = self.edge_sizes, self.vertex_degrees

@@ -2,53 +2,87 @@
 
 All metrics are fully vectorized over the pin arrays, so they run in
 O(n_pins log n_pins) and scale to hundreds of millions of pins.
+
+Every spans-derived metric takes an optional explicit ``k`` (the keying
+for the (edge, partition) dedup; defaulting to ``assignment.max() + 1``
+is only correct when the top partition happens to be occupied) and an
+optional precomputed ``spans`` array — ``spans_per_edge`` is a full
+pin-array sort/unique, so a report that needs several metrics should
+compute it once and share it (``all_metrics`` does).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
 from .hypergraph import Hypergraph
 
 
-def _edge_partition_pairs(hg: Hypergraph, assignment: np.ndarray):
-    """Unique (edge, partition) pairs over all pins."""
-    edge_of_pin = np.repeat(np.arange(hg.m, dtype=np.int64), hg.edge_sizes)
+def _edge_partition_pairs(hg: Hypergraph, assignment: np.ndarray,
+                          k: Optional[int] = None):
+    """Unique (edge, partition) pairs over all pins (edge ids only).
+
+    Keys on the explicit partition count ``k`` so the same assignment
+    always hashes identically, no matter which partitions happen to be
+    occupied (the old keying used ``assignment.max() + 2``).
+    """
     part_of_pin = assignment[hg.e2v_indices].astype(np.int64)
     if np.any(part_of_pin < 0):
         raise ValueError("metrics require a complete assignment")
-    key = edge_of_pin * np.int64(assignment.max() + 2) + part_of_pin
+    if k is None:
+        k = int(assignment.max()) + 1 if assignment.size else 1
+    elif part_of_pin.size and part_of_pin.max() >= k:
+        raise ValueError(
+            f"assignment uses partition {int(part_of_pin.max())} "
+            f">= k = {k}")
+    edge_of_pin = np.repeat(np.arange(hg.m, dtype=np.int64),
+                            hg.edge_sizes)
+    key = edge_of_pin * np.int64(k) + part_of_pin
     uniq_key = np.unique(key)
-    uniq_edges = uniq_key // np.int64(assignment.max() + 2)
-    return uniq_edges
+    return uniq_key // np.int64(k)
 
 
-def spans_per_edge(hg: Hypergraph, assignment: np.ndarray) -> np.ndarray:
+def spans_per_edge(hg: Hypergraph, assignment: np.ndarray,
+                   k: Optional[int] = None) -> np.ndarray:
     """For each hyperedge, the number of distinct partitions it spans."""
-    uniq_edges = _edge_partition_pairs(hg, assignment)
+    uniq_edges = _edge_partition_pairs(hg, assignment, k)
     spans = np.zeros(hg.m, dtype=np.int64)
     np.add.at(spans, uniq_edges, 1)
     return spans
 
 
-def k_minus_1(hg: Hypergraph, assignment: np.ndarray) -> int:
+def _spans(hg, assignment, k, spans):
+    return spans if spans is not None else spans_per_edge(hg, assignment,
+                                                          k)
+
+
+def k_minus_1(hg: Hypergraph, assignment: np.ndarray,
+              k: Optional[int] = None, *,
+              spans: Optional[np.ndarray] = None) -> int:
     """The (k-1) metric: sum over hyperedges of (#partitions spanned - 1).
 
     This is the paper's primary quality objective (§II). Empty hyperedges
-    (size 0) contribute 0.
+    (size 0) contribute 0. Pass ``spans`` (a ``spans_per_edge`` result)
+    to share one spans computation across several metrics.
     """
-    spans = spans_per_edge(hg, assignment)
+    spans = _spans(hg, assignment, k, spans)
     nonempty = hg.edge_sizes > 0
     return int(np.sum(spans[nonempty] - 1))
 
 
-def hyperedge_cut(hg: Hypergraph, assignment: np.ndarray) -> int:
+def hyperedge_cut(hg: Hypergraph, assignment: np.ndarray,
+                  k: Optional[int] = None, *,
+                  spans: Optional[np.ndarray] = None) -> int:
     """Number of hyperedges spanning more than one partition."""
-    return int(np.sum(spans_per_edge(hg, assignment) > 1))
+    return int(np.sum(_spans(hg, assignment, k, spans) > 1))
 
 
-def sum_external_degree(hg: Hypergraph, assignment: np.ndarray) -> int:
+def sum_external_degree(hg: Hypergraph, assignment: np.ndarray,
+                        k: Optional[int] = None, *,
+                        spans: Optional[np.ndarray] = None) -> int:
     """SOED: sum of spans over cut hyperedges."""
-    spans = spans_per_edge(hg, assignment)
+    spans = _spans(hg, assignment, k, spans)
     return int(np.sum(spans[spans > 1]))
 
 
@@ -65,24 +99,26 @@ def vertex_imbalance(assignment: np.ndarray, k: int) -> float:
     return float((mx - sizes.min()) / mx) if mx > 0 else 0.0
 
 
-def replication_factor(hg: Hypergraph, assignment: np.ndarray) -> float:
+def replication_factor(hg: Hypergraph, assignment: np.ndarray,
+                       k: Optional[int] = None, *,
+                       spans: Optional[np.ndarray] = None) -> float:
     """Average #partitions spanned per hyperedge.
 
     Directly proportional to the halo/communication volume of a
     vertex-partitioned distributed computation over the hypergraph.
     """
-    spans = spans_per_edge(hg, assignment)
+    spans = _spans(hg, assignment, k, spans)
     nonempty = hg.edge_sizes > 0
     return float(spans[nonempty].mean()) if nonempty.any() else 0.0
 
 
 def all_metrics(hg: Hypergraph, assignment: np.ndarray, k: int) -> dict:
-    spans = spans_per_edge(hg, assignment)
-    nonempty = hg.edge_sizes > 0
+    spans = spans_per_edge(hg, assignment, k)   # computed once, shared
     return {
-        "k_minus_1": int(np.sum(spans[nonempty] - 1)),
-        "hyperedge_cut": int(np.sum(spans > 1)),
-        "soed": int(np.sum(spans[spans > 1])),
+        "k_minus_1": k_minus_1(hg, assignment, k, spans=spans),
+        "hyperedge_cut": hyperedge_cut(hg, assignment, k, spans=spans),
+        "soed": sum_external_degree(hg, assignment, k, spans=spans),
         "vertex_imbalance": vertex_imbalance(assignment, k),
-        "replication_factor": float(spans[nonempty].mean()) if nonempty.any() else 0.0,
+        "replication_factor": replication_factor(hg, assignment, k,
+                                                 spans=spans),
     }

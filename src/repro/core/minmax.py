@@ -20,6 +20,34 @@ import numpy as np
 from .hypergraph import Hypergraph
 
 
+def _eligible_partitions(mode: str, vsizes: np.ndarray,
+                         eloads: np.ndarray, slack: int,
+                         cap: int) -> np.ndarray:
+    """Eligibility mask for one streamed vertex (slack filter + fallback).
+
+    ``nb`` mode: within ``slack`` of the least vertex-loaded partition
+    AND under the hard vertex capacity ``cap``. ``eb`` mode: within
+    ``slack`` of the least edge-loaded partition. When the slack filter
+    empties, fall back to the least-loaded partitions — in ``nb`` mode
+    the fallback must STILL respect ``cap`` (the old fallback dropped
+    it, silently over-filling a capped partition); only when every
+    partition is at capacity (impossible while vertices remain, kept as
+    a never-stall guarantee) does the bare least-loaded rule apply.
+    """
+    if mode == "nb":
+        eligible = vsizes <= vsizes.min() + slack
+        eligible &= vsizes < cap
+    else:
+        eligible = eloads <= eloads.min() + slack
+    if not eligible.any():
+        if mode == "nb":
+            under = vsizes < cap
+            if under.any():
+                return under & (vsizes == vsizes[under].min())
+        return vsizes == vsizes.min()
+    return eligible
+
+
 def minmax_partition(hg: Hypergraph, k: int, *, mode: str = "nb",
                      slack: int = 100, seed: int = 0) -> np.ndarray:
     if mode not in ("nb", "eb"):
@@ -52,13 +80,7 @@ def minmax_partition(hg: Hypergraph, k: int, *, mode: str = "nb",
         else:
             overlap = np.zeros(k, dtype=np.int64)
 
-        if mode == "nb":
-            eligible = vsizes <= vsizes.min() + slack
-            eligible &= vsizes < cap
-        else:
-            eligible = eloads <= eloads.min() + slack
-        if not eligible.any():
-            eligible = vsizes == vsizes.min()
+        eligible = _eligible_partitions(mode, vsizes, eloads, slack, cap)
 
         score = np.where(eligible, overlap, -1)
         best = int(np.argmax(score - 1e-9 * vsizes))  # tie-break: least loaded

@@ -1,25 +1,41 @@
-"""Mini multilevel hypergraph partitioner (group (I) stand-in for hMETIS).
+"""Multilevel hypergraph partitioners (group (I) stand-in for hMETIS).
 
-Recursive multilevel bisection:
+Two entry points share the coarsening machinery:
+
+* ``multilevel_partition`` — recursive multilevel bisection:
   1. *Coarsen*: heavy-connectivity pair matching over small hyperedges
      (ring pairs inside each edge accumulate connectivity weight; greedy
      matching on the heaviest pairs), iterated until the graph is small.
   2. *Initial bisection*: weighted greedy fill from a random order.
-  3. *Uncoarsen + FM refinement*: project the bipartition back one level at
-     a time and run Fiduccia-Mattheyses-style positive-gain passes.
+  3. *Uncoarsen + refinement*: project the bipartition back one level
+     at a time and refine. The refinement is the shared vectorized
+     gain machinery of ``core/refine.py`` (exact-gain, edge-disjoint,
+     balance-windowed admission) — the FM-style positive-gain pass it
+     replaces walked every vertex in a Python loop per pass.
   4. Recurse on the two halves for k-way.
 
-hMETIS itself is closed-source; this rendition reproduces its algorithmic
-family (multilevel recursive bisection, paper §IV "group (I)") at the small
-/medium scales where the paper reports it is competitive — and like the
-original it is expected to fail (here: be prohibitively slow) on massive
-hypergraphs, which the benchmarks demonstrate.
+* ``hype_multilevel_partition`` — direct k-way multilevel (method
+  ``hype_multilevel``): coarsen once, partition the coarsest graph with
+  the device-resident ``hype_superstep`` engine, then uncoarsen with
+  the same k-way refinement machinery at every level (weighted windows
+  on the coarse levels, an exact rebalance + unit-cap refinement at the
+  finest). This is the composition the refinement subsystem exists for
+  (DESIGN.md §4e): neighborhood expansion seeds the solution, FM-style
+  uncoarsening refinement closes the quality gap.
+
+hMETIS itself is closed-source; the bisection rendition reproduces its
+algorithmic family (multilevel recursive bisection, paper §IV "group
+(I)") at the small/medium scales where the paper reports it is
+competitive — and like the original it is expected to struggle (here:
+be prohibitively slow) on massive hypergraphs, which the benchmarks
+demonstrate.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .hypergraph import Hypergraph
+from .refine import refine_kway, rebalance_kway
 
 _MAX_MATCH_EDGE = 64      # only edges this small contribute matching pairs
 _COARSEST = 160           # stop coarsening below this many vertices
@@ -80,68 +96,23 @@ def _coarsen_once(hg: Hypergraph, vweights: np.ndarray):
 
 def _fm_refine(hg: Hypergraph, side: np.ndarray, vweights: np.ndarray,
                target_a: float, passes: int = 3) -> np.ndarray:
-    """2-way FM-style refinement of boolean ``side`` (True = side B)."""
-    side = side.copy()
-    edge_of_pin = np.repeat(np.arange(hg.m, dtype=np.int64), hg.edge_sizes)
-    for _ in range(passes):
-        cntB = np.zeros(hg.m, dtype=np.int64)
-        np.add.at(cntB, edge_of_pin, side[hg.e2v_indices].astype(np.int64))
-        cntA = hg.edge_sizes - cntB
-        # gain of moving v out of its side
-        gA = np.zeros(hg.n, dtype=np.int64)   # gain if v in A moves to B
-        gB = np.zeros(hg.n, dtype=np.int64)
-        np.add.at(gA, hg.e2v_indices,
-                  (cntB[edge_of_pin] > 0).astype(np.int64)
-                  - (cntA[edge_of_pin] > 1).astype(np.int64))
-        np.add.at(gB, hg.e2v_indices,
-                  (cntA[edge_of_pin] > 0).astype(np.int64)
-                  - (cntB[edge_of_pin] > 1).astype(np.int64))
-        gain = np.where(side, gB, gA)
-        order = np.argsort(-gain, kind="stable")
-        wA = float(vweights[~side].sum())
-        total = float(vweights.sum())
-        lo, hi = target_a - _EPS * total, target_a + _EPS * total
-        moved_any = False
-        locked = np.zeros(hg.n, dtype=bool)
-        for v in order:
-            v = int(v)
-            if gain[v] <= 0:
-                break
-            if locked[v]:
-                continue
-            wv = float(vweights[v])
-            if side[v]:     # B -> A
-                if wA + wv > hi:
-                    continue
-                wA += wv
-            else:           # A -> B
-                if wA - wv < lo:
-                    continue
-                wA -= wv
-            # verify gain is still correct w.r.t. current counts
-            es = hg.vertex_edges(v)
-            if side[v]:
-                g = int((cntA[es] > 0).sum() - (cntB[es] > 1).sum())
-            else:
-                g = int((cntB[es] > 0).sum() - (cntA[es] > 1).sum())
-            if g <= 0:
-                if side[v]:
-                    wA -= wv
-                else:
-                    wA += wv
-                continue
-            if side[v]:
-                cntB[es] -= 1
-                cntA[es] += 1
-            else:
-                cntA[es] -= 1
-                cntB[es] += 1
-            side[v] = ~side[v]
-            locked[v] = True
-            moved_any = True
-        if not moved_any:
-            break
-    return side
+    """2-way refinement of boolean ``side`` (True = side B).
+
+    The shared k-way gain machinery (``core/refine.py``) at k = 2:
+    exact cut gains for every boundary vertex in one vectorized pass,
+    admitted greedily under edge-disjointness and the ``±_EPS`` weight
+    window — the same positive-gain moves the old per-vertex FM loop
+    hunted for, without the O(n) Python pass per refinement round.
+    """
+    total = float(vweights.sum())
+    lo = np.array([target_a - _EPS * total,
+                   (total - target_a) - _EPS * total])
+    hi = np.array([target_a + _EPS * total,
+                   (total - target_a) + _EPS * total])
+    refined, _ = refine_kway(hg, side.astype(np.int32), 2, passes,
+                             weights=vweights, lo=lo, hi=hi,
+                             use_device=False)
+    return refined.astype(bool)
 
 
 def _bisect(hg: Hypergraph, vweights: np.ndarray, frac_a: float,
@@ -211,3 +182,60 @@ def multilevel_partition(hg: Hypergraph, k: int, seed: int = 0) -> np.ndarray:
 
     rec(hg, np.arange(hg.n, dtype=np.int64), vweights, k, 0)
     return assignment
+
+
+def hype_multilevel_partition(hg: Hypergraph, k: int, *, seed: int = 0,
+                              refine_passes: int = 3,
+                              coarsest: int = 3000) -> np.ndarray:
+    """Direct k-way multilevel partitioning (method ``hype_multilevel``).
+
+    Coarsen by heavy-connectivity matching until the graph drops below
+    ``max(coarsest, 8k)`` vertices, produce the initial k-way assignment
+    with the device-resident ``hype_superstep`` engine (all k phases
+    grown concurrently on the coarsest graph), then uncoarsen: project
+    the assignment through each contraction map and run the shared
+    k-way refinement (``core/refine.py``) — weighted balance windows on
+    the coarse levels, then an exact rebalance plus unit-cap refinement
+    at the finest level, so the final assignment keeps the HYPE family's
+    ``max - min <= 1`` vertex-balance contract. Seeded-deterministic.
+    """
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    out_small = np.zeros(hg.n, dtype=np.int32)
+    if k == 1 or hg.n == 0:
+        return out_small
+    from .hype_batched import SuperstepParams, hype_superstep_partition
+
+    levels = []
+    cur, curw = hg, np.ones(hg.n)
+    while cur.n > max(coarsest, 8 * k):
+        res = _coarsen_once(cur, curw)
+        if res is None:
+            break
+        chg, cw, cid = res
+        levels.append((cur, curw, cid))
+        cur, curw = chg, cw
+
+    a = hype_superstep_partition(cur, k, SuperstepParams(seed=seed))
+
+    def _window(w):
+        tgt = float(w.sum()) / k
+        return (np.full(k, (1.0 - 2 * _EPS) * tgt),
+                np.full(k, (1.0 + 2 * _EPS) * tgt))
+
+    if levels:      # coarse-vertex counts balance, weights may not:
+        lo, hi = _window(curw)      # refine under the weighted window
+        a, _ = refine_kway(cur, a, k, refine_passes, weights=curw,
+                           lo=lo, hi=hi, use_device=False)
+    while levels:
+        fine, finew, cid = levels.pop()
+        a = a[cid]
+        if levels:      # intermediate level: still weighted
+            lo, hi = _window(finew)
+            a, _ = refine_kway(fine, a, k, refine_passes, weights=finew,
+                               lo=lo, hi=hi, use_device=False)
+    # finest level: unit weights — restore the exact balance contract,
+    # then refine under the tight [floor, ceil] caps (device screening)
+    a = rebalance_kway(hg, np.asarray(a, dtype=np.int32), k)
+    a, _ = refine_kway(hg, a, k, refine_passes)
+    return a.astype(np.int32)

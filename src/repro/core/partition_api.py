@@ -7,9 +7,12 @@ an assignment produced here, so partitioners are interchangeable.
 Engine selection in one line each (see DESIGN.md for the full ladder):
 ``hype`` is the paper-faithful reference, ``hype_batched`` the
 throughput default, ``hype_superstep`` the device-resident large-k
-engine, ``hype_sharded`` the multi-device mesh engine, and the
-remaining methods are the paper's baselines. ``describe_methods()``
-returns these one-liners programmatically.
+engine, ``hype_sharded`` the multi-device mesh engine,
+``hype_multilevel`` the quality-first multilevel composition, and the
+remaining methods are the paper's baselines. The batched-family
+engines take a ``refine_passes`` knob — the k-way refinement post-pass
+of DESIGN.md §4e. ``describe_methods()`` returns the one-liners
+programmatically.
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ from .hype_batched import (BatchedParams, ShardedParams, SuperstepParams,
                            hype_superstep_partition)
 from .minmax import hashing_partition, minmax_partition, random_partition
 from .shp import shp_partition
-from .multilevel import multilevel_partition
+from .multilevel import hype_multilevel_partition, multilevel_partition
 from . import metrics
 
 # method -> one-line description, vertex-balance slack, notable knobs.
@@ -51,7 +54,8 @@ METHOD_INFO: Dict[str, dict] = {
         "desc": "batched-candidate HYPE on the Pallas hype_scores "
                 "kernel (host tiles; bit-stable throughput default)",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("t", "b", "s", "pool_cap", "kernel_min"),
+        "knobs": ("t", "b", "s", "pool_cap", "kernel_min",
+                  "refine_passes"),
     },
     "hype_jax": {
         "desc": "sequential HYPE as one jitted lax.while_loop program "
@@ -68,14 +72,16 @@ METHOD_INFO: Dict[str, dict] = {
                 "grow all k phases concurrently on a double-buffered "
                 "pipeline (large-k choice; pipeline_depth=1 locks step)",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("t", "rows", "pool_cap", "pipeline_depth"),
+        "knobs": ("t", "rows", "pool_cap", "pipeline_depth",
+                  "refine_passes"),
     },
     "hype_sharded": {
         "desc": "mesh-sharded superstep HYPE: phase groups sharded over "
                 "a JAX device mesh, one all_gather per pipelined "
                 "superstep",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("t", "rows", "pool_cap", "pipeline_depth", "devices"),
+        "knobs": ("t", "rows", "pool_cap", "pipeline_depth", "devices",
+                  "refine_passes"),
     },
     "hype_weighted": {
         "desc": "numpy HYPE with degree-weighted balancing (HypeParams"
@@ -103,6 +109,13 @@ METHOD_INFO: Dict[str, dict] = {
         "desc": "coarsen + recursive bisection + FM refinement "
                 "(group (I) baseline); ~5% bisection tolerance",
         "balance_slack": lambda n, k: max(1, int(0.35 * (n / k)) + k),
+    },
+    "hype_multilevel": {
+        "desc": "direct k-way multilevel: coarsen + hype_superstep "
+                "initial partition + kway_refine uncoarsening passes "
+                "(DESIGN.md §4e)",
+        "balance_slack": lambda n, k: 1,
+        "knobs": ("refine_passes", "coarsest"),
     },
     "random": {
         "desc": "balanced random assignment (quality lower bound)",
@@ -207,6 +220,8 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
         return shp_partition(hg, k, seed=seed, **kw)
     if method == "multilevel":
         return multilevel_partition(hg, k, seed=seed, **kw)
+    if method == "hype_multilevel":
+        return hype_multilevel_partition(hg, k, seed=seed, **kw)
     if method == "random":
         return random_partition(hg, k, seed=seed)
     if method == "hashing":

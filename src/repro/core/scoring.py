@@ -595,6 +595,82 @@ def sharded_superstep_device(indptr, indices, assign, cache, acc,
         dirty_ids, dirty_counts, fresh, bias, pool, fringe, targets)
 
 
+# ------------------------------------------------------------ k-way refine
+# Device half of the refinement subsystem (DESIGN.md §4e): one jitted
+# call applies the host's admitted-move delta to the device-resident
+# assignment (the same delta-scatter convention as the superstep
+# programs' `_apply_host_injections`), gathers the candidate tile's
+# neighbor *partitions* from the device CSR, and runs the Pallas
+# `kway_gains` kernel — so screening every boundary vertex costs one
+# gather + k broadcast-compares on device, and only candidate ids go
+# down / (B, k) gain rows come back. The assignment is DONATED and
+# threaded through the driver's screening calls exactly like the
+# superstep image.
+
+
+def _gather_part_tiles(indptr, indices, assign, cand, tile_l):
+    """Neighbor-partition tile for ``cand`` at static width ``tile_l``.
+
+    The refinement sibling of ``_gather_fresh_tiles``: same CSR gather,
+    but rows hold the neighbors' partition ids (every neighbor, assigned
+    or not) instead of unassigned vertex ids. Pads are -1.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    csafe = jnp.where(cand >= 0, cand, 0)
+    start = indptr[csafe]
+    deg = indptr[csafe + 1] - start
+    col = jax.lax.broadcasted_iota(jnp.int32, (cand.shape[0], tile_l), 1)
+    valid = (col < deg[:, None]) & (cand >= 0)[:, None]
+    nbr = indices[jnp.where(valid, start[:, None] + col, 0)]
+    return jnp.where(valid, assign[nbr], -1).astype(jnp.int32)
+
+
+@_functools.lru_cache(maxsize=None)
+def _refine_program():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.kway_refine.ops import kway_gains
+
+    @_functools.partial(
+        jax.jit, static_argnames=("tile_l", "k", "interpret"),
+        donate_argnums=(2,))
+    def step(indptr, indices, assign, delta_ids, delta_vals, cand, *,
+             tile_l, k, interpret):
+        n = assign.shape[0]
+        # 1. apply the host's admitted-move delta (pads route to the
+        #    out-of-bounds index n, the repo-wide masked-scatter rule)
+        inj = delta_ids >= 0
+        assign = assign.at[jnp.where(inj, delta_ids, n)].set(
+            delta_vals, mode="drop")
+        # 2. gather the candidates' neighbor-partition tiles
+        parts = _gather_part_tiles(indptr, indices, assign, cand, tile_l)
+        own = jnp.where(cand >= 0, assign[
+            jnp.where(cand >= 0, cand, 0)], -1).astype(jnp.int32)
+        # 3. Pallas move-gain kernel: (B, k) connectivity gains
+        gains = kway_gains(parts, own, k=k, interpret=interpret)
+        return assign, gains
+
+    return step
+
+
+def refine_gains_device(indptr, indices, assign, delta_ids, delta_vals,
+                        cand, *, tile_l: int, k: int, interpret: bool):
+    """Run one refinement screening call; see ``_refine_program``.
+
+    ``assign`` is DONATED — keep the returned array, never reuse the
+    input. ``delta_ids``/``delta_vals`` carry the host's admitted moves
+    since the previous call (-1 padded); ``cand`` is the (-1 padded)
+    candidate id tile. Returns ``(assign', gains)`` with ``gains``
+    (B, k) float32 — ``gains[b, q]`` is the connectivity gain of moving
+    ``cand[b]`` to partition ``q`` (0 for ``q == own`` and pad rows).
+    """
+    return _refine_program()(
+        indptr, indices, assign, delta_ids, delta_vals, cand,
+        tile_l=tile_l, k=k, interpret=interpret)
+
+
 # --------------------------------------------------------------------- JAX
 # (imported lazily by callers that run on device; keeping the import at
 # module level is fine — the repo is a JAX codebase — but the numpy helpers

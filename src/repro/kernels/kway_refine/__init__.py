@@ -1,0 +1,1 @@
+from .ops import kway_gains

@@ -1,0 +1,40 @@
+"""Jitted wrapper for the k-way move-gain kernel (auto-pad, auto-interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._compat import pallas_interpret
+
+from .kernel import kway_gains_kernel
+
+
+def kway_gains(parts, own, *, k: int, tile_b: int = 256, interpret=None):
+    """Move gains for a batch of boundary vertices.
+
+    parts: (B, L) int32 neighbor-partition tiles (-1 pad); own: (B,)
+    int32 current partitions (-1 for pad rows). Returns (B, k) float32
+    gains; ``gain[b, own[b]] == 0`` and pad rows are all-zero. The
+    interpret default is resolved OUTSIDE the jit boundary (see
+    ``hype_score.ops``): ``interpret`` is a static argname, so resolving
+    it inside would freeze the env override at first trace.
+    """
+    if interpret is None:
+        interpret = pallas_interpret()
+    return _kway_gains(parts, own, k=k, tile_b=tile_b,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_b", "interpret"))
+def _kway_gains(parts, own, *, k: int, tile_b: int, interpret: bool):
+    B = parts.shape[0]
+    tile = min(tile_b, max(8, B))
+    pad = (-B) % tile
+    if pad:
+        parts = jnp.pad(parts, ((0, pad), (0, 0)), constant_values=-1)
+        own = jnp.pad(own, ((0, pad),), constant_values=-1)
+    out = kway_gains_kernel(parts, own, k=k, tile_b=tile,
+                            interpret=interpret)
+    return out[:B]

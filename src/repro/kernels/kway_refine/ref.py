@@ -1,0 +1,20 @@
+"""Oracle for the k-way move-gain kernel (numpy, exact).
+
+gain[b, q] = #(parts[b, :] == q) - #(parts[b, :] == own[b]) — the
+connectivity gain of moving row b's vertex to partition q, over its
+padded neighbor-partition list. Pad lanes (-1) and pad rows (own = -1)
+match no partition id, so their contributions are zero.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def kway_gains_ref(parts: np.ndarray, own: np.ndarray,
+                   k: int) -> np.ndarray:
+    """parts: (B, L) int32 (-1 pad); own: (B,) int32. Returns (B, k) f32."""
+    parts = np.asarray(parts)
+    own = np.asarray(own)
+    cnt = (parts[:, None, :] == np.arange(k)[None, :, None]).sum(axis=2)
+    cnt_own = ((parts == own[:, None]) & (parts >= 0)).sum(axis=1)
+    return (cnt - cnt_own[:, None]).astype(np.float32)

@@ -1,0 +1,60 @@
+"""The compare_baseline CI gate: speedup-regression logic plus the
+refined-row km1 quality gate added with the refinement subsystem."""
+import importlib.util
+import pathlib
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def gate():
+    path = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" \
+        / "compare_baseline.py"
+    spec = importlib.util.spec_from_file_location("compare_baseline",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _row(speedup, km1, refined=False):
+    row = {"speedup_vs_hype": speedup, "km1_ratio_vs_hype": km1}
+    if refined:
+        row["refined"] = True
+    return row
+
+
+def test_gate_passes_within_bounds(gate, capsys):
+    base = {"a": _row(5.0, 1.01), "r": _row(4.0, 0.97, refined=True)}
+    cur = {"a": _row(4.5, 1.02), "r": _row(4.2, 0.98, refined=True)}
+    assert gate.compare(base, cur) == 0
+
+
+def test_gate_fails_on_speedup_regression(gate, capsys):
+    base = {"a": _row(8.0, 1.0)}
+    cur = {"a": _row(5.0, 1.0)}          # lost 37% > MAX_REGRESSION
+    assert gate.compare(base, cur) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_gate_fails_on_refined_km1_regression(gate, capsys):
+    """A refined row regressing km1 by more than 2% fails — the quality
+    the refinement pass bought is enforced, not just measured."""
+    base = {"r": _row(4.0, 0.95, refined=True)}
+    cur = {"r": _row(4.0, 0.98, refined=True)}   # +3.2% > tol
+    assert gate.compare(base, cur) == 1
+    assert "refined-row" in capsys.readouterr().out
+
+
+def test_gate_refined_tolerance_is_not_the_110_bound(gate):
+    """Unrefined rows keep the loose 1.10 bound; the 2% tolerance only
+    applies to refined rows."""
+    base = {"a": _row(4.0, 0.95)}
+    cur = {"a": _row(4.0, 0.98)}         # same +3.2%, unrefined: OK
+    assert gate.compare(base, cur) == 0
+
+
+def test_gate_refined_new_row_never_fails(gate):
+    base = {"a": _row(4.0, 1.0)}
+    cur = {"a": _row(4.0, 1.0), "r": _row(3.0, 0.9, refined=True)}
+    assert gate.compare(base, cur) == 0

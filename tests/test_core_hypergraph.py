@@ -53,6 +53,95 @@ def test_imbalance():
     assert metrics.vertex_imbalance(np.array([0, 1], np.int32), 2) == 0.0
 
 
+def _corrupt(hg, **overrides):
+    """Rebuild ``hg`` with raw (possibly invalid) arrays swapped in."""
+    fields = dict(n=hg.n, m=hg.m, v2e_indptr=hg.v2e_indptr,
+                  v2e_indices=hg.v2e_indices, e2v_indptr=hg.e2v_indptr,
+                  e2v_indices=hg.e2v_indices)
+    fields.update(overrides)
+    return Hypergraph(**fields)
+
+
+@pytest.mark.parametrize("corruption,match", [
+    # each case violates exactly one validate() invariant
+    (lambda hg: _corrupt(hg, v2e_indptr=hg.v2e_indptr[:-1]),
+     "v2e_indptr shape"),
+    (lambda hg: _corrupt(hg, e2v_indptr=hg.e2v_indptr[:-1]),
+     "e2v_indptr shape"),
+    (lambda hg: _corrupt(hg, v2e_indices=hg.v2e_indices[:-1],
+                         e2v_indices=hg.e2v_indices[:-1]),
+     "v2e_indptr\\[-1\\]"),
+    (lambda hg: _corrupt(
+        hg, e2v_indptr=np.concatenate([hg.e2v_indptr[:-1],
+                                       [hg.n_pins + 1]])),
+     "e2v_indptr\\[-1\\]"),
+    (lambda hg: _corrupt(
+        hg, v2e_indices=np.concatenate([hg.v2e_indices,
+                                        hg.v2e_indices[:1]]),
+        v2e_indptr=hg.v2e_indptr + (np.arange(hg.n + 1) >= 1)),
+     "pin-count mismatch"),
+    (lambda hg: _corrupt(
+        hg, e2v_indices=np.where(np.arange(hg.n_pins) == 0, -1,
+                                 hg.e2v_indices)),
+     "negative vertex id"),
+    (lambda hg: _corrupt(
+        hg, e2v_indices=np.where(np.arange(hg.n_pins) == 0, hg.n,
+                                 hg.e2v_indices)),
+     "vertex id .* out of range"),
+    (lambda hg: _corrupt(
+        hg, v2e_indices=np.where(np.arange(hg.n_pins) == 0, -2,
+                                 hg.v2e_indices)),
+     "negative edge id"),
+    (lambda hg: _corrupt(
+        hg, v2e_indices=np.where(np.arange(hg.n_pins) == 0, hg.m + 3,
+                                 hg.v2e_indices)),
+     "edge id .* out of range"),
+])
+def test_validate_raises_on_corruption(corruption, match):
+    """validate() must RAISE (not assert — `python -O` strips asserts,
+    silently no-opping validation) on every corrupted invariant."""
+    hg = tiny()
+    hg.validate()                       # sane baseline passes
+    with pytest.raises(ValueError, match=match):
+        corruption(hg).validate()
+
+
+# ------------------------------------------------------- metrics / spans
+
+def test_metrics_explicit_k_equivalence():
+    """Threading k and sharing one spans computation must not change any
+    metric — including when high partitions are unoccupied (the old
+    keying hashed on assignment.max() + 2)."""
+    hg = tiny()
+    a = np.array([0, 0, 0, 1, 1, 1], np.int32)
+    for k in (2, 3, 7):                 # k=3,7: partitions 2.. unoccupied
+        spans = metrics.spans_per_edge(hg, a, k)
+        np.testing.assert_array_equal(spans, metrics.spans_per_edge(hg, a))
+        assert metrics.k_minus_1(hg, a, k) == metrics.k_minus_1(hg, a) == 2
+        assert metrics.hyperedge_cut(hg, a, k) == 2
+        assert metrics.sum_external_degree(hg, a, k) == 4
+        assert metrics.k_minus_1(hg, a, k, spans=spans) == 2
+        assert metrics.hyperedge_cut(hg, a, k, spans=spans) == 2
+        assert metrics.sum_external_degree(hg, a, k, spans=spans) == 4
+        rep = metrics.all_metrics(hg, a, k)
+        assert rep["k_minus_1"] == 2 and rep["hyperedge_cut"] == 2
+        assert rep["soed"] == 4
+
+
+def test_metrics_reject_out_of_range_k():
+    hg = tiny()
+    a = np.array([0, 0, 0, 1, 1, 1], np.int32)
+    with pytest.raises(ValueError, match=">= k"):
+        metrics.k_minus_1(hg, a, 1)
+
+
+def test_metrics_reject_incomplete_assignment():
+    hg = tiny()
+    a = np.array([0, 0, 0, 1, 1, -1], np.int32)
+    with pytest.raises(ValueError, match="complete"):
+        metrics.k_minus_1(hg, a, 2)
+
+
 @st.composite
 def hypergraphs(draw):
     n = draw(st.integers(min_value=2, max_value=40))

@@ -90,6 +90,47 @@ def test_minmax_nb_slack_respected(hg):
     assert sizes.max() - sizes.min() <= 51
 
 
+def test_minmax_nb_slack_zero_hard_cap():
+    """slack=0 is the tightest nb constraint: the hard cap ceil(n/k)
+    must hold for every partition, fallback branch included."""
+    from repro.core.minmax import minmax_partition
+    hg = powerlaw_hypergraph(203, 140, seed=2, max_edge=12, max_degree=8)
+    for k in (4, 7):
+        a = minmax_partition(hg, k, mode="nb", slack=0, seed=0)
+        sizes = metrics.partition_sizes(a, k)
+        assert sizes.max() <= -(-hg.n // k), sizes
+        assert sizes.sum() == hg.n
+
+
+def test_minmax_eligibility_fallback_keeps_cap():
+    """Regression for the fallback bug: when the slack filter empties,
+    the least-loaded fallback must still respect the nb-mode hard cap
+    instead of silently over-filling a capped partition."""
+    from repro.core.minmax import _eligible_partitions
+    eloads = np.zeros(3, dtype=np.int64)
+    # fallback fires (every partition at/over cap): degrade to the bare
+    # least-loaded survival rule so the stream never stalls
+    vsizes = np.array([5, 5, 6], dtype=np.int64)
+    eligible = _eligible_partitions("nb", vsizes, eloads, slack=0,
+                                    cap=5)
+    np.testing.assert_array_equal(eligible, [True, True, False])
+    # fallback with under-cap partitions available (forced via an
+    # always-empty slack filter): only under-cap partitions may be
+    # eligible — the old `vsizes == vsizes.min()` fallback ignored cap
+    # entirely
+    vsizes = np.array([2, 3, 4], dtype=np.int64)
+    eligible = _eligible_partitions("nb", vsizes, eloads, slack=-1,
+                                    cap=3)
+    assert eligible.any()
+    assert not (eligible & ~(vsizes < 3)).any()     # cap respected
+    np.testing.assert_array_equal(eligible, [True, False, False])
+    # eb mode keeps its own fallback (no vertex-cap concept there)
+    eligible = _eligible_partitions(
+        "eb", np.array([1, 1, 1], dtype=np.int64),
+        np.array([9, 9, 9], dtype=np.int64), slack=-1, cap=1)
+    assert eligible.any()
+
+
 def test_structure_aware_beats_stream_on_community_graph():
     """The paper's core claim, on a strongly clustered hypergraph."""
     hg = powerlaw_hypergraph(4000, 2500, seed=5, max_edge=60, max_degree=30)

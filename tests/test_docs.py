@@ -35,9 +35,10 @@ def test_design_engine_table_matches_registry():
         if m.startswith("hype") and m not in ("hype_weighted",):
             assert f"`{m}`" in sec1, f"engine {m} missing from DESIGN §1"
     assert "three engines" not in text
-    # five ladder rungs + the hype_jax side-rung = the table's six rows
+    # six ladder rows: five growth rungs (hype_jax is the side-rung) +
+    # the multilevel composition of the refinement subsystem (§4e)
     table_rows = re.findall(r"^\| `hype", sec1, re.MULTILINE)
-    assert len(table_rows) == 5
+    assert len(table_rows) == 6
 
 
 def test_readme_documents_the_commands():

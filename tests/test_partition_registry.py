@@ -56,6 +56,7 @@ def test_registered_knobs_match_engine_signatures():
     from repro.core.hype_batched import (BatchedParams, ShardedParams,
                                          SuperstepParams)
     from repro.core.minmax import minmax_partition
+    from repro.core.multilevel import hype_multilevel_partition
     from repro.core.shp import shp_partition
 
     param_fields = {
@@ -66,6 +67,8 @@ def test_registered_knobs_match_engine_signatures():
                            for f in dataclasses.fields(SuperstepParams)},
         "hype_sharded": {f.name
                          for f in dataclasses.fields(ShardedParams)},
+        "hype_multilevel": set(
+            inspect.signature(hype_multilevel_partition).parameters),
         "minmax_nb": set(inspect.signature(minmax_partition).parameters),
         "shp": set(inspect.signature(shp_partition).parameters),
     }
@@ -80,6 +83,11 @@ def test_registered_knobs_match_engine_signatures():
     assert "pipeline_depth" in method_knobs("hype_superstep")
     assert "pipeline_depth" in method_knobs("hype_sharded")
     assert "devices" in method_knobs("hype_sharded")
+    # the refinement post-pass knob is registered on every engine of
+    # the HYPE batched family plus the k-way multilevel composition
+    for method in ("hype_batched", "hype_superstep", "hype_sharded",
+                   "hype_multilevel"):
+        assert "refine_passes" in method_knobs(method), method
 
 
 def test_registered_knobs_are_forwarded(hg):

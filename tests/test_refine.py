@@ -1,0 +1,351 @@
+"""Device-resident k-way refinement (DESIGN.md §4e): kway_gains kernel
+parity vs its numpy oracle across all L buckets / pad / fill levels,
+exact-gain verification against brute-force (k-1) deltas, the
+refine_kway contract (monotone quality, preserved balance, determinism,
+additive stats.gain), the refine_passes=0 bit-identity golden, engine
+integration, and the rebuilt multilevel / hype_multilevel partitioners."""
+import hashlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core import metrics
+from repro.core.hype_batched import (BatchedParams, SuperstepParams,
+                                     hype_batched_partition,
+                                     hype_superstep_partition)
+from repro.core.hypergraph import Hypergraph
+from repro.core.refine import (RefineStats, _cut_boundary, _host_gains,
+                               admit_moves, exact_gain_matrix,
+                               rebalance_kway, refine_kway)
+from repro.data.synthetic import powerlaw_hypergraph
+from repro.kernels.kway_refine.ops import kway_gains
+from repro.kernels.kway_refine.ref import kway_gains_ref
+
+
+def _digest(a: np.ndarray) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(a, dtype=np.int32).tobytes()).hexdigest()[:16]
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(600, 400, seed=11, max_edge=30,
+                               max_degree=20)
+
+
+# ----------------------------------------------------- kernel vs oracle
+
+def _gain_case(B, L, k, seed, fill="full"):
+    rng = np.random.default_rng(seed)
+    parts = rng.integers(-1, k, size=(B, L)).astype(np.int32)
+    own = rng.integers(0, k, size=(B,)).astype(np.int32)
+    if fill == "empty":
+        parts[:] = -1
+    elif fill == "partial":
+        parts[:, L // 2:] = -1
+    if B > 1:       # a pad row, exactly as the ops wrapper builds them
+        parts[-1] = -1
+        own[-1] = -1
+    out = np.asarray(kway_gains(jnp.asarray(parts), jnp.asarray(own),
+                                k=k))
+    ref = kway_gains_ref(parts, own, k)
+    np.testing.assert_array_equal(out, ref)
+    # own column and pad rows are zero by construction
+    real = own >= 0
+    assert (out[real, own[real]] == 0).all()
+    if B > 1:
+        assert (out[-1] == 0).all()
+
+
+@pytest.mark.parametrize("L", [32, 128, 512, 2048])     # every L bucket
+def test_kway_gains_matches_ref_all_widths(L):
+    from repro.core.scoring import L_BUCKETS
+    assert L in L_BUCKETS
+    _gain_case(B=24, L=L, k=8, seed=L)
+
+
+@pytest.mark.parametrize("fill", ["empty", "partial", "full"])
+def test_kway_gains_fill_levels(fill):
+    _gain_case(B=16, L=64, k=5, seed=3, fill=fill)
+
+
+@pytest.mark.parametrize("B,L,k", [(1, 1, 2), (7, 33, 3), (300, 16, 32)])
+def test_kway_gains_odd_shapes(B, L, k):
+    _gain_case(B=B, L=L, k=k, seed=B * L + k)
+
+
+@given(st.integers(1, 40), st.integers(1, 64), st.integers(2, 16),
+       st.integers(0, 99))
+@settings(max_examples=15, deadline=None)
+def test_kway_gains_property(B, L, k, seed):
+    rng = np.random.default_rng(seed)
+    parts = rng.integers(-1, k, size=(B, L)).astype(np.int32)
+    own = rng.integers(0, k, size=(B,)).astype(np.int32)
+    out = np.asarray(kway_gains(jnp.asarray(parts), jnp.asarray(own),
+                                k=k))
+    np.testing.assert_array_equal(out, kway_gains_ref(parts, own, k))
+    # gains are bounded by the row's valid width
+    width = (parts >= 0).sum(axis=1)
+    assert (np.abs(out) <= width[:, None]).all()
+
+
+# ------------------------------------------------- exact gains / boundary
+
+@given(st.integers(2, 6), st.integers(0, 20))
+@settings(max_examples=20, deadline=None)
+def test_exact_gain_matches_brute_force(k, seed):
+    """exact_gain_matrix must equal the true (k-1) delta of every
+    single-vertex move, measured by recomputing the metric."""
+    hg = powerlaw_hypergraph(40, 30, seed=seed, max_edge=8, max_degree=6)
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, k, size=hg.n).astype(np.int32)
+    cand = rng.choice(hg.n, size=min(10, hg.n), replace=False)
+    gains = exact_gain_matrix(hg, cand.astype(np.int64), a, k)
+    km0 = metrics.k_minus_1(hg, a, k)
+    for i, v in enumerate(cand):
+        for q in range(k):
+            if q == a[v]:
+                assert gains[i, q] == 0
+                continue
+            b = a.copy()
+            b[v] = q
+            assert km0 - metrics.k_minus_1(hg, b, k) == gains[i, q], \
+                (v, int(a[v]), q)
+
+
+def test_exact_gain_matches_brute_force_seeded():
+    """Deterministic twin of the property test above (hypothesis is
+    optional in CI; this exactness check must always run)."""
+    for k, seed in ((2, 0), (3, 7), (6, 13)):
+        hg = powerlaw_hypergraph(40, 30, seed=seed, max_edge=8,
+                                 max_degree=6)
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, k, size=hg.n).astype(np.int32)
+        cand = rng.choice(hg.n, size=10, replace=False)
+        gains = exact_gain_matrix(hg, cand.astype(np.int64), a, k)
+        km0 = metrics.k_minus_1(hg, a, k)
+        for i, v in enumerate(cand):
+            for q in range(k):
+                b = a.copy()
+                b[v] = q
+                assert km0 - metrics.k_minus_1(hg, b, k) == gains[i, q]
+
+
+def test_cut_boundary(hg):
+    a = np.zeros(hg.n, dtype=np.int32)
+    assert _cut_boundary(hg, a).size == 0       # uncut: no boundary
+    a[: hg.n // 2] = 1
+    boundary = _cut_boundary(hg, a)
+    spans = metrics.spans_per_edge(hg, a, 2)
+    pins = np.unique(np.concatenate(
+        [hg.edge_pins(int(e)) for e in np.flatnonzero(spans > 1)]))
+    np.testing.assert_array_equal(boundary, pins)
+
+
+def test_host_gains_match_kernel_semantics(hg):
+    """The host screening twin equals the oracle fed untruncated tiles."""
+    rng = np.random.default_rng(0)
+    k = 4
+    a = rng.integers(0, k, size=hg.n).astype(np.int32)
+    adj = hg.vertex_adjacency()
+    cand = rng.choice(hg.n, size=32, replace=False).astype(np.int64)
+    g = _host_gains(adj, cand, a, k)
+    deg = np.diff(adj[0])
+    L = int(deg[cand].max())
+    tile = np.full((cand.size, L), -1, np.int32)
+    for i, v in enumerate(cand):
+        nb = adj[1][adj[0][v]:adj[0][v + 1]]
+        tile[i, :nb.size] = a[nb]
+    np.testing.assert_array_equal(
+        g, kway_gains_ref(tile, a[cand].astype(np.int32), k))
+
+
+# --------------------------------------------------- admission machinery
+
+def test_admit_moves_balance_and_conflicts():
+    # two triangle-ish edges sharing vertex 2; k=2 with tight caps
+    hg = Hypergraph.from_edge_lists(6, [[0, 1, 2], [2, 3, 4], [4, 5]])
+    sizes = np.array([3, 3], dtype=np.int64)
+    lo, hi = np.array([3, 3]), np.array([3, 3])
+    stats = RefineStats()
+    # v0: 0->1 (gain 5) and v3: 1->0 (gain 4): balance-blocked singly,
+    # admitted as a swap; v1: 0->1 (gain 3) conflicts with v0 via edge 0
+    vs = np.array([0, 3, 1])
+    src = np.array([0, 1, 0])
+    dst = np.array([1, 0, 1])
+    gain = np.array([5, 4, 3])
+    adm_v, adm_dst = admit_moves(vs, src, dst, gain, hg, sizes, lo, hi,
+                                 stats)
+    assert sorted(adm_v.tolist()) == [0, 3]
+    assert stats.swaps == 1 and stats.moves == 2
+    assert stats.gain == 9
+    assert stats.rejected_conflict == 1
+    np.testing.assert_array_equal(sizes, [3, 3])    # swap is neutral
+
+
+def test_admit_moves_single_move_respects_window():
+    hg = Hypergraph.from_edge_lists(4, [[0, 1], [2, 3]])
+    sizes = np.array([3, 1], dtype=np.int64)
+    lo, hi = np.array([1, 1]), np.array([3, 3])
+    stats = RefineStats()
+    adm_v, adm_dst = admit_moves(
+        np.array([0]), np.array([0]), np.array([1]), np.array([2]),
+        hg, sizes, lo, hi, stats)
+    assert adm_v.tolist() == [0] and adm_dst.tolist() == [1]
+    np.testing.assert_array_equal(sizes, [2, 2])
+
+
+# ------------------------------------------------- refine_kway contract
+
+@pytest.mark.parametrize("k", [4, 16])
+@pytest.mark.parametrize("use_device", [True, False])
+def test_refine_monotone_balanced_deterministic(hg, k, use_device):
+    a0 = hype_superstep_partition(hg, k, SuperstepParams(seed=0))
+    km0 = metrics.k_minus_1(hg, a0, k)
+    a1, st1 = refine_kway(hg, a0, k, 4, use_device=use_device)
+    a2, _ = refine_kway(hg, a0, k, 4, use_device=use_device)
+    np.testing.assert_array_equal(a1, a2)           # deterministic
+    km1 = metrics.k_minus_1(hg, a1, k)
+    assert km1 <= km0                               # monotone
+    assert km0 - km1 == st1.gain                    # exactly additive
+    sizes = metrics.partition_sizes(a1, k)
+    assert sizes.max() - sizes.min() <= 1           # contract preserved
+    assert st1.moves > 0 and (a1 != a0).sum() == st1.moves
+
+
+def test_refine_delta_buffer_holds_a_full_pass():
+    """Regression: a pass can admit up to cand_cap moves — far more
+    than one screening tile — and the next pass's device delta buffer
+    must hold all of them (it used to be sized by tile_rows only,
+    crashing the second pass with a broadcast error)."""
+    edges = [[2 * i, 2 * i + 1] for i in range(50)]
+    hg = Hypergraph.from_edge_lists(200, edges)
+    a = np.zeros(200, dtype=np.int32)
+    a[1:100:2] = 1          # each pair split across the two partitions
+    a[175:200] = 1          # filler: sizes 125 / 75, slack for singles
+    km0 = metrics.k_minus_1(hg, a, 2)
+    a1, st = refine_kway(hg, a, 2, 2, tile_rows=8, cand_cap=64)
+    assert st.moves > 8                     # one pass overflowed a tile
+    assert st.passes_run >= 2               # second pass ran (no crash)
+    assert metrics.k_minus_1(hg, a1, 2) < km0
+
+
+def test_refine_zero_passes_is_identity(hg):
+    a0 = hype_superstep_partition(hg, 8, SuperstepParams(seed=0))
+    a1, st = refine_kway(hg, a0, 8, 0)
+    assert a1 is a0                                 # strict no-op
+    assert st.passes_run == 0 and st.moves == 0
+
+
+def test_refine_requires_complete_assignment(hg):
+    a = np.full(hg.n, -1, dtype=np.int32)
+    with pytest.raises(ValueError, match="complete"):
+        refine_kway(hg, a, 4, 1)
+
+
+def test_refine_k1_and_uncut_noop(hg):
+    a = np.zeros(hg.n, dtype=np.int32)
+    a1, st = refine_kway(hg, a, 1, 3)
+    assert st.moves == 0
+    a2, st2 = refine_kway(hg, a, 4, 3)      # all in part 0: no boundary
+    # a move could only help balance, and refinement never forces one
+    assert metrics.k_minus_1(hg, a2, 4) == 0
+
+
+def test_rebalance_kway(hg):
+    rng = np.random.default_rng(1)
+    k = 5
+    a = rng.integers(0, 2, size=hg.n).astype(np.int32)  # parts 2..4 empty
+    b = rebalance_kway(hg, a, k)
+    sizes = metrics.partition_sizes(b, k)
+    assert sizes.max() - sizes.min() <= 1
+    assert sizes.sum() == hg.n
+    np.testing.assert_array_equal(b, rebalance_kway(hg, a, k))
+
+
+# ----------------------------------------------------- engine integration
+
+# refine_passes=0 must keep today's outputs bit-identical: the same
+# lock-step golden digest test_pipeline.py pins (powerlaw 600/400 seed
+# 11, k=16, t=8, pipeline_depth=1).
+_GOLD_PL600_K16_T8 = "bbcd2f732e03af91"
+
+
+def test_refine_passes_zero_bit_identical_golden(hg):
+    a = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=1,
+                                refine_passes=0))
+    assert _digest(a) == _GOLD_PL600_K16_T8
+
+
+@pytest.mark.parametrize("method", ["hype_batched", "hype_superstep"])
+def test_engine_refine_knob(hg, method):
+    from repro.core.partition_api import partition
+    k = 16
+    a0 = partition(hg, k, method, seed=0)
+    a1 = partition(hg, k, method, seed=0, refine_passes=3)
+    assert metrics.k_minus_1(hg, a1, k) <= metrics.k_minus_1(hg, a0, k)
+    sizes = metrics.partition_sizes(a1, k)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_engine_refine_stats_surfaced(hg):
+    _, st = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, refine_passes=3),
+        return_stats=True)
+    assert st.refine is not None
+    assert st.refine.passes_run >= 1
+    assert st.refine.gain >= st.refine.moves > 0    # every move gains >=1
+    _, st0 = hype_batched_partition(
+        hg, 8, BatchedParams(seed=0), return_stats=True)
+    assert st0.refine is None                       # off by default
+
+
+def test_sharded_refine_knob(hg):
+    import jax
+    from repro.core.hype_batched import (ShardedParams,
+                                         hype_sharded_partition)
+    if len(jax.devices()) < 2:
+        pytest.skip("needs a simulated multi-device mesh")
+    a0 = hype_sharded_partition(hg, 16, ShardedParams(seed=0, devices=2))
+    a1 = hype_sharded_partition(
+        hg, 16, ShardedParams(seed=0, devices=2, refine_passes=3))
+    assert metrics.k_minus_1(hg, a1, 16) <= metrics.k_minus_1(hg, a0, 16)
+    sizes = metrics.partition_sizes(a1, 16)
+    assert sizes.max() - sizes.min() <= 1
+
+
+# ------------------------------------------------------- hype_multilevel
+
+@pytest.mark.parametrize("k", [3, 8])
+def test_hype_multilevel_contract(hg, k):
+    from repro.core.multilevel import hype_multilevel_partition
+    a = hype_multilevel_partition(hg, k, seed=0)
+    assert a.dtype == np.int32 and a.shape == (hg.n,)
+    assert a.min() >= 0 and a.max() < k
+    sizes = metrics.partition_sizes(a, k)
+    assert sizes.max() - sizes.min() <= 1
+    np.testing.assert_array_equal(a, hype_multilevel_partition(
+        hg, k, seed=0))
+
+
+def test_hype_multilevel_coarsens_large_graph():
+    """Force the coarsening + weighted-uncoarsening path (coarsest well
+    below n) and check the contract survives the projections."""
+    from repro.core.multilevel import hype_multilevel_partition
+    hg = powerlaw_hypergraph(1500, 1000, seed=4, max_edge=20,
+                             max_degree=12)
+    a = hype_multilevel_partition(hg, 8, seed=0, coarsest=200)
+    sizes = metrics.partition_sizes(a, 8)
+    assert sizes.max() - sizes.min() <= 1
+    assert metrics.k_minus_1(hg, a, 8) > 0          # sane output
+
+
+def test_hype_multilevel_quality_beats_random(hg):
+    from repro.core.partition_api import partition
+    km_ml = metrics.k_minus_1(hg, partition(hg, 8, "hype_multilevel",
+                                            seed=0), 8)
+    km_r = metrics.k_minus_1(hg, partition(hg, 8, "random", seed=0), 8)
+    assert km_ml < km_r
