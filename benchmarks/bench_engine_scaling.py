@@ -254,6 +254,78 @@ def run():
                             dt / max(superstep_ref[0], 1e-9), 3),
                     }
 
+    # resilience axis (DESIGN.md §4f): what fault tolerance costs on
+    # the acceptance-row superstep config — snapshot publish overhead,
+    # kill + resume restore cost, and chaos (injected-fault) recovery
+    # overhead, each pinned against the fault-free run's quality.
+    import tempfile
+
+    from repro.core import resilience
+
+    hg_r = dataset("github")
+    res_meta = {}
+    (a_plain, _), dt_plain = _run(
+        hype_superstep_partition, hg_r, PIPELINE_K,
+        SuperstepParams(seed=0, t=PIPELINE_T), return_stats=True)
+    km1_plain = metrics.k_minus_1(hg_r, a_plain)
+    with tempfile.TemporaryDirectory() as snapdir:
+        (a_snap, st_snap), dt_snap = _run(
+            hype_superstep_partition, hg_r, PIPELINE_K,
+            SuperstepParams(seed=0, t=PIPELINE_T, snapshot_every=4,
+                            snapshot_dir=snapdir), return_stats=True)
+        res_meta["snapshot"] = {
+            "snapshot_every": 4,
+            "snapshots": st_snap.snapshots,
+            "snapshot_s": round(st_snap.snapshot_s, 4),
+            "overhead_s": round(max(dt_snap - dt_plain, 0.0), 4),
+            "overhead_frac": round(
+                max(dt_snap - dt_plain, 0.0) / max(dt_plain, 1e-9), 3),
+            "km1_vs_plain": round(
+                metrics.k_minus_1(hg_r, a_snap) / max(km1_plain, 1), 4),
+        }
+        km1_snap = metrics.k_minus_1(hg_r, a_snap)
+    with tempfile.TemporaryDirectory() as snapdir:
+        kill_step = max(2, st_snap.supersteps // 2)
+        try:
+            hype_superstep_partition(hg_r, PIPELINE_K, SuperstepParams(
+                seed=0, t=PIPELINE_T, snapshot_every=4,
+                snapshot_dir=snapdir,
+                fault_plan=f"dispatch@{kill_step}:fatal"))
+            killed = False
+        except resilience.UnrecoverableFault:
+            killed = True
+        if killed:
+            t0 = time.perf_counter()
+            a_res, st_res = hype_superstep_partition(
+                hg_r, PIPELINE_K, SuperstepParams(
+                    seed=0, t=PIPELINE_T, snapshot_every=4,
+                    snapshot_dir=snapdir, resume=snapdir),
+                return_stats=True)
+            res_meta["kill_resume"] = {
+                "killed_at_superstep": kill_step,
+                "resumed_at": st_res.resumed_at,
+                "restore_s": round(st_res.restore_s, 4),
+                "resume_wall_s": round(time.perf_counter() - t0, 4),
+                # bit-exact resume => equal quality to the same-cadence
+                # uninterrupted run (the gated invariant)
+                "km1_equal_to_uninterrupted":
+                    metrics.k_minus_1(hg_r, a_res) == km1_snap,
+            }
+    (a_chaos, st_chaos), dt_chaos = _run(
+        hype_superstep_partition, hg_r, PIPELINE_K,
+        SuperstepParams(seed=0, t=PIPELINE_T,
+                        fault_plan="dispatch@2;nan@4"),
+        return_stats=True)
+    res_meta["chaos"] = {
+        "fault_plan": "dispatch@2;nan@4",
+        "faults_injected": st_chaos.faults_injected,
+        "retries": st_chaos.retries,
+        "recovery_overhead_s": round(max(dt_chaos - dt_plain, 0.0), 4),
+        "km1_equal_to_fault_free":
+            metrics.k_minus_1(hg_r, a_chaos) == km1_plain,
+    }
+    meta["resilience"] = res_meta
+
     # small-n row including the jittable engines (validation scale)
     from repro.core.hype_jax import (hype_jax_partition,
                                      hype_parallel_partition)

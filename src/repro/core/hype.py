@@ -186,8 +186,15 @@ class _HypeState:
 
 
 def _grow_partition(st: _HypeState, part: int, target: float,
-                    weights: Optional[np.ndarray]) -> None:
-    """Grow core set C_part until it reaches ``target`` size/weight."""
+                    weights: Optional[np.ndarray],
+                    warm: bool = False) -> None:
+    """Grow core set C_part until it reaches ``target`` size/weight.
+
+    ``warm`` continues a phase that already holds members (a warm start
+    from a partition snapshot — the degradation ladder's last rung):
+    existing members are activated instead of drawing a seed, and
+    growth resumes from their accumulated size/weight.
+    """
     hg, p = st.hg, st.p
     heap: list = []            # (edge_size, edge_id) of active hyperedges
     fringe: list = []          # vertex ids, |fringe| <= s
@@ -207,11 +214,22 @@ def _grow_partition(st: _HypeState, part: int, target: float,
         activate(v)
         return 1.0 if weights is None else float(weights[v])
 
-    # --- Alg 1 line 3: random seed vertex ---
-    seed = st.random_unassigned()
-    if seed < 0:
-        return
-    acc = add_to_core(seed)
+    acc = 0.0
+    if warm:
+        members = np.flatnonzero(st.assignment == part)
+        if members.size:
+            acc = (float(members.size) if weights is None
+                   else float(weights[members].sum()))
+            if acc >= target:
+                return
+            for v in members:
+                activate(int(v))
+    if acc == 0.0:
+        # --- Alg 1 line 3: random seed vertex ---
+        seed = st.random_unassigned()
+        if seed < 0:
+            return
+        acc = add_to_core(seed)
 
     while acc < target:
         # ---------------- upd8_fringe (Alg 2) ----------------
@@ -278,11 +296,17 @@ def _grow_partition(st: _HypeState, part: int, target: float,
 
 def hype_partition(hg: Hypergraph, k: int,
                    params: Optional[HypeParams] = None,
-                   return_stats: bool = False):
+                   return_stats: bool = False,
+                   warm_start: Optional[np.ndarray] = None):
     """Partition ``hg`` into ``k`` parts with HYPE (Alg. 1).
 
     Returns an int32 assignment array of shape (n,); every vertex is
     assigned to exactly one partition in [0, k).
+
+    ``warm_start`` adopts a (possibly partial, -1 = unassigned)
+    assignment before growing — the degradation ladder's last rung
+    (core/resilience.py) resumes here from the last snapshot when every
+    device engine failed; values must lie in [-1, k).
     """
     if params is None:
         params = HypeParams()
@@ -290,6 +314,17 @@ def hype_partition(hg: Hypergraph, k: int,
         raise ValueError("k must be >= 1")
     st = _HypeState(hg, k, params)
     n = hg.n
+    warm = False
+    if warm_start is not None:
+        wa = np.asarray(warm_start)
+        if wa.shape != (n,):
+            raise ValueError(
+                f"warm_start must have shape ({n},), got {wa.shape}")
+        if wa.max(initial=-1) >= k:
+            raise ValueError("warm_start names a partition >= k")
+        got = wa >= 0
+        st.assignment[got] = wa[got].astype(np.int32)
+        warm = True
 
     if params.balance == "vertex":
         weights = None
@@ -310,7 +345,7 @@ def hype_partition(hg: Hypergraph, k: int,
             st.assignment[rem_v] = i
             st.in_fringe[:] = False
             break
-        _grow_partition(st, i, targets[i], weights)
+        _grow_partition(st, i, targets[i], weights, warm=warm)
 
     assert (st.assignment >= 0).all()
     if return_stats:

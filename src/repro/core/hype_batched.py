@@ -39,12 +39,21 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
 
 from .hypergraph import Hypergraph
+from . import resilience
 from . import scoring
+
+# (1,) int32 replay markers for the device programs' sticky poison flag
+# (scoring._poison_guard): 0 = normal superstep, 1 = host-driven replay
+# of a quarantined superstep. Module constants so repeated dispatches
+# hand jit the same host buffers.
+_RESET0 = np.zeros(1, dtype=np.int32)
+_RESET1 = np.ones(1, dtype=np.int32)
 
 
 @dataclasses.dataclass
@@ -62,6 +71,25 @@ class BatchedParams:
     #                         (core/refine.py, DESIGN.md §4e); 0 = off,
     #                         output bit-identical to the bare engine
     seed: int = 0
+    # resilience knobs (core/resilience.py, DESIGN.md §4f):
+    snapshot_every: int = 0     # checkpoint cadence, counted in
+    #                             supersteps (device engines) or
+    #                             completed phases (batched); 0 = never.
+    #                             The cadence is part of the schedule: a
+    #                             resumed run is bit-identical to an
+    #                             uninterrupted run with the SAME cadence
+    #                             (snapshots drain the pipeline).
+    snapshot_dir: Optional[str] = None   # where snapshots are published
+    keep_last: int = 3          # snapshots the GC retains per directory
+    resume: Optional[str] = None    # snapshot file or directory to
+    #                                 resume from; a missing or empty
+    #                                 directory starts fresh (what the
+    #                                 degradation ladder wants)
+    fault_plan: Optional[object] = None  # resilience.FaultPlan instance,
+    #                                      spec string, or None = read
+    #                                      the REPRO_FAULT_PLAN env var
+    max_retries: int = 2        # transient-fault retry budget per call
+    retry_backoff_s: float = 0.01   # linear backoff between retries
 
 
 @dataclasses.dataclass
@@ -96,6 +124,18 @@ class BatchedStats:
     stale_redraws: int = 0          # pool slots skipped on device because
     #                                 an interleaved superstep of the
     #                                 pipeline had already assigned them
+    # resilience counters (core/resilience.py, DESIGN.md §4f):
+    faults_injected: int = 0        # FaultPlan specs that fired this run
+    retries: int = 0                # transient-fault retries + poisoned-
+    #                                 superstep replays (never counted as
+    #                                 extra kernel_calls / supersteps)
+    fallbacks: int = 0              # ladder rungs exhausted before this
+    #                                 engine ran (partition_resilient)
+    snapshots: int = 0              # checkpoints published
+    snapshot_s: float = 0.0         # wall-clock publishing checkpoints
+    restore_s: float = 0.0          # wall-clock restoring the resume ckpt
+    resumed_at: int = -1            # superstep/phase the run resumed
+    #                                 from; -1 = fresh start
     # refinement post-pass (None unless refine_passes > 0 ran):
     refine: Optional[object] = None     # core.refine.RefineStats
 
@@ -130,6 +170,53 @@ class _BatchedState:
         # build into a pure gather. None for pathological hub expansions —
         # scoring then falls back to per-batch dedup with cap_pins.
         self.adj = hg.vertex_adjacency()
+        # deterministic fault schedule: the param (shared instance across
+        # a degradation ladder) or a FRESH parse of REPRO_FAULT_PLAN per
+        # engine run, so every run of a chaos suite sees the full plan
+        self.fault_plan = resilience.resolve_fault_plan(p.fault_plan)
+
+    # ------------------------------------------------------------------ #
+    def _guarded_kernel(self, fn, ordinal: int, kinds=("dispatch",),
+                        donated=()):
+        """Run a device call under fault injection + bounded retry.
+
+        Injected faults fire *before* the call (the dispatch site), so a
+        transient retry re-issues the identical pure computation — which
+        is what keeps recovery bit-identical to a fault-free run. A
+        fatal spec, an exhausted retry budget, or a real failure after
+        any ``donated`` buffer was consumed (the call cannot be
+        re-issued) raises ``UnrecoverableFault`` for the ladder.
+        """
+        plan = self.fault_plan
+        attempts = 0
+        while True:
+            try:
+                if plan is not None:
+                    sp = plan.fire(kinds, ordinal)
+                    if sp is not None:
+                        self.stats.faults_injected += 1
+                        raise resilience.FaultInjected(
+                            sp.kind, ordinal, sp.fatal)
+                return fn()
+            except resilience.UnrecoverableFault:
+                raise
+            except resilience.FaultInjected as exc:
+                if exc.fatal:
+                    raise resilience.UnrecoverableFault(str(exc)) from exc
+                err = exc
+            except Exception as exc:
+                if any(a.is_deleted() for a in donated):
+                    raise resilience.UnrecoverableFault(
+                        f"device call failed after buffer donation: "
+                        f"{exc!r}") from exc
+                err = exc
+            attempts += 1
+            if attempts > int(self.p.max_retries):
+                raise resilience.UnrecoverableFault(
+                    f"retry budget ({self.p.max_retries}) exhausted: "
+                    f"{err!r}") from err
+            self.stats.retries += 1
+            time.sleep(float(self.p.retry_backoff_s) * attempts)
 
     # ------------------------------------------------------------------ #
     def random_unassigned(self, count: int = 1,
@@ -282,6 +369,7 @@ class _BatchedState:
             import jax.numpy as jnp
             from repro.kernels.hype_score.ops import hype_scores
 
+            plan = self.fault_plan
             fringe_dev = jnp.asarray(self._fringe_buf)
             for lo in range(0, miss.size, self.p.b):
                 chunk = miss[lo:lo + self.p.b]
@@ -295,8 +383,26 @@ class _BatchedState:
                     tile, truncated = scoring.neighbor_tile(
                         self.hg, chunk, self.assignment,
                         cap_pins=self.p.cap_pins, pad_b=pad_b)
-                out = np.asarray(hype_scores(jnp.asarray(tile), fringe_dev))
-                sc = out[:chunk.size].astype(np.float64)
+                ordinal = self.stats.kernel_calls + 1
+                out = np.asarray(self._guarded_kernel(
+                    lambda: hype_scores(jnp.asarray(tile), fringe_dev),
+                    ordinal)).astype(np.float64)
+                if plan is not None:
+                    sp = plan.fire(("nan",), ordinal)
+                    if sp is not None:    # poison the whole score tile
+                        self.stats.faults_injected += 1
+                        if sp.fatal:
+                            raise resilience.UnrecoverableFault(
+                                f"injected fatal nan tile at kernel "
+                                f"call {ordinal}")
+                        out = out.copy()
+                        out[:chunk.size] = np.nan
+                sc = out[:chunk.size]
+                bad = ~np.isfinite(sc)
+                if bad.any():   # quarantine: rescore poisoned rows on
+                    #             host, bit-identical to a clean kernel
+                    sc[bad] = self._rescore_rows(chunk[bad])
+                    self.stats.host_rows += int(bad.sum())
                 sc[truncated] += scoring.TRUNC_PENALTY
                 self.cache[chunk] = sc
                 self.stats.kernel_calls += 1
@@ -313,8 +419,30 @@ class _BatchedState:
             self.stats.host_rows += int(miss.size)
             self.cache[miss] = sc
 
+    def _rescore_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Host re-score of NaN-quarantined kernel rows (DESIGN.md §4f).
 
-def _grow_partition(st: _BatchedState, phase: int, target: int) -> None:
+        Rebuilds the same clipped neighbor tile the kernel saw and
+        emulates its count (valid entries minus fringe members), so the
+        recovered scores are bit-identical to an unpoisoned kernel call:
+        the kernel's integer counts are float32-exact and the truncation
+        penalty is applied by the caller either way.
+        """
+        if self.adj is not None:
+            tile, _ = scoring.neighbor_tile_adj(
+                self.adj, ids, self.assignment)
+        else:
+            tile, _ = scoring.neighbor_tile(
+                self.hg, ids, self.assignment, cap_pins=self.p.cap_pins)
+        tile = tile[:ids.size]
+        valid = tile >= 0
+        ent = np.where(valid, tile, 0)
+        return (valid & ~self.in_fringe[ent]).sum(axis=1).astype(
+            np.float64)
+
+
+def _grow_partition(st: _BatchedState, phase: int, target: int,
+                    warm: bool = False) -> None:
     """Grow core set ``phase`` to ``target`` vertices.
 
     The step loop keeps a *pool* of up to ``pool_cap`` scored candidates
@@ -324,6 +452,10 @@ def _grow_partition(st: _BatchedState, phase: int, target: int) -> None:
     machinery of the sequential engines is gone entirely. The paper's
     s-sized fringe survives as the top-s of the pool: it is what the
     scoring kernel subtracts, exactly like F in Eq. 1.
+
+    ``warm`` continues a phase that already has members (a cross-engine
+    warm start from a snapshot, DESIGN.md §4f): existing members are
+    activated instead of seeding, and growth resumes from their count.
     """
     p = st.p
     st.cache[:] = -1.0
@@ -331,12 +463,21 @@ def _grow_partition(st: _BatchedState, phase: int, target: int) -> None:
     pool = np.empty(0, dtype=np.int64)       # kept sorted by score asc
     pending: list = []                       # admitted, edges not yet queued
 
-    seeds = st.random_unassigned(1)
-    if seeds.size == 0:
-        return
-    st.assignment[seeds] = phase
-    st.activate(seeds, phase)
-    acc = 1
+    acc = 0
+    if warm:
+        members = np.flatnonzero(st.assignment == phase)
+        acc = int(members.size)
+        if acc >= target:
+            return
+        if acc:
+            st.activate(members.astype(np.int64), phase)
+    if acc == 0:
+        seeds = st.random_unassigned(1)
+        if seeds.size == 0:
+            return
+        st.assignment[seeds] = phase
+        st.activate(seeds, phase)
+        acc = 1
 
     while acc < target:
         st.stats.steps += 1
@@ -412,6 +553,47 @@ _CLS_SHIFT = 44
 _SEQ_START = np.int64(1) << 43
 
 
+@dataclasses.dataclass
+class _CallArgs:
+    """The host-built buffers of one superstep's device call.
+
+    Kept on the in-flight handle so a quarantined superstep can be
+    replayed *exactly* (same pure program, same inputs, current image
+    state). ``bias`` is always the CLEAN bias — an injected NaN tile
+    poisons a copy at dispatch time only.
+    """
+    delta: np.ndarray
+    vals: np.ndarray
+    dirty: np.ndarray
+    dcnt: np.ndarray
+    fresh: np.ndarray
+    bias: np.ndarray
+    pool_arr: np.ndarray
+    fringe: np.ndarray
+    targets: np.ndarray
+    select_k: int
+
+
+@dataclasses.dataclass
+class _Superstep:
+    """One in-flight superstep: result futures + replay material.
+
+    ``winners``/``n_stale``/``poison`` (and ``ncf`` for the sharded
+    engine) are device futures the driver blocks on at harvest;
+    ``donated`` pins the consumed image arrays until that block (a
+    donated buffer's last reference must not drop while the execution
+    consuming it is still in flight); ``args`` is the clean input set
+    for poisoned-superstep replays.
+    """
+    winners: object
+    n_stale: object
+    poison: object
+    fresh_ids: np.ndarray
+    donated: tuple
+    args: _CallArgs
+    ncf: object = None
+
+
 class _SuperstepState(_BatchedState):
     """Adds the device-resident graph image and per-phase growth state.
 
@@ -431,24 +613,33 @@ class _SuperstepState(_BatchedState):
         if k >= 1 << (63 - _PH_SHIFT):      # bucket-store key width
             self.dev = None
             return
+        plan = self.fault_plan
+        if plan is not None and plan.fire(("oom",), 0) is not None:
+            # simulated allocation failure at the image-upload site: this
+            # engine cannot run at all — hand the ladder the next rung
+            self.stats.faults_injected += 1
+            raise resilience.UnrecoverableFault(
+                "injected OOM during device image upload")
         self.dev = hg.device_adjacency(mesh=mesh)
         if self.dev is None:       # hub-expansion guard tripped on host
             return
         import jax
         import jax.numpy as jnp
-        from repro.kernels._compat import pallas_interpret
 
         n, m = hg.n, hg.m
-        self.interpret = pallas_interpret()
         self.dev_assign = jnp.full((n,), -1, jnp.int32)
         self.dev_cache = jnp.full((n,), -1.0, jnp.float32)
         self.dev_acc = jnp.zeros((k,), jnp.int32)
+        # sticky NaN-quarantine flag (scoring._poison_guard), donated
+        # through every superstep like the rest of the mutable image
+        self.dev_poison = jnp.zeros((1,), jnp.int32)
         if mesh is not None:       # replicate the mutable image too
             from jax.sharding import NamedSharding, PartitionSpec
             rep = NamedSharding(mesh, PartitionSpec())
             self.dev_assign = jax.device_put(self.dev_assign, rep)
             self.dev_cache = jax.device_put(self.dev_cache, rep)
             self.dev_acc = jax.device_put(self.dev_acc, rep)
+            self.dev_poison = jax.device_put(self.dev_poison, rep)
         self.cache_scored = np.zeros(n, dtype=bool)
         self.pools = [np.empty(0, dtype=np.int64) for _ in range(k)]
         # flat (phase, class, edge) bucket store — two parallel arrays
@@ -484,6 +675,29 @@ class _SuperstepState(_BatchedState):
             self.dev[0].nbytes + self.dev[1].nbytes
             + self.dev_assign.nbytes + self.dev_cache.nbytes
             + self.dev_acc.nbytes)
+
+    # ------------------------------------------------------------------ #
+    # injected faults this engine's dispatch site can see (the sharded
+    # engine adds "collective" — its dispatch owns the all_gather)
+    _fault_kinds = ("dispatch",)
+
+    @property
+    def interpret(self) -> bool:
+        """Pallas interpret mode, re-resolved per call.
+
+        A property, not an ``__init__`` attribute, so flipping
+        ``REPRO_PALLAS_INTERPRET`` steers even a live engine — the
+        NaN-quarantine tests flip it without rebuilding state, and
+        ``kernels/_compat.pallas_interpret`` already reads the env per
+        call; this was the one residual cache of its value.
+        """
+        from repro.kernels._compat import pallas_interpret
+        return pallas_interpret()
+
+    def _to_device(self, arr: np.ndarray):
+        """Upload a host array as this engine's replicated image layout."""
+        import jax.numpy as jnp
+        return jnp.asarray(arr)
 
     # ------------------------------------------------------------------ #
     def _pmask(self, g: int) -> np.ndarray:
@@ -827,6 +1041,38 @@ class _SuperstepState(_BatchedState):
                      else np.empty(0, dtype=np.int64))
         return (fresh, bias, pool_arr, fresh_ids), injected
 
+    def _call_program(self, args: _CallArgs, reset: np.ndarray):
+        """Issue the fused superstep program; rotate the donated image.
+
+        Returns ``(winners, n_stale, ncf)`` futures (``ncf`` is None for
+        the single-device engine). The sharded engine overrides this —
+        it is the ONLY device-call difference between the two engines.
+        """
+        (self.dev_assign, self.dev_cache, self.dev_acc, self.dev_poison,
+         winners, n_stale) = scoring.pipeline_superstep_device(
+            self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
+            self.dev_acc, self.dev_poison, args.delta, args.vals,
+            args.dirty, args.dcnt, args.fresh, args.bias, args.pool_arr,
+            args.fringe, args.targets, reset, tile_l=self.tile_l,
+            select_k=args.select_k, interpret=self.interpret)
+        return winners, n_stale, None
+
+    def _call_guarded(self, args: _CallArgs, reset: np.ndarray):
+        """``_call_program`` under fault injection + bounded retry."""
+        return self._guarded_kernel(
+            lambda: self._call_program(args, reset),
+            int(self.stats.supersteps), self._fault_kinds,
+            donated=(self.dev_assign, self.dev_cache, self.dev_acc,
+                     self.dev_poison))
+
+    def _count_dispatch(self, fresh: np.ndarray, select_k: int) -> None:
+        """Per-dispatch counter hook (the sharded engine adds
+        collective accounting). Replays never come through here — the
+        kernel_calls == supersteps invariant survives recovery."""
+
+    def _count_harvest(self, handle: _Superstep) -> None:
+        """Per-harvest counter hook (sharded: admission conflicts)."""
+
     def dispatch(self, fresh, bias, pool_arr, fringe, fresh_ids,
                  targets_i32, delta_cap: int, select_k: int):
         """Launch one superstep on the device (async); returns a handle.
@@ -837,6 +1083,12 @@ class _SuperstepState(_BatchedState):
         (donated) image arrays ride the handle: deleting a donated
         buffer synchronizes with the execution consuming it, so their
         last reference must not drop before the harvest-time block.
+
+        Fault-injection sites (DESIGN.md §4f): a ``dispatch`` (or, for
+        the sharded engine, ``collective``) spec raises here and is
+        retried/escalated by ``_call_guarded``; a ``nan`` spec poisons a
+        COPY of the bias buffer so the device program's quarantine
+        guard trips — the handle keeps the clean args for the replay.
         """
         tails = self.pending_dirty
         self.pending_dirty = []
@@ -848,14 +1100,52 @@ class _SuperstepState(_BatchedState):
             + targets_i32.nbytes)
         self.stats.supersteps += 1
         self.stats.kernel_calls += 1
-        donated = (self.dev_assign, self.dev_cache, self.dev_acc)
-        (self.dev_assign, self.dev_cache, self.dev_acc, winners,
-         n_stale) = scoring.pipeline_superstep_device(
-            self.dev[0], self.dev[1], *donated, delta, vals, dirty,
-            dcnt, fresh, bias, pool_arr, fringe, targets_i32,
-            tile_l=self.tile_l, select_k=select_k,
-            interpret=self.interpret)
-        return winners, n_stale, fresh_ids, donated
+        self._count_dispatch(fresh, select_k)
+        args = _CallArgs(delta, vals, dirty, dcnt, fresh, bias,
+                         pool_arr, fringe, targets_i32, select_k)
+        send = args
+        plan = self.fault_plan
+        if plan is not None:
+            sp = plan.fire(("nan",), int(self.stats.supersteps))
+            if sp is not None:
+                self.stats.faults_injected += 1
+                if sp.fatal:
+                    raise resilience.UnrecoverableFault(
+                        f"injected fatal nan tile at superstep "
+                        f"{self.stats.supersteps}")
+                bias_bad = bias.copy()
+                bias_bad[fresh >= 0] = np.nan
+                send = dataclasses.replace(args, bias=bias_bad)
+        donated = (self.dev_assign, self.dev_cache, self.dev_acc,
+                   self.dev_poison)
+        winners, n_stale, ncf = self._call_guarded(send, _RESET0)
+        return _Superstep(winners, n_stale, self.dev_poison, fresh_ids,
+                          donated, args, ncf)
+
+    def replay(self, h: _Superstep) -> _Superstep:
+        """Re-issue a quarantined superstep from its clean args.
+
+        The poisoned superstep (and every later in-flight one — the
+        poison flag is sticky) reverted all of its device mutations, so
+        the current image equals the state just before it ran: calling
+        the same pure program with the handle's clean args and
+        ``reset=1`` recovers exactly what a fault-free run computed.
+        Counts as a retry only — never as a new superstep/kernel call.
+        A superstep still poisoned after a clean replay means the
+        non-finite scores are real (not injected): unrecoverable here,
+        the ladder's host engines score around poisoned rows instead.
+        """
+        self.stats.retries += 1
+        donated = (self.dev_assign, self.dev_cache, self.dev_acc,
+                   self.dev_poison)
+        winners, n_stale, ncf = self._call_program(h.args, _RESET1)
+        nh = _Superstep(winners, n_stale, self.dev_poison, h.fresh_ids,
+                        donated, h.args, ncf)
+        if int(np.asarray(nh.poison)[0]) > 0:
+            raise resilience.UnrecoverableFault(
+                "superstep still poisoned after a clean replay: the "
+                "non-finite scores did not come from an injected fault")
+        return nh
 
     def harvest(self, handle, acc: np.ndarray, targets: np.ndarray,
                 exclude=()) -> int:
@@ -869,10 +1159,20 @@ class _SuperstepState(_BatchedState):
         were computed *after* this superstep's winners were applied, so
         the queued winner decrements must skip them (double-decrement
         otherwise).
+
+        A quarantined handle (non-finite scores poisoned the superstep,
+        which reverted itself on device) is replayed from its clean
+        args before mirroring — direct dispatch/harvest callers survive
+        an injected NaN tile without the pipeline driver's help; the
+        driver additionally replays the whole in-flight window to keep
+        device-effect order (see ``_harvest_next``).
         """
         import time as _time
 
-        winners_dev, stale_dev, fresh_ids = handle[:3]
+        if int(np.asarray(handle.poison)[0]) > 0:
+            handle = self.replay(handle)
+        winners_dev, stale_dev = handle.winners, handle.n_stale
+        fresh_ids = handle.fresh_ids
         t0 = _time.perf_counter()
         winners = np.asarray(winners_dev)
         n_stale = int(stale_dev)
@@ -898,8 +1198,99 @@ class _SuperstepState(_BatchedState):
                     gi = int(g)
                     self._pmask(gi)[self.pools[gi]] = False
                     self.pools[gi] = np.empty(0, dtype=np.int64)
+        self._count_harvest(handle)
         self.stats.host_s += _time.perf_counter() - t0
         return progress
+
+    # ----------------------------------------------- snapshot / restore
+    def capture_payload(self, acc: np.ndarray, cur_depth: int) -> dict:
+        """Complete engine state at a drained superstep boundary.
+
+        Called with the pipeline empty (the driver drains in-flight
+        supersteps first), so the only live state is host bookkeeping
+        plus the settled device image. Everything the continuation
+        reads is captured; static derivatives (adjacency, tile width,
+        random order) are rebuilt from the config at restore.
+        """
+        self._store_flush()
+        return {
+            "assignment": self.assignment.copy(),
+            "acc": acc.copy(),
+            "cur_depth": int(cur_depth),
+            "in_pool": self.in_pool.copy(),
+            "cache_scored": self.cache_scored.copy(),
+            "pools": [ids.copy() for ids in self.pools],
+            "bq_key": self.bq_key.copy(),
+            "bq_edge": self.bq_edge.copy(),
+            "seq_back": int(self._seq_back),
+            "seq_front": int(self._seq_front),
+            "edge_queued": self.edge_queued.copy(),
+            "edge_dead": self.edge_dead.copy(),
+            "delta_ids": [a.copy() for a in self.delta_ids],
+            "delta_vals": [a.copy() for a in self.delta_vals],
+            "pending_dirty": [a.copy() for a in self.pending_dirty],
+            "rand_ptr": int(self.rand_ptr),
+            "rng_state": self.rng.bit_generator.state,
+            "dirty_ratchet": int(self._dirty_ratchet),
+            "stats": dataclasses.replace(self.stats),
+            "dev_assign": np.asarray(self.dev_assign),
+            "dev_cache": np.asarray(self.dev_cache),
+            "dev_acc": np.asarray(self.dev_acc),
+        }
+
+    def restore_exact(self, pay: dict):
+        """Resume bit-identically from a same-engine/config payload.
+
+        Returns ``(acc, cur_depth)`` for the driver. The device image
+        is re-uploaded from the snapshot's downloaded copies; the
+        poison flag restarts clean (snapshots are only taken at drained,
+        replayed-if-needed boundaries).
+        """
+        self.assignment = pay["assignment"].copy()
+        self.in_pool = pay["in_pool"].copy()
+        self.cache_scored = pay["cache_scored"].copy()
+        self.pools = [ids.copy() for ids in pay["pools"]]
+        self.bq_key = pay["bq_key"].copy()
+        self.bq_edge = pay["bq_edge"].copy()
+        self._bq_pending = []
+        self._seq_back = np.int64(pay["seq_back"])
+        self._seq_front = np.int64(pay["seq_front"])
+        self.edge_queued = pay["edge_queued"].copy()
+        self.edge_dead = pay["edge_dead"].copy()
+        self.delta_ids = [a.copy() for a in pay["delta_ids"]]
+        self.delta_vals = [a.copy() for a in pay["delta_vals"]]
+        self.pending_dirty = [a.copy() for a in pay["pending_dirty"]]
+        self.rand_ptr = int(pay["rand_ptr"])
+        self.rng.bit_generator.state = pay["rng_state"]
+        self._dirty_ratchet = int(pay["dirty_ratchet"])
+        self.stats = dataclasses.replace(pay["stats"])
+        self.dev_assign = self._to_device(pay["dev_assign"])
+        self.dev_cache = self._to_device(pay["dev_cache"])
+        self.dev_acc = self._to_device(pay["dev_acc"])
+        self.dev_poison = self._to_device(np.zeros(1, dtype=np.int32))
+        return pay["acc"].copy(), int(pay["cur_depth"])
+
+    def restore_warm(self, warm: np.ndarray) -> np.ndarray:
+        """Cross-engine warm start: adopt a (partial) assignment.
+
+        Mirrors the assignment into the device image and activates the
+        incident edges of every adopted member, so growth continues
+        from the snapshot instead of from scratch. Exactness is not
+        claimed (the donor engine's transient state is gone) — this is
+        the degradation ladder's path. Returns the per-phase totals.
+        """
+        done = np.flatnonzero(warm >= 0)
+        acc = np.zeros(self.k, dtype=np.int64)
+        if done.size:
+            ph = warm[done].astype(np.int64)
+            self.assignment[done] = warm[done]
+            acc[:int(ph.max()) + 1] = np.bincount(ph)
+            self.dev_assign = self._to_device(
+                self.assignment.astype(np.int32, copy=True))
+            self.dev_acc = self._to_device(
+                acc.astype(np.int32, copy=True))
+            self.activate_many(done.astype(np.int64), ph)
+        return acc
 
     def _release_members(self, vs: np.ndarray, ph: np.ndarray) -> None:
         """Clear pool membership for freshly mirrored winners."""
@@ -940,6 +1331,48 @@ class _SuperstepState(_BatchedState):
             self.pending_dirty.append(nbrs)
 
 
+def _harvest_next(st: _SuperstepState, inflight: collections.deque,
+                  acc: np.ndarray, targets: np.ndarray) -> int:
+    """Harvest the oldest in-flight superstep, replaying a poisoned one.
+
+    When the popped superstep was quarantined (non-finite scores — an
+    injected NaN tile, normally), every in-flight superstep dispatched
+    after it self-aborted on the sticky poison flag: replay the whole
+    window in FIFO order from the handles' clean args so device-effect
+    order — and therefore bit-identical recovery — is preserved.
+    """
+    h = inflight.popleft()
+    if int(np.asarray(h.poison)[0]) > 0:
+        h = st.replay(h)
+        redo = list(inflight)
+        inflight.clear()
+        for old in redo:
+            inflight.append(st.replay(old))
+    return st.harvest(h, acc, targets, [e.fresh_ids for e in inflight])
+
+
+def _teardown_pipeline(st: _SuperstepState,
+                       inflight: collections.deque) -> None:
+    """Settle the donated-buffer chains of an aborted run (§4f).
+
+    Blocks on every in-flight superstep's outputs so each donated
+    execution completes (deleting a donated buffer synchronizes with
+    the execution consuming it), then drops the handles and the queued
+    host transients. Nothing device-side survives except the state's
+    own current image arrays — no zombie refs, and the process is free
+    to start a fresh engine run.
+    """
+    for h in list(inflight):
+        try:
+            np.asarray(h.winners)
+            np.asarray(h.poison)
+        except Exception:       # the abort may have broken the call
+            pass
+    inflight.clear()
+    st.delta_ids, st.delta_vals = [], []
+    st.pending_dirty = []
+
+
 def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
                   num_devices: Optional[int] = None):
     """Grow all ``k`` partitions concurrently; returns (assignment, state).
@@ -955,15 +1388,24 @@ def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
     deterministic redraw rule, so results are seeded-deterministic at
     any depth and ``pipeline_depth=1`` reproduces the lock-step engine
     bit for bit.
+
+    Resilience (DESIGN.md §4f): every ``p.snapshot_every`` supersteps
+    the driver drains the pipeline and publishes a checkpoint; with
+    ``p.resume`` pointing at a same-engine/same-config snapshot the run
+    restores it and continues bit-identically to an uninterrupted run
+    with the same cadence (a cross-engine snapshot warm-starts from its
+    assignment instead). Any exception tears the pipeline down safely.
     """
     import time as _time
 
     if num_devices is None:
         kG = k
+        engine = "hype_superstep"
         st = _SuperstepState(hg, k, p)
     else:
         kL = -(-k // num_devices)
         kG = kL * num_devices
+        engine = "hype_sharded"
         st = _ShardedState(hg, kG, p, num_devices)
     if st.dev is None:
         return None, None                       # caller falls back
@@ -977,59 +1419,104 @@ def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
     delta_cap = max(2 * kG * t, kG)
     depth = max(1, int(p.pipeline_depth))
     fringe = np.full((kG, 1), -1, dtype=np.int32)   # fringe-free scoring
+    snap_every = max(0, int(p.snapshot_every or 0))
+    # everything that decides the superstep schedule: an exact restore
+    # requires all of it to match (snapshot cadence included — draining
+    # the pipeline at snapshots IS part of the schedule at depth > 1)
+    config = {"k": k, "devices": 0 if num_devices is None else
+              num_devices, "t": t, "rows": R, "pool_cap": P, "s": p.s,
+              "seed": p.seed, "pipeline_depth": depth,
+              "snapshot_every": snap_every}
 
-    # seed every phase with one random vertex (paper §III-B1 step 1)
-    seeds = st.random_unassigned(int((targets > 0).sum()))
-    gi = 0
-    for g in range(kG):
-        if targets[g] == 0 or gi >= seeds.size:
-            continue
-        v = seeds[gi:gi + 1]
-        gi += 1
-        st.assign_now(v, g)
-        st.activate_phase(v, g)
-        acc[g] += 1
-
-    inflight: collections.deque = collections.deque()
     cur_depth = depth
-    while True:
-        active = np.flatnonzero(acc < targets)
-        if active.size == 0:
-            break
-        progress = 0
-        while len(inflight) >= cur_depth:   # tail heuristic shrank depth
-            h = inflight.popleft()
-            progress += st.harvest(h, acc, targets,
-                                   [e[2] for e in inflight])
+    seeded = False
+    ckpt = resilience.load_latest(p.resume) if p.resume else None
+    if ckpt is not None:
         t0 = _time.perf_counter()
-        packed, injected = st.pack_superstep(active, R, P, t, targets,
-                                             acc)
-        progress += injected
-        if packed is not None:
-            fresh, bias, pool_arr, fresh_ids = packed
-            handle = st.dispatch(fresh, bias, pool_arr, fringe,
-                                 fresh_ids, targets_i32, delta_cap, t)
-        st.stats.host_s += _time.perf_counter() - t0
-        if packed is not None:
-            inflight.append(handle)
-        elif inflight:
-            st.stats.pipeline_stalls += 1   # device idles this round
-        if inflight and (len(inflight) >= cur_depth or packed is None):
-            h = inflight.popleft()
-            harvested = st.harvest(h, acc, targets,
-                                   [e[2] for e in inflight])
-            progress += harvested
-            # adaptive depth: while a superstep admits less than half
-            # its capacity the draw view — not the device — is the
-            # bottleneck, and speculative packs only waste fixed-cost
-            # device calls; drop to lock-step until admissions recover.
-            # Deterministic: based solely on mirrored results.
-            cur_depth = 1 if 2 * harvested < active.size * t else depth
-        if progress == 0 and not inflight:
-            break       # starved: remaining vertices sit in other pools
-    while inflight:     # drain the pipeline before the safety net
-        h = inflight.popleft()
-        st.harvest(h, acc, targets, [e[2] for e in inflight])
+        resilience.check_checkpoint(ckpt, hg, k)
+        if ckpt.engine == engine and ckpt.config == config:
+            acc, cur_depth = st.restore_exact(ckpt.payload)
+            seeded = True       # the snapshot already carries the seeds
+        else:
+            acc = st.restore_warm(resilience.warm_assignment(ckpt))
+        st.stats.resumed_at = int(ckpt.superstep)
+        st.stats.restore_s += _time.perf_counter() - t0
+
+    if not seeded:
+        # seed every empty phase with one random vertex (paper §III-B1
+        # step 1); a warm start only seeds phases the snapshot left empty
+        seeds = st.random_unassigned(
+            int(((acc == 0) & (targets > 0)).sum()))
+        gi = 0
+        for g in range(kG):
+            if targets[g] == 0 or acc[g] > 0 or gi >= seeds.size:
+                continue
+            v = seeds[gi:gi + 1]
+            gi += 1
+            st.assign_now(v, g)
+            st.activate_phase(v, g)
+            acc[g] += 1
+
+    last_snap = int(st.stats.supersteps)
+    inflight: collections.deque = collections.deque()
+    try:
+        while True:
+            progress = 0
+            if (snap_every
+                    and st.stats.supersteps - last_snap >= snap_every):
+                while inflight:     # drain: snapshots see settled state
+                    progress += _harvest_next(st, inflight, acc, targets)
+                t0 = _time.perf_counter()
+                st.stats.snapshots += 1
+                resilience.save_snapshot(
+                    p.snapshot_dir,
+                    resilience.PartitionCheckpoint(
+                        engine, int(st.stats.supersteps),
+                        hg.fingerprint(), dict(config),
+                        st.capture_payload(acc, cur_depth)),
+                    keep_last=int(p.keep_last))
+                st.stats.snapshot_s += _time.perf_counter() - t0
+                last_snap = int(st.stats.supersteps)
+            active = np.flatnonzero(acc < targets)
+            if active.size == 0:
+                break
+            while len(inflight) >= cur_depth:   # tail heuristic shrank
+                progress += _harvest_next(st, inflight, acc, targets)
+            t0 = _time.perf_counter()
+            packed, injected = st.pack_superstep(active, R, P, t,
+                                                 targets, acc)
+            progress += injected
+            if packed is not None:
+                fresh, bias, pool_arr, fresh_ids = packed
+                handle = st.dispatch(fresh, bias, pool_arr, fringe,
+                                     fresh_ids, targets_i32, delta_cap,
+                                     t)
+            st.stats.host_s += _time.perf_counter() - t0
+            if packed is not None:
+                inflight.append(handle)
+            elif inflight:
+                st.stats.pipeline_stalls += 1   # device idles this round
+            if inflight and (len(inflight) >= cur_depth
+                             or packed is None):
+                harvested = _harvest_next(st, inflight, acc, targets)
+                progress += harvested
+                # adaptive depth: while a superstep admits less than
+                # half its capacity the draw view — not the device — is
+                # the bottleneck, and speculative packs only waste
+                # fixed-cost device calls; drop to lock-step until
+                # admissions recover. Deterministic: based solely on
+                # mirrored results.
+                cur_depth = 1 if 2 * harvested < active.size * t else depth
+            if progress == 0 and not inflight:
+                break   # starved: remaining vertices sit in other pools
+        while inflight:     # drain the pipeline before the safety net
+            _harvest_next(st, inflight, acc, targets)
+    except BaseException:
+        # abort path (injected unrecoverable fault, KeyboardInterrupt,
+        # real device failure): settle every donated chain before
+        # propagating so no zombie buffer outlives the run
+        _teardown_pipeline(st, inflight)
+        raise
 
     # safety net: balance-fill any stragglers into underfull phases
     rem_v = np.flatnonzero(st.assignment < 0)
@@ -1125,9 +1612,19 @@ class _ShardedState(_SuperstepState):
         if tail.size:
             self.pending_dirty.append(tail)
 
-    def dispatch(self, fresh, bias, pool_arr, fringe, fresh_ids,
-                 targets_i32, delta_cap: int, select_k: int):
-        """Launch one mesh-sharded superstep (async); returns a handle.
+    def _to_device(self, arr: np.ndarray):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.device_put(jnp.asarray(arr),
+                              NamedSharding(self.mesh, PartitionSpec()))
+
+    # the sharded dispatch site owns the per-superstep all_gather, so a
+    # failed collective is injected (and retried) there too
+    _fault_kinds = ("dispatch", "collective")
+
+    def _call_program(self, args: _CallArgs, reset: np.ndarray):
+        """One mesh-sharded superstep (async).
 
         Host->device traffic is the same id/bias buffers as the
         single-device engine; the host-side dirty pairs carry the
@@ -1136,37 +1633,37 @@ class _ShardedState(_SuperstepState):
         decrement gather at ``tile_l``), so the replicated cache stays
         exact.
         """
-        tails = self.pending_dirty
-        self.pending_dirty = []
-        delta, vals, dirty, dcnt = self._pack_delta_dirty(
-            delta_cap, extra_dirty=tails)
-        self.stats.host_to_device_bytes += (
-            fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
-            + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes
-            + targets_i32.nbytes)
-        self.stats.supersteps += 1
-        self.stats.kernel_calls += 1
+        (self.dev_assign, self.dev_cache, self.dev_acc, self.dev_poison,
+         winners, ncf, n_stale) = scoring.sharded_superstep_device(
+            self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
+            self.dev_acc, self.dev_poison, args.delta, args.vals,
+            args.dirty, args.dcnt, args.fresh, args.bias, args.pool_arr,
+            args.fringe, args.targets, reset, num_devices=self.D,
+            group_l=self.kL, tile_l=self.tile_l,
+            select_k=args.select_k, interpret=self.interpret)
+        return winners, n_stale, ncf
+
+    def _count_dispatch(self, fresh: np.ndarray, select_k: int) -> None:
         kG, R = fresh.shape
         # one all_gather per superstep: every device materializes the
         # global (kG, R + t) int32 payload of fresh scores + admissions
         self.stats.collectives += 1
         self.stats.collective_bytes += self.D * kG * (R + select_k) * 4
-        donated = (self.dev_assign, self.dev_cache, self.dev_acc)
-        (self.dev_assign, self.dev_cache, self.dev_acc, winners, ncf,
-         n_stale) = scoring.sharded_superstep_device(
-            self.dev[0], self.dev[1], *donated, delta, vals, dirty,
-            dcnt, fresh, bias, pool_arr, fringe, targets_i32,
-            num_devices=self.D, group_l=self.kL, tile_l=self.tile_l,
-            select_k=select_k, interpret=self.interpret)
-        return winners, n_stale, fresh_ids, donated, ncf
 
-    def harvest(self, handle, acc: np.ndarray, targets: np.ndarray,
-                exclude=()) -> int:
-        progress = super().harvest(handle, acc, targets, exclude)
+    def _count_harvest(self, handle: _Superstep) -> None:
         # the conflict count rides the harvested superstep's results, so
         # reading it here never adds a block
-        self.stats.admission_conflicts += int(handle[4])
-        return progress
+        self.stats.admission_conflicts += int(handle.ncf)
+
+    def capture_payload(self, acc: np.ndarray, cur_depth: int) -> dict:
+        pay = super().capture_payload(acc, cur_depth)
+        pay["group_pool"] = self.group_pool.copy()
+        return pay
+
+    def restore_exact(self, pay: dict):
+        out = super().restore_exact(pay)
+        self.group_pool = pay["group_pool"].copy()
+        return out
 
 
 def _maybe_refine(hg: Hypergraph, k: int, params: BatchedParams,
@@ -1228,6 +1725,8 @@ def hype_sharded_partition(hg: Hypergraph, k: int,
         raise ValueError("rows, pool_cap, t must all be >= 1")
     if params.pipeline_depth < 1:
         raise ValueError("pipeline_depth must be >= 1")
+    if params.snapshot_every > 0 and not params.snapshot_dir:
+        raise ValueError("snapshot_every requires snapshot_dir")
     if params.devices is not None and params.devices < 1:
         raise ValueError("devices must be >= 1")
     if k == 1:
@@ -1276,6 +1775,8 @@ def hype_superstep_partition(hg: Hypergraph, k: int,
         raise ValueError("rows, pool_cap, t must all be >= 1")
     if params.pipeline_depth < 1:
         raise ValueError("pipeline_depth must be >= 1")
+    if params.snapshot_every > 0 and not params.snapshot_dir:
+        raise ValueError("snapshot_every requires snapshot_dir")
     if k == 1:
         out = np.zeros(hg.n, dtype=np.int32)
         return (out, BatchedStats()) if return_stats else out
@@ -1296,6 +1797,13 @@ def hype_batched_partition(hg: Hypergraph, k: int,
 
     Same contract as ``hype_partition``: complete int32 assignment with
     perfectly balanced partition sizes (max - min <= 1).
+
+    Resilience (DESIGN.md §4f): snapshots are phase-granular — between
+    ``_grow_partition`` calls all transient state (score cache, pools,
+    buckets) is empty, so a checkpoint is just the assignment plus edge
+    flags and the random stream; resuming a same-config snapshot
+    continues bit-identically, and a cross-engine snapshot (the
+    degradation ladder) warm-starts every phase from its members.
     """
     if params is None:
         params = BatchedParams()
@@ -1305,16 +1813,66 @@ def hype_batched_partition(hg: Hypergraph, k: int,
         raise ValueError("b, s, t must all be >= 1")
     if params.pool_cap < 1:
         raise ValueError("pool_cap must be >= 1")
+    if params.snapshot_every > 0 and not params.snapshot_dir:
+        raise ValueError("snapshot_every requires snapshot_dir")
     st = _BatchedState(hg, k, params)
     n = hg.n
     base, rem = divmod(n, k)
-    for i in range(k):
+    snap_every = max(0, int(params.snapshot_every or 0))
+    config = {"k": k, "t": params.t, "b": params.b, "s": params.s,
+              "pool_cap": params.pool_cap, "refill_lo": params.refill_lo,
+              "cap_pins": params.cap_pins,
+              "kernel_min": params.kernel_min, "seed": params.seed,
+              "snapshot_every": snap_every}
+    start = 0
+    warm = False
+    ckpt = (resilience.load_latest(params.resume) if params.resume
+            else None)
+    if ckpt is not None:
+        t0 = time.perf_counter()
+        resilience.check_checkpoint(ckpt, hg, k)
+        if ckpt.engine == "hype_batched" and ckpt.config == config:
+            pay = ckpt.payload
+            st.assignment = pay["assignment"].copy()
+            st.edge_dead = pay["edge_dead"].copy()
+            st.edge_epoch = pay["edge_epoch"].copy()
+            st.rand_ptr = int(pay["rand_ptr"])
+            st.rng.bit_generator.state = pay["rng_state"]
+            st.stats = dataclasses.replace(pay["stats"])
+            start = int(pay["next_phase"])
+        else:
+            wa = resilience.warm_assignment(ckpt)
+            got = wa >= 0
+            st.assignment[got] = wa[got]
+            warm = True
+        st.stats.resumed_at = int(ckpt.superstep)
+        st.stats.restore_s += time.perf_counter() - t0
+    last_snap = start
+    for i in range(start, k):
         if i == k - 1:
             rem_v = np.flatnonzero(st.assignment < 0)
             st.assignment[rem_v] = i
             st.in_fringe[:] = False
             break
-        _grow_partition(st, i, base + (1 if i < rem else 0))
+        _grow_partition(st, i, base + (1 if i < rem else 0), warm=warm)
+        if snap_every and i + 1 - last_snap >= snap_every:
+            t0 = time.perf_counter()
+            st.stats.snapshots += 1
+            resilience.save_snapshot(
+                params.snapshot_dir,
+                resilience.PartitionCheckpoint(
+                    "hype_batched", i + 1, hg.fingerprint(),
+                    dict(config),
+                    {"assignment": st.assignment.copy(),
+                     "edge_dead": st.edge_dead.copy(),
+                     "edge_epoch": st.edge_epoch.copy(),
+                     "rand_ptr": int(st.rand_ptr),
+                     "rng_state": st.rng.bit_generator.state,
+                     "stats": dataclasses.replace(st.stats),
+                     "next_phase": i + 1}),
+                keep_last=int(params.keep_last))
+            st.stats.snapshot_s += time.perf_counter() - t0
+            last_snap = i + 1
     assert (st.assignment >= 0).all()
     assignment = _maybe_refine(hg, k, params, st.assignment, st.stats)
     if return_stats:

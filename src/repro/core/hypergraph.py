@@ -271,6 +271,28 @@ class Hypergraph:
                     f"edge id {int(self.v2e_indices.max())} out of "
                     f"range [0, {self.m})")
 
+    def fingerprint(self) -> str:
+        """Stable 16-hex-digit digest of the CSR structure, memoized.
+
+        Identifies the graph a ``PartitionCheckpoint`` belongs to
+        (core/resilience.py): restore refuses a snapshot whose
+        fingerprint does not match the hypergraph it is applied to.
+        Covers (n, m) and all four CSR arrays, so any structural edit
+        changes it.
+        """
+        cached = self.__dict__.get("_fingerprint")
+        if cached is not None:
+            return cached
+        import hashlib
+        h = hashlib.sha256()
+        h.update(np.asarray([self.n, self.m], dtype=np.int64).tobytes())
+        for a in (self.v2e_indptr, self.v2e_indices,
+                  self.e2v_indptr, self.e2v_indices):
+            h.update(np.ascontiguousarray(a).tobytes())
+        fp = h.hexdigest()[:16]
+        object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
     def stats(self) -> dict:
         es, vd = self.edge_sizes, self.vertex_degrees
         return {

@@ -27,6 +27,8 @@ from .hype_batched import (BatchedParams, ShardedParams, SuperstepParams,
                            hype_batched_partition,
                            hype_sharded_partition,
                            hype_superstep_partition)
+from . import resilience
+from .resilience import UnrecoverableFault
 from .minmax import hashing_partition, minmax_partition, random_partition
 from .shp import shp_partition
 from .multilevel import hype_multilevel_partition, multilevel_partition
@@ -55,7 +57,8 @@ METHOD_INFO: Dict[str, dict] = {
                 "kernel (host tiles; bit-stable throughput default)",
         "balance_slack": lambda n, k: 1,
         "knobs": ("t", "b", "s", "pool_cap", "kernel_min",
-                  "refine_passes"),
+                  "refine_passes", "snapshot_every", "snapshot_dir",
+                  "keep_last", "resume", "fault_plan", "max_retries"),
     },
     "hype_jax": {
         "desc": "sequential HYPE as one jitted lax.while_loop program "
@@ -73,7 +76,8 @@ METHOD_INFO: Dict[str, dict] = {
                 "pipeline (large-k choice; pipeline_depth=1 locks step)",
         "balance_slack": lambda n, k: 1,
         "knobs": ("t", "rows", "pool_cap", "pipeline_depth",
-                  "refine_passes"),
+                  "refine_passes", "snapshot_every", "snapshot_dir",
+                  "keep_last", "resume", "fault_plan", "max_retries"),
     },
     "hype_sharded": {
         "desc": "mesh-sharded superstep HYPE: phase groups sharded over "
@@ -81,7 +85,8 @@ METHOD_INFO: Dict[str, dict] = {
                 "superstep",
         "balance_slack": lambda n, k: 1,
         "knobs": ("t", "rows", "pool_cap", "pipeline_depth", "devices",
-                  "refine_passes"),
+                  "refine_passes", "snapshot_every", "snapshot_dir",
+                  "keep_last", "resume", "fault_plan", "max_retries"),
     },
     "hype_weighted": {
         "desc": "numpy HYPE with degree-weighted balancing (HypeParams"
@@ -162,8 +167,13 @@ def balance_slack(method: str, n: int, k: int) -> int:
     return int(METHOD_INFO[method]["balance_slack"](n, k))
 
 
+# Above this vertex count "auto" validation is skipped: the O(pins)
+# invariant sweep starts to rival the cheap engines' own runtime.
+_AUTO_VALIDATE_MAX_N = 1_000_000
+
+
 def partition(hg: Hypergraph, k: int, method: str = "hype", *,
-              seed: int = 0, **kw) -> np.ndarray:
+              seed: int = 0, validate="auto", **kw) -> np.ndarray:
     """Partition ``hg`` into ``k`` parts; the single entry point.
 
     Parameters
@@ -182,6 +192,12 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
     seed : int
         Seeds every stochastic engine; equal seeds give identical
         assignments for the same method and knobs.
+    validate : "auto" | bool
+        Run ``hg.validate()`` before dispatching so CSR corruption
+        surfaces as a clear ``ValueError`` here rather than an opaque
+        kernel failure after the device image upload. ``"auto"`` (the
+        default) validates graphs below 1e6 vertices and skips larger
+        ones; pass an explicit bool to force either way.
     **kw
         Engine-specific knobs, forwarded to the engine's params
         (e.g. ``t=16`` for the batched engines, ``devices=4`` for
@@ -194,6 +210,13 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
         ``[0, k)``. Balance is engine-specific (``balance_slack``): the
         HYPE family guarantees ``max - min <= 1`` vertex counts.
     """
+    if validate == "auto":
+        validate = hg.n < _AUTO_VALIDATE_MAX_N
+    elif not isinstance(validate, bool):
+        raise ValueError(
+            f"validate must be 'auto' or a bool, got {validate!r}")
+    if validate:
+        hg.validate()
     if method == "hype":
         return hype_partition(hg, k, HypeParams(seed=seed, **kw))
     if method == "hype_batched":
@@ -230,7 +253,7 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
 
 
 def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
-                         seed: int = 0,
+                         seed: int = 0, validate="auto",
                          **kw) -> Tuple[dict, np.ndarray]:
     """Partition and measure: returns ``(report, assignment)``.
 
@@ -242,8 +265,125 @@ def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
     to placement code and the report to dashboards).
     """
     t0 = time.perf_counter()
-    assignment = partition(hg, k, method, seed=seed, **kw)
+    assignment = partition(hg, k, method, seed=seed, validate=validate, **kw)
     dt = time.perf_counter() - t0
     rep = metrics.all_metrics(hg, assignment, k)
     rep.update(method=method, k=k, runtime_s=dt)
     return rep, assignment
+
+
+# ----------------------------------------------------- degradation ladder
+
+# Each engine's structured fallback when it raises UnrecoverableFault:
+# shed one capability per rung (mesh -> single device -> host tiles ->
+# pure numpy) rather than abandoning the run. The final ``hype`` rung
+# has no device dependency at all, so the ladder always terminates.
+_LADDER = {
+    "hype_sharded": "hype_superstep",
+    "hype_superstep": "hype_batched",
+    "hype_batched": "hype",
+}
+
+
+def _run_rung(hg: Hypergraph, k: int, method: str, seed: int,
+              resume, snapshot_dir, snapshot_every: int, keep_last: int,
+              plan, kw: dict):
+    """One ladder rung: run ``method`` and return ``(assignment, stats)``.
+
+    ``kw`` is filtered down to the rung's registered knobs so that, say,
+    ``devices=4`` survives the hop from ``hype_sharded`` to
+    ``hype_superstep`` without a TypeError.
+    """
+    knobs = set(METHOD_INFO[method].get("knobs", ()))
+    sub = {key: val for key, val in kw.items() if key in knobs}
+    if method == "hype":
+        warm = None
+        if resume:
+            ckpt = resilience.load_latest(resume)
+            if ckpt is not None:
+                resilience.check_checkpoint(ckpt, hg, k)
+                warm = resilience.warm_assignment(ckpt)
+        return hype_partition(hg, k, HypeParams(seed=seed, **sub),
+                              return_stats=True, warm_start=warm)
+    params_cls = {"hype_batched": BatchedParams,
+                  "hype_superstep": SuperstepParams,
+                  "hype_sharded": ShardedParams}[method]
+    runner = {"hype_batched": hype_batched_partition,
+              "hype_superstep": hype_superstep_partition,
+              "hype_sharded": hype_sharded_partition}[method]
+    sub.update(snapshot_every=snapshot_every, snapshot_dir=snapshot_dir,
+               keep_last=keep_last, resume=resume, fault_plan=plan)
+    return runner(hg, k, params_cls(seed=seed, **sub), return_stats=True)
+
+
+def partition_resilient(hg: Hypergraph, k: int,
+                        method: str = "hype_sharded", *,
+                        seed: int = 0,
+                        snapshot_dir: Optional[str] = None,
+                        snapshot_every: int = 0,
+                        keep_last: int = 3,
+                        resume: Optional[str] = None,
+                        fault_plan=None,
+                        validate="auto",
+                        **kw) -> Tuple[np.ndarray, dict]:
+    """Partition with retries, snapshots and the degradation ladder.
+
+    Runs ``method``; if the engine raises
+    :class:`~repro.core.resilience.UnrecoverableFault` (fatal injected
+    fault, exhausted retry budget, failed device image upload, device
+    failure after buffer donation), falls back one rung at a time —
+    ``hype_sharded -> hype_superstep -> hype_batched -> hype`` — resuming
+    each fallback from the last snapshot in ``snapshot_dir`` (cross-engine
+    restores warm-start from the snapshotted assignment; the pure-numpy
+    ``hype`` rung adopts it via ``warm_start=``). Transient faults are
+    retried *inside* each engine (``max_retries``/``retry_backoff_s``
+    knobs) and never reach the ladder.
+
+    ``snapshot_every > 0`` requires ``snapshot_dir``. ``fault_plan``
+    (a ``FaultPlan``, a spec string, or None for ``REPRO_FAULT_PLAN``)
+    is resolved once and shared across rungs so a consumed fault does
+    not re-fire after a fallback. Engine knobs in ``**kw`` are filtered
+    per rung, so e.g. ``devices=4`` is dropped when the ladder leaves
+    ``hype_sharded``.
+
+    Returns ``(assignment, report)`` where ``report`` carries the
+    quality metrics plus ``method`` (the rung that finished),
+    ``requested_method``, ``degraded_from`` (one ``{"method", "error"}``
+    record per abandoned rung), ``fallbacks`` and the finishing engine's
+    ``stats`` dataclass.
+    """
+    if method not in ("hype", *_LADDER):
+        raise ValueError(
+            f"unknown resilient method {method!r}; choose from "
+            f"{('hype', *_LADDER)}")
+    if validate == "auto":
+        validate = hg.n < _AUTO_VALIDATE_MAX_N
+    if validate:
+        hg.validate()
+    plan = resilience.resolve_fault_plan(fault_plan)
+    t0 = time.perf_counter()
+    attempted = []
+    cur = method
+    while True:
+        try:
+            assignment, stats = _run_rung(
+                hg, k, cur, seed, resume, snapshot_dir, snapshot_every,
+                keep_last, plan, kw)
+            break
+        except UnrecoverableFault as e:
+            nxt = _LADDER.get(cur)
+            if nxt is None:
+                raise
+            attempted.append({"method": cur, "error": str(e)})
+            cur = nxt
+            # Fallback rungs resume from whatever the failed rung last
+            # published; with no snapshot_dir they cold-start instead.
+            resume = snapshot_dir
+    dt = time.perf_counter() - t0
+    if hasattr(stats, "fallbacks"):
+        stats.fallbacks = len(attempted)
+    rep = metrics.all_metrics(hg, assignment, k)
+    rep.update(method=cur, requested_method=method, k=k, runtime_s=dt,
+               degraded_from=attempted, fallbacks=len(attempted),
+               stats=stats)
+    return assignment, rep

@@ -347,6 +347,26 @@ def _stale_masked_prev(pool, assign, cache):
     return prev, n_stale
 
 
+def _poison_guard(flat, scores_flat, poison, reset):
+    """Traced NaN/inf quarantine shared by both superstep programs.
+
+    A superstep whose fresh scores contain a non-finite value (a
+    poisoned tile — injected by a ``FaultPlan`` or a real device fault)
+    must not be admitted: the program reverts ALL its mutations and
+    raises the sticky ``poison`` flag so any in-flight superstep
+    dispatched after it self-aborts too, preserving device-effect order
+    for the host's in-order replay (DESIGN.md §4f). ``reset`` is the
+    host's replay marker: a replay ignores the sticky flag (the host
+    replays the whole aborted window in order) but still re-checks its
+    own fresh scores. Pad rows (``flat < 0``) legitimately carry +inf
+    bias and are excluded. Returns the replicated ``poisoned`` bool.
+    """
+    import jax.numpy as jnp
+
+    bad = ((flat >= 0) & ~jnp.isfinite(scores_flat)).any()
+    return bad | ((poison[0] > 0) & (reset[0] == 0))
+
+
 @_functools.lru_cache(maxsize=None)
 def _pipeline_program():
     import jax
@@ -354,14 +374,19 @@ def _pipeline_program():
     from repro.kernels.hype_score.kernel import SELECT_PAD
     from repro.kernels.hype_score.ops import hype_score_select
 
+    # poison is NOT donated: at pipeline depth > 1 each in-flight handle
+    # keeps a reference to its own poison output, which the next
+    # dispatch would otherwise consume before harvest can read it —
+    # and it is 4 bytes, so donation buys nothing.
     @_functools.partial(
         jax.jit, static_argnames=("tile_l", "select_k", "interpret"),
         donate_argnums=(2, 3, 4))
-    def step(indptr, indices, assign, cache, acc, delta_ids, delta_vals,
-             dirty_ids, dirty_counts, fresh, bias, pool, fringe, targets,
-             *, tile_l, select_k, interpret):
+    def step(indptr, indices, assign, cache, acc, poison, delta_ids,
+             delta_vals, dirty_ids, dirty_counts, fresh, bias, pool,
+             fringe, targets, reset, *, tile_l, select_k, interpret):
         n = assign.shape[0]
         G, R = fresh.shape
+        assign0, cache0, acc0 = assign, cache, acc
         # 1.-2. host injections (seeds / restarts — decrement-exact: the
         #    dirty pairs carry their pre-aggregated neighbor multiset
         #    plus earlier winners' queued decrements); the host only
@@ -405,34 +430,51 @@ def _pipeline_program():
         assign = assign.at[jnp.where(adm, cand, n)].set(
             phase_row, mode="drop")
         acc = acc + adm.sum(axis=1, dtype=acc.dtype)
-        return assign, cache, acc, winners, n_stale
+        # 9. NaN/inf quarantine: a poisoned superstep reverts every
+        #    mutation and admits nothing; the host replays it from the
+        #    handle's buffers (reset=1). A no-op select when clean, so
+        #    fault-free runs stay bit-identical.
+        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
+        assign = jnp.where(poisoned, assign0, assign)
+        cache = jnp.where(poisoned, cache0, cache)
+        acc = jnp.where(poisoned, acc0, acc)
+        winners = jnp.where(poisoned, -1, winners)
+        n_stale = jnp.where(poisoned, 0, n_stale)
+        poison = poisoned.astype(jnp.int32)[None]
+        return assign, cache, acc, poison, winners, n_stale
 
     return step
 
 
 def pipeline_superstep_device(indptr, indices, assign, cache, acc,
-                              delta_ids, delta_vals, dirty_ids,
+                              poison, delta_ids, delta_vals, dirty_ids,
                               dirty_counts, fresh, bias, pool, fringe,
-                              targets, *, tile_l: int, select_k: int,
-                              interpret: bool):
+                              targets, reset, *, tile_l: int,
+                              select_k: int, interpret: bool):
     """Run one device superstep; see ``_pipeline_program`` for the plan.
 
     All array arguments are device-resident jax arrays except the small
     per-superstep id buffers (delta, dirty, fresh, bias, pool, fringe,
-    targets), which are the only host->device traffic. ``assign``,
-    ``cache`` and ``acc`` are DONATED — callers must keep the returned
-    arrays and never touch the inputs again. ``tile_l`` is a static
-    gather width (bucketed by the caller so the program retraces only a
-    handful of times); ``select_k`` is the per-phase admission count.
-    Returns ``(assign', cache', acc', winners, n_stale)`` where
-    ``winners`` is (G, select_k) int32 admitted ids (-1 = none) and
+    targets, reset), which are the only host->device traffic.
+    ``assign``, ``cache``, ``acc`` and ``poison`` are DONATED — callers
+    must keep the returned arrays and never touch the inputs again.
+    ``poison`` is the sticky (1,) int32 quarantine flag threaded
+    through the run (see ``_poison_guard``); ``reset`` is the (1,)
+    int32 replay marker. ``tile_l`` is a static gather width (bucketed
+    by the caller so the program retraces only a handful of times);
+    ``select_k`` is the per-phase admission count.
+    Returns ``(assign', cache', acc', poison', winners, n_stale)``
+    where ``winners`` is (G, select_k) int32 admitted ids (-1 = none),
     ``n_stale`` counts pool slots skipped because an interleaved
-    superstep of the pipeline had already assigned them.
+    superstep of the pipeline had already assigned them, and
+    ``poison'[0] > 0`` means the superstep aborted (nothing applied)
+    and must be replayed by the host.
     """
     return _pipeline_program()(
-        indptr, indices, assign, cache, acc, delta_ids, delta_vals,
-        dirty_ids, dirty_counts, fresh, bias, pool, fringe, targets,
-        tile_l=tile_l, select_k=select_k, interpret=interpret)
+        indptr, indices, assign, cache, acc, poison, delta_ids,
+        delta_vals, dirty_ids, dirty_counts, fresh, bias, pool, fringe,
+        targets, reset, tile_l=tile_l, select_k=select_k,
+        interpret=interpret)
 
 
 # ---------------------------------------------------------- sharded superstep
@@ -469,12 +511,13 @@ def _sharded_program(num_devices: int, group_l: int, tile_l: int,
 
     kL = group_l
 
-    def step(indptr, indices, assign, cache, acc, delta_ids, delta_vals,
-             dirty_ids, dirty_counts, fresh, bias, pool, fringe,
-             targets):
+    def step(indptr, indices, assign, cache, acc, poison, delta_ids,
+             delta_vals, dirty_ids, dirty_counts, fresh, bias, pool,
+             fringe, targets, reset):
         n = assign.shape[0]
         G, R = fresh.shape
         t = select_k
+        assign0, cache0, acc0 = assign, cache, acc
         # 1. host injections + dirty decrements — replicated inputs,
         #    applied identically on every replica (shared helper keeps
         #    this program bit-aligned with the single-device one)
@@ -560,21 +603,37 @@ def _sharded_program(num_devices: int, group_l: int, tile_l: int,
         cache = cache.at[jnp.where(wvalid, wnbr, n)].add(
             -1.0, mode="drop")
         winners = jnp.where(winner, ids_f, -1).reshape(G, t)
-        return assign, cache, acc, winners, n_conflicts, n_stale
+        # 12. NaN/inf quarantine on the *gathered* scores — replicated
+        #     input to the guard, so every replica takes the same revert
+        #     branch and the replicas stay bit-identical. No-op when
+        #     clean (fault-free runs unchanged).
+        poisoned = _poison_guard(flat_g, g_scores.reshape(-1), poison,
+                                 reset)
+        assign = jnp.where(poisoned, assign0, assign)
+        cache = jnp.where(poisoned, cache0, cache)
+        acc = jnp.where(poisoned, acc0, acc)
+        winners = jnp.where(poisoned, -1, winners)
+        n_conflicts = jnp.where(poisoned, 0, n_conflicts)
+        n_stale = jnp.where(poisoned, 0, n_stale)
+        poison = poisoned.astype(jnp.int32)[None]
+        return assign, cache, acc, poison, winners, n_conflicts, n_stale
 
     mesh = _sharded_mesh(num_devices)
     rep = P()     # every array is replicated; devices differ via axis_index
+    # poison undonated for the same reason as _pipeline_program: older
+    # in-flight handles must still be able to read their poison output.
     return jax.jit(shard_map(
         step, mesh=mesh,
-        in_specs=(rep,) * 14, out_specs=(rep,) * 6,
+        in_specs=(rep,) * 16, out_specs=(rep,) * 7,
         check_rep=False), donate_argnums=(2, 3, 4))
 
 
 def sharded_superstep_device(indptr, indices, assign, cache, acc,
-                             delta_ids, delta_vals, dirty_ids,
+                             poison, delta_ids, delta_vals, dirty_ids,
                              dirty_counts, fresh, bias, pool, fringe,
-                             targets, *, num_devices: int, group_l: int,
-                             tile_l: int, select_k: int, interpret: bool):
+                             targets, reset, *, num_devices: int,
+                             group_l: int, tile_l: int, select_k: int,
+                             interpret: bool):
     """Run one mesh-sharded superstep; see ``_sharded_program``.
 
     ``fresh``/``bias``/``pool``/``fringe``/``targets`` stack all
@@ -583,16 +642,21 @@ def sharded_superstep_device(indptr, indices, assign, cache, acc,
     per call exchanges (fresh scores | proposed admissions), after which
     every replica applies identical cache writes, lowest-phase-wins
     conflict resolution and exact decrements. ``assign``/``cache``/
-    ``acc`` are DONATED — keep the returned arrays, never reuse the
-    inputs. Admission caps are each phase's remaining target computed
-    against the device-resident ``acc`` totals, so they stay exact at
-    any pipeline depth. Returns ``(assign', cache', acc', winners
-    (G, select_k) int32 ids (-1 = none), n_conflicts, n_stale)``.
+    ``acc``/``poison`` are DONATED — keep the returned arrays, never
+    reuse the inputs. ``poison``/``reset`` are the (1,) int32 NaN
+    quarantine flag and replay marker (see ``_poison_guard``); a
+    poisoned superstep reverts every mutation on every replica and must
+    be replayed by the host. Admission caps are each phase's remaining
+    target computed against the device-resident ``acc`` totals, so they
+    stay exact at any pipeline depth. Returns ``(assign', cache',
+    acc', poison', winners (G, select_k) int32 ids (-1 = none),
+    n_conflicts, n_stale)``.
     """
     return _sharded_program(num_devices, group_l, tile_l, select_k,
                             interpret)(
-        indptr, indices, assign, cache, acc, delta_ids, delta_vals,
-        dirty_ids, dirty_counts, fresh, bias, pool, fringe, targets)
+        indptr, indices, assign, cache, acc, poison, delta_ids,
+        delta_vals, dirty_ids, dirty_counts, fresh, bias, pool, fringe,
+        targets, reset)
 
 
 # ------------------------------------------------------------ k-way refine

@@ -21,7 +21,10 @@ def pallas_interpret() -> bool:
     a kernel on TPU), ``0/false/no/off`` forces the compiled path (e.g.
     to exercise GPU/compiled-CPU lowering in CI) — so benchmarks and CI
     can pin the mode without touching call sites. Read per call, not
-    cached: tests flip the env var at runtime.
+    cached: tests flip the env var at runtime. Callers must do the
+    same — re-evaluate at every kernel invocation rather than stashing
+    the value in long-lived engine state (the superstep engines expose
+    it as a property for exactly this reason).
     """
     env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
     if env in _TRUTHY:

@@ -67,6 +67,7 @@ def run_training(train_step: Callable, state: tuple, batches: Iterator,
         step = start
     else:
         step = 0
+    base = step  # history[i] is the metrics of step base + i
 
     while step < n_steps:
         batch = batch_at(step) if batch_at is not None else next(batches)
@@ -93,6 +94,11 @@ def run_training(train_step: Callable, state: tuple, batches: Iterator,
                     state = restore_checkpoint(ft.ckpt_dir, restore, state)
                     state = jax.tree.map(jax.numpy.asarray, state)
                     step = restore
+                    # Rewind the metrics log with the step counter —
+                    # the replayed steps re-append their metrics, so
+                    # keeping the pre-failure entries would double-count
+                    # every step between the checkpoint and the fault.
+                    del history[max(0, step - base):]
                     batch = batch_at(step) if batch_at is not None \
                         else next(batches)
         history.append(jax.tree.map(

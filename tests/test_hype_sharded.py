@@ -134,12 +134,15 @@ def test_conflict_lowest_phase_wins_program():
     cache = jnp.full((n,), -1.0, jnp.float32)
     acc = jnp.zeros((kG,), jnp.int32)
     empty_i = np.full(4, -1, np.int32)
-    a2, c2, acc2, winners, ncf, n_stale = scoring.sharded_superstep_device(
-        dev[0], dev[1], assign, cache, acc, empty_i,
+    poison = jnp.zeros((1,), jnp.int32)
+    (a2, c2, acc2, poison2, winners, ncf,
+     n_stale) = scoring.sharded_superstep_device(
+        dev[0], dev[1], assign, cache, acc, poison, empty_i,
         np.zeros(4, np.int32), empty_i, np.zeros(4, np.float32),
-        fresh, bias, pool, fringe, targets,
+        fresh, bias, pool, fringe, targets, np.zeros(1, np.int32),
         num_devices=D, group_l=kL, tile_l=32, select_k=t,
         interpret=True)
+    assert int(np.asarray(poison2)[0]) == 0          # finite scores
     winners = np.asarray(winners)
     assert winners[0, 0] == v                        # lowest phase won
     assert v not in winners[1]                       # loser redraws later

@@ -88,6 +88,13 @@ def test_registered_knobs_match_engine_signatures():
     for method in ("hype_batched", "hype_superstep", "hype_sharded",
                    "hype_multilevel"):
         assert "refine_passes" in method_knobs(method), method
+    # the resilience knobs (DESIGN.md §4f) are registered on every
+    # engine of the batched family — snapshotting, resume and fault
+    # injection are part of the public surface, not internals
+    for method in ("hype_batched", "hype_superstep", "hype_sharded"):
+        for knob in ("snapshot_every", "snapshot_dir", "resume",
+                     "fault_plan", "max_retries", "keep_last"):
+            assert knob in method_knobs(method), (method, knob)
 
 
 def test_registered_knobs_are_forwarded(hg):

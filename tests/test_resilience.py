@@ -1,0 +1,505 @@
+"""Resilience subsystem (DESIGN.md §4f): fault-plan parsing, the
+checkpoint store, superstep/phase-granular snapshot + bit-identical
+resume on every engine of the batched family, fault-injection recovery
+equality, exception-safe teardown, entry validation, and the
+graceful-degradation engine ladder."""
+import dataclasses
+import hashlib
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import partition_api, resilience
+from repro.core.hype import HypeParams, hype_partition
+from repro.core.hype_batched import (BatchedParams, ShardedParams,
+                                     SuperstepParams, _SuperstepState,
+                                     hype_batched_partition,
+                                     hype_sharded_partition,
+                                     hype_superstep_partition)
+from repro.core.hypergraph import Hypergraph
+from repro.core import metrics
+from repro.data.synthetic import powerlaw_hypergraph
+
+# Golden depth-1 digest shared with test_pipeline.py: the abort test
+# reruns the engine after a simulated crash and must land exactly here.
+_GOLD_PL600_16_8 = "bbcd2f732e03af91"
+
+
+def _digest(a: np.ndarray) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(a, dtype=np.int32).tobytes()).hexdigest()[:16]
+
+
+def _devices() -> int:
+    import jax
+    return len(jax.devices())
+
+
+needs_multi = pytest.mark.skipif(
+    "_devices() < 2",
+    reason="needs >= 2 devices (XLA_FLAGS set by tests/conftest.py)")
+
+
+@pytest.fixture(autouse=True)
+def _hang_guard():
+    """Per-test wall-clock guard: a wedged replay/teardown path must
+    fail the test, not hang the suite (no pytest-timeout in the image,
+    so SIGALRM does the job; main-thread CPython only, which is where
+    pytest runs these)."""
+    def _alarm(signum, frame):
+        raise TimeoutError("test exceeded the 180 s resilience guard")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(180)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(600, 400, seed=11, max_edge=30,
+                               max_degree=20)
+
+
+# ----------------------------------------------------- fault-plan layer
+
+def test_fault_plan_parse():
+    plan = resilience.FaultPlan.parse("dispatch@2;nan@4,collective@3")
+    assert [(s.kind, s.superstep, s.fatal) for s in plan.specs] == [
+        ("dispatch", 2, False), ("nan", 4, False), ("collective", 3, False)]
+    plan = resilience.FaultPlan.parse("dispatch@9:fatal; oom")
+    assert plan.specs[0].fatal and plan.specs[0].superstep == 9
+    assert plan.specs[1].kind == "oom"
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        resilience.FaultPlan.parse("frobnicate@1")
+    with pytest.raises(ValueError, match="bad fault superstep"):
+        resilience.FaultPlan.parse("nan@soon")
+
+
+def test_fault_plan_fire_is_one_shot():
+    plan = resilience.FaultPlan.parse("dispatch@2;oom")
+    assert plan.fire(("nan",), 2) is None           # wrong kind
+    assert plan.fire(("dispatch",), 1) is None      # wrong superstep
+    sp = plan.fire(("dispatch",), 2)
+    assert sp is not None and sp.kind == "dispatch"
+    assert plan.fire(("dispatch",), 2) is None      # consumed
+    assert plan.fire(("oom",), 99).kind == "oom"    # oom: any superstep
+    assert plan.fired and not plan.specs
+
+
+def test_fault_plan_env_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    assert resilience.resolve_fault_plan(None) is None
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "nan@1;dispatch@2")
+    plan = resilience.resolve_fault_plan(None)
+    assert [s.kind for s in plan.specs] == ["nan", "dispatch"]
+    # each resolution is a FRESH plan: engine runs do not share firing
+    # state through the env var
+    assert resilience.resolve_fault_plan(None) is not plan
+    shared = resilience.FaultPlan.parse("oom")
+    assert resilience.resolve_fault_plan(shared) is shared
+
+
+# ----------------------------------------------------- checkpoint store
+
+def _mk_ckpt(step, fp="f" * 16):
+    return resilience.PartitionCheckpoint(
+        engine="hype_superstep", superstep=step, fingerprint=fp,
+        config={"k": 4}, payload={"assignment": np.arange(6, dtype=np.int32)})
+
+
+def test_snapshot_roundtrip_and_latest(tmp_path):
+    d = str(tmp_path)
+    assert resilience.latest_snapshot(d) is None
+    assert resilience.load_latest(d) is None
+    p2 = resilience.save_snapshot(d, _mk_ckpt(2))
+    resilience.save_snapshot(d, _mk_ckpt(5))
+    ck = resilience.load_latest(d)
+    assert ck.superstep == 5 and ck.engine == "hype_superstep"
+    np.testing.assert_array_equal(resilience.warm_assignment(ck),
+                                  np.arange(6))
+    assert resilience.load_snapshot(p2).superstep == 2
+    with open(os.path.join(d, "LATEST")) as f:
+        assert f.read().strip() == "snap_00000005.ckpt"
+
+
+def test_snapshot_gc_keeps_last(tmp_path):
+    d = str(tmp_path)
+    for step in range(1, 7):
+        resilience.save_snapshot(d, _mk_ckpt(step), keep_last=3)
+    snaps = sorted(f for f in os.listdir(d) if f.endswith(".ckpt"))
+    assert snaps == ["snap_00000004.ckpt", "snap_00000005.ckpt",
+                     "snap_00000006.ckpt"]
+    assert resilience.load_latest(d).superstep == 6
+
+
+def test_checkpoint_fingerprint_guard(hg):
+    ck = _mk_ckpt(3, fp="0" * 16)
+    with pytest.raises(ValueError, match="fingerprint"):
+        resilience.check_checkpoint(ck, hg, 4)
+    ck2 = _mk_ckpt(3, fp=hg.fingerprint())
+    resilience.check_checkpoint(ck2, hg, 4)          # matching: fine
+    with pytest.raises(ValueError, match="k="):
+        resilience.check_checkpoint(ck2, hg, 8)
+
+
+def test_resume_against_wrong_graph_raises(hg, tmp_path):
+    other = powerlaw_hypergraph(100, 80, seed=1, max_edge=6, max_degree=5)
+    d = str(tmp_path)
+    hype_superstep_partition(other, 4, SuperstepParams(
+        seed=0, snapshot_every=1, snapshot_dir=d))
+    with pytest.raises(ValueError, match="fingerprint"):
+        hype_superstep_partition(hg, 4, SuperstepParams(seed=0, resume=d))
+
+
+def test_snapshot_requires_dir():
+    hg = Hypergraph.from_edge_lists(6, [[0, 1], [1, 2, 3]])
+    for params in (SuperstepParams(snapshot_every=2),
+                   ShardedParams(snapshot_every=2),
+                   BatchedParams(snapshot_every=2)):
+        with pytest.raises(ValueError, match="snapshot_dir"):
+            if isinstance(params, ShardedParams):
+                hype_sharded_partition(hg, 2, params)
+            elif isinstance(params, SuperstepParams):
+                hype_superstep_partition(hg, 2, params)
+            else:
+                hype_batched_partition(hg, 2, params)
+
+
+# -------------------------------------- bit-identical snapshot + resume
+
+def _kill_and_resume(run, d):
+    """Kill a snapshotting run with a fatal fault, then resume it."""
+    with pytest.raises(resilience.UnrecoverableFault):
+        run(fault_plan="dispatch@5:fatal", snapshot_dir=d, resume=None)
+    assert any(f.endswith(".ckpt") for f in os.listdir(d))
+    return run(fault_plan=None, snapshot_dir=d, resume=d)
+
+
+def test_resume_bit_identical_superstep_pd1(hg, tmp_path):
+    def run(fault_plan, snapshot_dir, resume):
+        return hype_superstep_partition(hg, 16, SuperstepParams(
+            seed=0, pool_cap=8, pipeline_depth=1, snapshot_every=2,
+            snapshot_dir=snapshot_dir, resume=resume,
+            fault_plan=fault_plan), return_stats=True)
+
+    base, _ = run(None, str(tmp_path / "base"), None)
+    a, st = _kill_and_resume(run, str(tmp_path / "killed"))
+    assert _digest(a) == _digest(base)
+    assert st.resumed_at >= 2 and st.restore_s >= 0.0
+    assert st.snapshots > 0 and st.snapshot_s >= 0.0
+
+
+def test_resume_bit_identical_superstep_pd2(hg, tmp_path):
+    """Depth-2 pipeline: the snapshot drain is part of the schedule, so
+    interrupted + resumed must equal the uninterrupted same-cadence
+    run (NOT the cadence-free one)."""
+    def run(fault_plan, snapshot_dir, resume):
+        return hype_superstep_partition(hg, 16, SuperstepParams(
+            seed=0, pool_cap=8, pipeline_depth=2, snapshot_every=3,
+            snapshot_dir=snapshot_dir, resume=resume,
+            fault_plan=fault_plan), return_stats=True)
+
+    base, _ = run(None, str(tmp_path / "base"), None)
+    a, st = _kill_and_resume(run, str(tmp_path / "killed"))
+    assert _digest(a) == _digest(base)
+    assert st.resumed_at >= 3
+
+
+@needs_multi
+def test_resume_bit_identical_sharded(hg, tmp_path):
+    def run(fault_plan, snapshot_dir, resume):
+        return hype_sharded_partition(hg, 16, ShardedParams(
+            seed=0, pool_cap=8, devices=4, snapshot_every=2,
+            snapshot_dir=snapshot_dir, resume=resume,
+            fault_plan=fault_plan), return_stats=True)
+
+    base, _ = run(None, str(tmp_path / "base"), None)
+    a, st = _kill_and_resume(run, str(tmp_path / "killed"))
+    assert _digest(a) == _digest(base)
+    assert st.resumed_at >= 2
+
+
+def test_resume_bit_identical_batched(hg, tmp_path):
+    """Batched snapshots are phase-granular; kill mid-run at a kernel
+    ordinal and resume from the last completed phase."""
+    def run(fault_plan, snapshot_dir, resume):
+        return hype_batched_partition(hg, 16, BatchedParams(
+            seed=0, snapshot_every=3, snapshot_dir=snapshot_dir,
+            resume=resume, fault_plan=fault_plan), return_stats=True)
+
+    base, _ = run(None, str(tmp_path / "base"), None)
+    with pytest.raises(resilience.UnrecoverableFault):
+        run("dispatch@9:fatal", str(tmp_path / "killed"), None)
+    a, st = run(None, str(tmp_path / "killed"), str(tmp_path / "killed"))
+    assert _digest(a) == _digest(base)
+    assert st.resumed_at >= 3
+
+    # snapshot cadence does not perturb the batched schedule at all
+    plain = hype_batched_partition(hg, 16, BatchedParams(seed=0))
+    assert _digest(base) == _digest(plain)
+
+
+# ------------------------------------------- fault recovery == fault-free
+
+def test_superstep_transient_faults_are_exact(hg):
+    # empty plan (NOT None): the baseline must stay fault-free even
+    # when the chaos CI env sets REPRO_FAULT_PLAN
+    base, s0 = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, pool_cap=8,
+                                fault_plan=resilience.FaultPlan()),
+        return_stats=True)
+    for plan in ("dispatch@2", "nan@3", "dispatch@1;nan@4"):
+        a, st = hype_superstep_partition(hg, 16, SuperstepParams(
+            seed=0, pool_cap=8, fault_plan=plan), return_stats=True)
+        assert _digest(a) == _digest(base), plan
+        n = len(plan.split(";"))
+        assert st.faults_injected == n, plan
+        assert st.retries == n, plan
+        # recovery never inflates the work counters
+        assert st.kernel_calls == s0.kernel_calls
+        assert st.supersteps == s0.supersteps
+    assert s0.faults_injected == 0 and s0.retries == 0
+
+
+def test_superstep_pd2_nan_window_replay(hg):
+    """At depth 2 a poisoned superstep drags its in-flight successor
+    into the replay window; the recovered run is still bit-exact."""
+    base = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, pool_cap=8, pipeline_depth=2))
+    a, st = hype_superstep_partition(hg, 16, SuperstepParams(
+        seed=0, pool_cap=8, pipeline_depth=2, fault_plan="nan@3"),
+        return_stats=True)
+    assert _digest(a) == _digest(base)
+    assert st.faults_injected == 1 and st.retries >= 1
+
+
+def test_batched_nan_quarantine_is_exact(hg):
+    """A NaN-poisoned kernel tile is quarantined and re-scored on the
+    host with the kernel's exact clipped-tile arithmetic: the final
+    assignment cannot drift."""
+    base, s0 = hype_batched_partition(
+        hg, 16, BatchedParams(seed=0, fault_plan=resilience.FaultPlan()),
+        return_stats=True)
+    a, st = hype_batched_partition(hg, 16, BatchedParams(
+        seed=0, fault_plan="nan@2"), return_stats=True)
+    assert _digest(a) == _digest(base)
+    assert st.faults_injected == 1
+    assert st.host_rows > s0.host_rows          # quarantined rows
+    assert st.kernel_calls == s0.kernel_calls
+
+
+def test_batched_transient_dispatch_retry(hg):
+    base, _ = hype_batched_partition(
+        hg, 16, BatchedParams(seed=0), return_stats=True)
+    a, st = hype_batched_partition(hg, 16, BatchedParams(
+        seed=0, fault_plan="dispatch@2"), return_stats=True)
+    assert _digest(a) == _digest(base)
+    assert st.faults_injected == 1 and st.retries == 1
+
+
+@needs_multi
+def test_sharded_collective_fault_is_exact(hg):
+    base = hype_sharded_partition(
+        hg, 16, ShardedParams(seed=0, pool_cap=8, devices=4))
+    a, st = hype_sharded_partition(hg, 16, ShardedParams(
+        seed=0, pool_cap=8, devices=4,
+        fault_plan="collective@2;nan@3"), return_stats=True)
+    assert _digest(a) == _digest(base)
+    assert st.faults_injected == 2 and st.retries == 2
+
+
+def test_retry_budget_exhaustion_is_unrecoverable(hg):
+    # same transient fault injected at every early superstep with a
+    # zero retry budget: the engine must escalate, not loop
+    a_plan = resilience.FaultPlan(
+        [resilience.FaultSpec("dispatch", 2, fatal=True)])
+    with pytest.raises(resilience.UnrecoverableFault):
+        hype_superstep_partition(hg, 16, SuperstepParams(
+            seed=0, pool_cap=8, fault_plan=a_plan))
+    assert a_plan.fired and not a_plan.specs
+
+
+def test_oom_at_upload_is_unrecoverable(hg):
+    with pytest.raises(resilience.UnrecoverableFault, match="OOM"):
+        hype_superstep_partition(hg, 16, SuperstepParams(
+            seed=0, fault_plan="oom"))
+
+
+# ------------------------------------------------- chaos (env-driven)
+
+def test_chaos_env_plan_km1_equal(hg, monkeypatch):
+    """The chaos CI contract: with REPRO_FAULT_PLAN injecting a
+    dispatch fault and a NaN tile, every engine must finish with an
+    assignment *equal* to the fault-free one (replay-exact recovery,
+    not merely graceful)."""
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    base = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, pool_cap=8))
+    monkeypatch.setenv("REPRO_FAULT_PLAN", "dispatch@2;nan@4")
+    a, st = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, pool_cap=8), return_stats=True)
+    assert _digest(a) == _digest(base)
+    assert st.faults_injected == 2
+    assert metrics.k_minus_1(hg, a) == metrics.k_minus_1(hg, base)
+
+
+# ------------------------------------------------- exception-safe abort
+
+def test_abort_mid_pipeline_engine_reusable(hg, monkeypatch):
+    """A KeyboardInterrupt mid-run (user ^C between harvests) must tear
+    down the in-flight donated-buffer chains; the process stays healthy
+    and a fresh run still reproduces the golden digest."""
+    calls = {"n": 0}
+    real = _SuperstepState.harvest
+
+    def exploding(self, handle, acc, targets, exclude=()):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise KeyboardInterrupt
+        return real(self, handle, acc, targets, exclude)
+
+    monkeypatch.setattr(_SuperstepState, "harvest", exploding)
+    with pytest.raises(KeyboardInterrupt):
+        hype_superstep_partition(
+            hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=2))
+    monkeypatch.setattr(_SuperstepState, "harvest", real)
+    a = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=1))
+    assert _digest(a) == _GOLD_PL600_16_8
+
+
+def test_abort_via_injected_exception_leaves_no_debris(hg, monkeypatch):
+    """Same teardown path driven by an arbitrary error inside harvest:
+    the raised exception propagates unchanged (not masked by a
+    teardown failure) and a rerun is exact."""
+    real = _SuperstepState.harvest
+
+    class Boom(RuntimeError):
+        pass
+
+    def exploding(self, handle, acc, targets, exclude=()):
+        raise Boom("host-side failure mid-harvest")
+
+    monkeypatch.setattr(_SuperstepState, "harvest", exploding)
+    with pytest.raises(Boom):
+        hype_superstep_partition(
+            hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=2))
+    monkeypatch.setattr(_SuperstepState, "harvest", real)
+    a = hype_superstep_partition(
+        hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=1))
+    assert _digest(a) == _GOLD_PL600_16_8
+
+
+# ------------------------------------------------------ interpret knob
+
+def test_superstep_interpret_not_cached(hg, monkeypatch):
+    """Engine state must re-read pallas_interpret() per call — a cached
+    value would pin the whole run to the mode active at __init__."""
+    st = _SuperstepState(hg, 4, SuperstepParams(seed=0))
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert st.interpret is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert st.interpret is False
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+
+
+# ------------------------------------------------------ entry validation
+
+def _corrupt(hg):
+    bad = Hypergraph(n=hg.n, m=hg.m,
+                     v2e_indptr=hg.v2e_indptr.copy(),
+                     v2e_indices=hg.v2e_indices.copy(),
+                     e2v_indptr=hg.e2v_indptr.copy(),
+                     e2v_indices=hg.e2v_indices.copy())
+    bad.e2v_indices[0] = hg.n + 7          # out-of-range vertex id
+    return bad
+
+
+def test_partition_validates_by_default(hg):
+    with pytest.raises(ValueError):
+        partition_api.partition(_corrupt(hg), 4, "random", seed=0)
+
+
+def test_partition_validate_opt_out(hg):
+    # validate=False skips the sweep entirely: the corrupt graph reaches
+    # the (structure-insensitive) random engine and completes
+    a = partition_api.partition(_corrupt(hg), 4, "random", seed=0,
+                                validate=False)
+    assert a.shape == (hg.n,)
+    with pytest.raises(ValueError, match="validate"):
+        partition_api.partition(hg, 4, "random", validate="sometimes")
+
+
+# ------------------------------------------------- degradation ladder
+
+def test_ladder_oom_degrades_one_rung(hg, tmp_path):
+    a, rep = partition_api.partition_resilient(
+        hg, 16, "hype_sharded", seed=0, pool_cap=8,
+        snapshot_dir=str(tmp_path), snapshot_every=2,
+        fault_plan="oom:fatal")
+    assert rep["method"] == "hype_superstep"
+    assert rep["requested_method"] == "hype_sharded"
+    assert rep["fallbacks"] == 1 == rep["stats"].fallbacks
+    assert rep["degraded_from"][0]["method"] == "hype_sharded"
+    assert "OOM" in rep["degraded_from"][0]["error"]
+    assert (a >= 0).all()
+
+
+def test_ladder_resumes_fallback_from_snapshot(hg, tmp_path):
+    a, rep = partition_api.partition_resilient(
+        hg, 16, "hype_sharded", seed=0, pool_cap=8,
+        snapshot_dir=str(tmp_path), snapshot_every=2,
+        fault_plan="dispatch@5:fatal")
+    assert rep["method"] == "hype_superstep"
+    # the sharded rung published snapshots before dying; the fallback
+    # rung warm-started from the last one instead of from scratch
+    assert rep["stats"].resumed_at >= 2
+    assert rep["fallbacks"] == 1
+    sizes = np.bincount(a, minlength=16)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_ladder_reaches_numpy_rung(hg, tmp_path):
+    plan = resilience.FaultPlan.parse("oom:fatal;oom:fatal;"
+                                      "dispatch@3:fatal")
+    a, rep = partition_api.partition_resilient(
+        hg, 16, "hype_sharded", seed=0, pool_cap=8, kernel_min=1,
+        snapshot_dir=str(tmp_path), snapshot_every=2, fault_plan=plan)
+    assert rep["method"] == "hype"
+    assert [r["method"] for r in rep["degraded_from"]] == [
+        "hype_sharded", "hype_superstep", "hype_batched"]
+    assert rep["fallbacks"] == 3
+    sizes = np.bincount(a, minlength=16)
+    assert sizes.max() - sizes.min() <= 1
+    assert metrics.k_minus_1(hg, a) >= 0
+
+
+def test_ladder_exhausted_reraises(hg):
+    # the numpy rung has no injection sites, so drive the ladder bottom
+    # rung directly: a fatal fault on hype_batched with no further rung
+    # must surface, not vanish
+    plan = resilience.FaultPlan.parse("dispatch@3:fatal")
+    a, rep = partition_api.partition_resilient(
+        hg, 16, "hype_batched", seed=0, kernel_min=1, fault_plan=plan)
+    assert rep["method"] == "hype" and rep["fallbacks"] == 1
+
+
+def test_hype_warm_start_contract(hg):
+    base = hype_partition(hg, 16, HypeParams(seed=0))
+    # warm-starting from a prefix of a valid assignment keeps validity
+    warm = base.copy()
+    warm[hg.n // 2:] = -1
+    a = hype_partition(hg, 16, HypeParams(seed=0), warm_start=warm)
+    sizes = np.bincount(a, minlength=16)
+    assert (a >= 0).all() and sizes.max() - sizes.min() <= 1
+    with pytest.raises(ValueError, match="shape"):
+        hype_partition(hg, 4, HypeParams(), warm_start=np.zeros(3, np.int32))
+    with pytest.raises(ValueError, match=">= k"):
+        hype_partition(hg, 4, HypeParams(),
+                       warm_start=np.full(hg.n, 9, np.int32))

@@ -78,6 +78,44 @@ def test_checkpoint_shape_mismatch_rejected():
             restore_checkpoint(d, 1, {"x": jnp.ones((3, 3))})
 
 
+def test_run_training_rewind_truncates_history():
+    """A checkpoint-restore rewind must also rewind the metrics log:
+    the replayed steps re-append their metrics, so without truncation
+    the history double-counts every step between checkpoint and fault
+    (``steps_done != len(metrics_history)``)."""
+    from repro.train.fault_tolerance import FTConfig, run_training
+
+    def train_step(params, opt, batch):
+        params = params + batch
+        return params, opt, {"loss": float(params.sum()), "step_in": 1.0}
+
+    def batch_at(step):
+        return jnp.full((2,), float(step + 1))
+
+    fails = {"armed": True}
+
+    def fail_injector(step):
+        # one injected node failure at step 7, after the step-5 ckpt
+        if step == 7 and fails["armed"]:
+            fails["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    with tempfile.TemporaryDirectory() as d:
+        ft = FTConfig(ckpt_dir=d, ckpt_every=5, max_retries_per_step=2)
+        state = (jnp.zeros(2), jnp.zeros(1))
+        res = run_training(train_step, state, iter(()), 10, ft,
+                           batch_at=batch_at, fail_injector=fail_injector)
+    assert res.failures_recovered == 1
+    assert res.steps_done == 10
+    # exactly one metrics entry per completed step — the rewound steps
+    # (5, 6) appear once, not twice
+    assert len(res.metrics_history) == 10
+    losses = [m["loss"] for m in res.metrics_history]
+    # deterministic replay: the history equals a failure-free run's
+    expect = np.cumsum(2 * np.arange(1.0, 11.0))
+    np.testing.assert_allclose(losses, expect)
+
+
 def test_compression_error_feedback_reduces_bias():
     rng = np.random.default_rng(0)
     g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
