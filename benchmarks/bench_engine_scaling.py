@@ -326,6 +326,64 @@ def run():
     }
     meta["resilience"] = res_meta
 
+    # memory axis (DESIGN.md §4g): the budget planner + rung ladder on
+    # the acceptance-row superstep config, at pipeline_depth=1 so every
+    # rung is bit-comparable. Three rows: unconstrained (rung 0), a
+    # budget one byte under rung 0's plan (forces >= 1 re-tiling rung),
+    # and a budget below the CSR image (forces the paged adjacency).
+    # The gated invariants: rung runs keep km1 EQUAL to unconstrained
+    # and paging overhead stays bounded vs the resident-image runtime.
+    mem_meta = {}
+    hg_m = dataset("github")
+    (a_m0, st_m0), dt_m0 = _run(
+        hype_superstep_partition, hg_m, PIPELINE_K,
+        SuperstepParams(seed=0, t=PIPELINE_T, pipeline_depth=1),
+        return_stats=True)
+    km1_m0 = metrics.k_minus_1(hg_m, a_m0)
+    mem_meta["unconstrained"] = {
+        "plan_rung": st_m0.plan_rung,
+        "peak_bytes_planned": st_m0.peak_bytes_planned,
+        "peak_bytes_observed": st_m0.peak_bytes_observed,
+        "runtime_s": round(dt_m0, 4),
+    }
+    tight = int(st_m0.peak_bytes_planned) - 1
+    (a_mr, st_mr), dt_mr = _run(
+        hype_superstep_partition, hg_m, PIPELINE_K,
+        SuperstepParams(seed=0, t=PIPELINE_T, pipeline_depth=1,
+                        mem_budget=tight), return_stats=True)
+    mem_meta["forced_rung"] = {
+        "mem_budget": tight,
+        "plan_rung": st_mr.plan_rung,
+        "mem_retries": st_mr.mem_retries,
+        "peak_bytes_planned": st_mr.peak_bytes_planned,
+        "peak_bytes_observed": st_mr.peak_bytes_observed,
+        "runtime_s": round(dt_mr, 4),
+        "overhead_vs_unconstrained": round(dt_mr / max(dt_m0, 1e-9), 3),
+        "km1_equal_to_unconstrained":
+            metrics.k_minus_1(hg_m, a_mr) == km1_m0,
+    }
+    (a_mp, st_mp), dt_mp = _run(
+        hype_superstep_partition, hg_m, PIPELINE_K,
+        SuperstepParams(seed=0, t=PIPELINE_T, pipeline_depth=1,
+                        mem_budget="6.4MB"), return_stats=True)
+    mem_meta["paged"] = {
+        "mem_budget": "6.4MB",
+        "plan_rung": st_mp.plan_rung,
+        "peak_bytes_planned": st_mp.peak_bytes_planned,
+        "peak_bytes_observed": st_mp.peak_bytes_observed,
+        "page_uploads": st_mp.page_uploads,
+        "page_hits": st_mp.page_hits,
+        "page_evictions": st_mp.page_evictions,
+        "page_bytes": st_mp.page_bytes,
+        "runtime_s": round(dt_mp, 4),
+        # the ISSUE-7 acceptance bound: <= 1.5x resident at quick scale
+        "paging_overhead_vs_resident": round(
+            dt_mp / max(dt_m0, 1e-9), 3),
+        "km1_equal_to_unconstrained":
+            metrics.k_minus_1(hg_m, a_mp) == km1_m0,
+    }
+    meta["memory"] = mem_meta
+
     # small-n row including the jittable engines (validation scale)
     from repro.core.hype_jax import (hype_jax_partition,
                                      hype_parallel_partition)

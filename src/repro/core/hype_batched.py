@@ -45,6 +45,7 @@ from typing import Optional
 import numpy as np
 
 from .hypergraph import Hypergraph
+from . import membudget
 from . import resilience
 from . import scoring
 
@@ -136,6 +137,20 @@ class BatchedStats:
     restore_s: float = 0.0          # wall-clock restoring the resume ckpt
     resumed_at: int = -1            # superstep/phase the run resumed
     #                                 from; -1 = fresh start
+    # memory-budget counters (core/membudget.py, DESIGN.md §4g):
+    mem_retries: int = 0            # DeviceOOM-driven same-engine retries
+    #                                 (real allocator failures + injected
+    #                                 non-fatal oom faults)
+    plan_rung: int = -1             # memory-plan rung the run executed at;
+    #                                 -1 = engine never planned (host path)
+    peak_bytes_planned: int = 0     # the plan's modeled peak device bytes
+    peak_bytes_observed: int = 0    # backend peak_bytes_in_use when the
+    #                                 allocator tracks it; the planned
+    #                                 model value otherwise
+    page_uploads: int = 0           # paged-adjacency chunk uploads
+    page_hits: int = 0              # chunk requests served LRU-resident
+    page_evictions: int = 0         # chunks evicted to stay under budget
+    page_bytes: int = 0             # total bytes uploaded by the pager
     # refinement post-pass (None unless refine_passes > 0 ran):
     refine: Optional[object] = None     # core.refine.RefineStats
 
@@ -186,6 +201,13 @@ class _BatchedState:
         fatal spec, an exhausted retry budget, or a real failure after
         any ``donated`` buffer was consumed (the call cannot be
         re-issued) raises ``UnrecoverableFault`` for the ladder.
+
+        Memory faults are different: a real allocator failure
+        (``membudget.is_oom_error``) or a non-fatal injected ``oom``
+        raises ``DeviceOOM`` immediately — retrying the identical call
+        cannot help an allocation that does not fit, and the memory-rung
+        retry loop (``_run_pipeline_budgeted``, DESIGN.md §4g) rebuilds
+        the whole engine state at a smaller plan anyway, donated or not.
         """
         plan = self.fault_plan
         attempts = 0
@@ -200,11 +222,21 @@ class _BatchedState:
                 return fn()
             except resilience.UnrecoverableFault:
                 raise
+            except membudget.DeviceOOM:
+                raise
             except resilience.FaultInjected as exc:
                 if exc.fatal:
                     raise resilience.UnrecoverableFault(str(exc)) from exc
+                if exc.kind == "oom":
+                    raise membudget.DeviceOOM(
+                        str(exc),
+                        rung=getattr(self, "mem_rung", None)) from exc
                 err = exc
             except Exception as exc:
+                if membudget.is_oom_error(exc):
+                    raise membudget.DeviceOOM(
+                        f"device allocation failed: {exc!r}",
+                        rung=getattr(self, "mem_rung", None)) from exc
                 if any(a.is_deleted() for a in donated):
                     raise resilience.UnrecoverableFault(
                         f"device call failed after buffer donation: "
@@ -539,6 +571,12 @@ class SuperstepParams(BatchedParams):
     # 2 = the default overlap: while the device runs superstep N the
     # host mirrors superstep N-1's admissions and packs superstep N+1.
     pipeline_depth: int = 2
+    # device-memory budget (core/membudget.py, DESIGN.md §4g): bytes,
+    # a "512MB"/"2GiB" string, or None = the REPRO_DEVICE_MEM_BUDGET
+    # env var, falling back to the backend's reported allocator limit.
+    # The engine plans its tile sizes against the budget before upload
+    # and walks the memory-rung ladder on (real or injected) OOM.
+    mem_budget: Optional[object] = None
 
 
 # Flat bucket-store key layout: one sorted int64 per queued (phase,
@@ -572,6 +610,11 @@ class _CallArgs:
     fringe: np.ndarray
     targets: np.ndarray
     select_k: int
+    # spill rung only: the held pool's scores from the host cache
+    # mirror, captured at dispatch AFTER the dirty decrements were
+    # applied host-side — a replay reuses them verbatim, so the
+    # decrements are never double-applied (DESIGN.md §4g)
+    prev: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -592,6 +635,10 @@ class _Superstep:
     donated: tuple
     args: _CallArgs
     ncf: object = None
+    # spill rung only: the fresh scores the host cache mirror adopts at
+    # harvest (after the poison check — a quarantined superstep's
+    # scores are garbage and are replaced by the replay's)
+    scores: object = None
 
 
 class _SuperstepState(_BatchedState):
@@ -608,31 +655,98 @@ class _SuperstepState(_BatchedState):
     """
 
     def __init__(self, hg: Hypergraph, k: int, p: SuperstepParams,
-                 mesh=None):
+                 mesh=None, mem_rung: int = 0):
         super().__init__(hg, k, p)
+        self.dev_cache = None       # device score cache (None when spilled)
+        self.host_cache = None      # host float32 mirror (spill rung only)
+        self.paged_adj = None       # membudget.PagedAdjacency (paged rung)
+        self.mem_plan = None
+        self.g_chunk = 1
+        self.mem_rung = int(mem_rung)
         if k >= 1 << (63 - _PH_SHIFT):      # bucket-store key width
             self.dev = None
             return
-        plan = self.fault_plan
-        if plan is not None and plan.fire(("oom",), 0) is not None:
-            # simulated allocation failure at the image-upload site: this
-            # engine cannot run at all — hand the ladder the next rung
-            self.stats.faults_injected += 1
-            raise resilience.UnrecoverableFault(
-                "injected OOM during device image upload")
-        self.dev = hg.device_adjacency(mesh=mesh)
-        if self.dev is None:       # hub-expansion guard tripped on host
+        if self.adj is None:        # hub-expansion guard tripped on host
+            self.dev = None
             return
+        deg = np.diff(self.adj[0])
+        self.deg = deg
+        # One gather-width per run: every distinct shape retraces the
+        # whole jitted superstep program (~0.5-1s in interpret mode), and
+        # padding a gather is far cheaper than a retrace. The tile width
+        # is the bucket of the 99.5th-percentile degree — the handful of
+        # rows wider than that are truncated and carry the hub penalty
+        # (they'd compare as "huge neighborhood" anyway).
+        self.tile_l = scoring._bucket_width(int(min(
+            np.percentile(deg, 99.5) if deg.size else 1,
+            scoring.L_BUCKETS[-1])))
+        # memory plan (core/membudget.py, DESIGN.md §4g): size every
+        # device-resident tensor BEFORE upload against the resolved
+        # budget; ``mem_rung`` > 0 means an earlier attempt OOMed and
+        # the retry loop wants the next-smaller configuration. An
+        # unconstrained budget at rung 0 reproduces today's tile
+        # choices bit for bit. MemoryLadderExhausted propagates to the
+        # retry loop, which hands the engine-degradation ladder over.
+        rows = p.rows if p.rows else max(8, p.t)
+        self.mem_budget = membudget.resolve_budget(
+            getattr(p, "mem_budget", None))
+        spec = membudget.MemSpec(
+            n=hg.n, adj_pins=int(self.adj[1].size), k=k, rows=int(rows),
+            pool_cap=int(p.pool_cap), t=int(p.t),
+            tile_l=int(self.tile_l),
+            pipeline_depth=max(1, int(p.pipeline_depth)))
+        plan = membudget.plan_memory(spec, self.mem_budget,
+                                     self._mem_features,
+                                     rung_start=self.mem_rung)
+        self.mem_plan = plan
+        self.mem_rung = plan.rung
+        self.tile_l = plan.tile_l
+        self.g_chunk = plan.g_chunk
+        self.stats.plan_rung = plan.rung
+        self.stats.peak_bytes_planned = int(plan.planned_bytes)
+        fplan = self.fault_plan
+        if fplan is not None:
+            sp = fplan.fire(("oom",), 0)
+            if sp is not None:
+                # simulated allocation failure at the image-upload site
+                self.stats.faults_injected += 1
+                if sp.fatal:
+                    raise resilience.UnrecoverableFault(
+                        "injected fatal OOM during device image upload")
+                raise membudget.DeviceOOM(
+                    "injected OOM during device image upload",
+                    rung=self.mem_rung)
         import jax
         import jax.numpy as jnp
 
         n, m = hg.n, hg.m
-        self.dev_assign = jnp.full((n,), -1, jnp.int32)
-        self.dev_cache = jnp.full((n,), -1.0, jnp.float32)
-        self.dev_acc = jnp.zeros((k,), jnp.int32)
-        # sticky NaN-quarantine flag (scoring._poison_guard), donated
-        # through every superstep like the rest of the mutable image
-        self.dev_poison = jnp.zeros((1,), jnp.int32)
+        try:
+            if plan.paged:
+                # no resident CSR: the pager uploads id-range chunks on
+                # demand under its own LRU byte budget. ``dev`` keeps a
+                # non-None sentinel so the driver takes the device path.
+                self.paged_adj = membudget.PagedAdjacency(
+                    self.adj, plan.page_bytes, self.stats)
+                self.dev = (None, None)
+            else:
+                self.dev = hg.device_adjacency(mesh=mesh)
+                if self.dev is None:
+                    return
+            self.dev_assign = jnp.full((n,), -1, jnp.int32)
+            if plan.spill_cache:
+                self.host_cache = np.full(n, -1.0, dtype=np.float32)
+            else:
+                self.dev_cache = jnp.full((n,), -1.0, jnp.float32)
+            self.dev_acc = jnp.zeros((k,), jnp.int32)
+            # sticky NaN-quarantine flag (scoring._poison_guard), donated
+            # through every superstep like the rest of the mutable image
+            self.dev_poison = jnp.zeros((1,), jnp.int32)
+        except Exception as exc:
+            if membudget.is_oom_error(exc):
+                raise membudget.DeviceOOM(
+                    f"device image upload failed: {exc!r}",
+                    rung=self.mem_rung) from exc
+            raise
         if mesh is not None:       # replicate the mutable image too
             from jax.sharding import NamedSharding, PartitionSpec
             rep = NamedSharding(mesh, PartitionSpec())
@@ -655,31 +769,29 @@ class _SuperstepState(_BatchedState):
         self.delta_vals: list = []
         self.pending_dirty: list = []   # queued winner decrements
         self._excl_scratch = np.zeros(n, dtype=bool)
-        deg = np.diff(self.adj[0])
-        self.deg = deg
-        # One gather-width per run: every distinct shape retraces the
-        # whole jitted superstep program (~0.5-1s in interpret mode), and
-        # padding a gather is far cheaper than a retrace. The tile width
-        # is the bucket of the 99.5th-percentile degree — the handful of
-        # rows wider than that are truncated and carry the hub penalty
-        # (they'd compare as "huge neighborhood" anyway). The dirty-pair
-        # pad is pre-sized from the expected per-superstep dirty rate and
-        # only ratchets up (monotone -> at most a couple of traces).
-        self.tile_l = scoring._bucket_width(int(min(
-            np.percentile(deg, 99.5) if deg.size else 1,
-            scoring.L_BUCKETS[-1])))
+        # The dirty-pair pad is pre-sized from the expected per-superstep
+        # dirty rate and only ratchets up (monotone -> at most a couple
+        # of traces).
         mean_deg = self.adj[1].size / max(hg.n, 1)
         expect = min(hg.n, max(256, int(2 * k * p.t * mean_deg)))
         self._dirty_ratchet = 1 << int(np.ceil(np.log2(expect + 1)))
+        csr_bytes = (0 if self.paged_adj is not None
+                     else self.dev[0].nbytes + self.dev[1].nbytes)
+        cache_bytes = (0 if self.dev_cache is None
+                       else self.dev_cache.nbytes)
         self.stats.device_image_bytes = int(
-            self.dev[0].nbytes + self.dev[1].nbytes
-            + self.dev_assign.nbytes + self.dev_cache.nbytes
+            csr_bytes + cache_bytes + self.dev_assign.nbytes
             + self.dev_acc.nbytes)
 
     # ------------------------------------------------------------------ #
     # injected faults this engine's dispatch site can see (the sharded
-    # engine adds "collective" — its dispatch owns the all_gather)
-    _fault_kinds = ("dispatch",)
+    # engine adds "collective" — its dispatch owns the all_gather);
+    # "oom@N" lets chaos suites simulate mid-run allocation failures
+    _fault_kinds = ("dispatch", "oom")
+    # memory-rung reductions this engine has program variants for
+    # (membudget.rung_ladder); the sharded engine only supports the
+    # width/depth knobs — its CSR is replicated per device
+    _mem_features = membudget.SUPERSTEP_FEATURES
 
     @property
     def interpret(self) -> bool:
@@ -1041,13 +1153,62 @@ class _SuperstepState(_BatchedState):
                      else np.empty(0, dtype=np.int64))
         return (fresh, bias, pool_arr, fresh_ids), injected
 
+    def _image_buffers(self) -> tuple:
+        """The live donated image arrays of this engine's current mode.
+
+        The spill rung keeps no device cache and the paged rung no
+        resident CSR, so the donated set is mode-dependent — every
+        dispatch/replay handle pins exactly these.
+        """
+        bufs = [self.dev_assign, self.dev_acc, self.dev_poison]
+        if self.dev_cache is not None:
+            bufs.insert(1, self.dev_cache)
+        return tuple(bufs)
+
     def _call_program(self, args: _CallArgs, reset: np.ndarray):
         """Issue the fused superstep program; rotate the donated image.
 
-        Returns ``(winners, n_stale, ncf)`` futures (``ncf`` is None for
-        the single-device engine). The sharded engine overrides this —
+        Returns ``(winners, n_stale, ncf, scores)`` futures (``ncf`` is
+        None for the single-device engine; ``scores`` is None except on
+        the spill rung, where the host owns the score cache and the
+        fresh scores ride back with the winners). The memory plan picks
+        the program variant (DESIGN.md §4g) — all of them bit-exact to
+        the default on this engine. The sharded engine overrides this —
         it is the ONLY device-call difference between the two engines.
         """
+        if self.paged_adj is not None:
+            tile_raw = self.paged_adj.gather(
+                args.fresh.reshape(-1), self.tile_l)
+            (self.dev_assign, self.dev_cache, self.dev_acc,
+             self.dev_poison, winners, n_stale) = \
+                scoring.paged_superstep_device(
+                    self.dev_assign, self.dev_cache, self.dev_acc,
+                    self.dev_poison, args.delta, args.vals, args.dirty,
+                    args.dcnt, tile_raw, args.fresh, args.bias,
+                    args.pool_arr, args.fringe, args.targets, reset,
+                    select_k=args.select_k, interpret=self.interpret)
+            return winners, n_stale, None, None
+        if self.host_cache is not None:
+            (self.dev_assign, self.dev_acc, self.dev_poison, winners,
+             n_stale, scores) = scoring.spill_superstep_device(
+                self.dev[0], self.dev[1], self.dev_assign, self.dev_acc,
+                self.dev_poison, args.delta, args.vals, args.fresh,
+                args.bias, args.pool_arr, args.prev, args.fringe,
+                args.targets, reset, tile_l=self.tile_l,
+                select_k=args.select_k, interpret=self.interpret)
+            return winners, n_stale, None, scores
+        if self.g_chunk > 1:
+            (self.dev_assign, self.dev_cache, self.dev_acc,
+             self.dev_poison, winners, n_stale) = \
+                scoring.chunked_superstep_device(
+                    self.dev[0], self.dev[1], self.dev_assign,
+                    self.dev_cache, self.dev_acc, self.dev_poison,
+                    args.delta, args.vals, args.dirty, args.dcnt,
+                    args.fresh, args.bias, args.pool_arr, args.fringe,
+                    args.targets, reset, tile_l=self.tile_l,
+                    select_k=args.select_k, interpret=self.interpret,
+                    g_chunk=self.g_chunk)
+            return winners, n_stale, None, None
         (self.dev_assign, self.dev_cache, self.dev_acc, self.dev_poison,
          winners, n_stale) = scoring.pipeline_superstep_device(
             self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
@@ -1055,15 +1216,14 @@ class _SuperstepState(_BatchedState):
             args.dirty, args.dcnt, args.fresh, args.bias, args.pool_arr,
             args.fringe, args.targets, reset, tile_l=self.tile_l,
             select_k=args.select_k, interpret=self.interpret)
-        return winners, n_stale, None
+        return winners, n_stale, None, None
 
     def _call_guarded(self, args: _CallArgs, reset: np.ndarray):
         """``_call_program`` under fault injection + bounded retry."""
         return self._guarded_kernel(
             lambda: self._call_program(args, reset),
             int(self.stats.supersteps), self._fault_kinds,
-            donated=(self.dev_assign, self.dev_cache, self.dev_acc,
-                     self.dev_poison))
+            donated=self._image_buffers())
 
     def _count_dispatch(self, fresh: np.ndarray, select_k: int) -> None:
         """Per-dispatch counter hook (the sharded engine adds
@@ -1094,6 +1254,18 @@ class _SuperstepState(_BatchedState):
         self.pending_dirty = []
         delta, vals, dirty, dcnt = self._pack_delta_dirty(
             delta_cap, extra_dirty=tails)
+        prev = None
+        if self.host_cache is not None:
+            # spill rung: the host owns the score cache. Apply the dirty
+            # decrements to the float32 mirror NOW (the same IEEE adds
+            # the device program would have scattered) and ship the held
+            # pool's scores in; the device still masks stale slots
+            # itself against the post-injection assignment.
+            u = dirty >= 0
+            ids = dirty[u].astype(np.int64)
+            self.host_cache[ids] -= dcnt[u]
+            prev = self.host_cache[np.where(pool_arr >= 0, pool_arr,
+                                            0)].astype(np.float32)
         self.stats.host_to_device_bytes += (
             fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
             + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes
@@ -1102,7 +1274,8 @@ class _SuperstepState(_BatchedState):
         self.stats.kernel_calls += 1
         self._count_dispatch(fresh, select_k)
         args = _CallArgs(delta, vals, dirty, dcnt, fresh, bias,
-                         pool_arr, fringe, targets_i32, select_k)
+                         pool_arr, fringe, targets_i32, select_k,
+                         prev=prev)
         send = args
         plan = self.fault_plan
         if plan is not None:
@@ -1116,11 +1289,10 @@ class _SuperstepState(_BatchedState):
                 bias_bad = bias.copy()
                 bias_bad[fresh >= 0] = np.nan
                 send = dataclasses.replace(args, bias=bias_bad)
-        donated = (self.dev_assign, self.dev_cache, self.dev_acc,
-                   self.dev_poison)
-        winners, n_stale, ncf = self._call_guarded(send, _RESET0)
+        donated = self._image_buffers()
+        winners, n_stale, ncf, scores = self._call_guarded(send, _RESET0)
         return _Superstep(winners, n_stale, self.dev_poison, fresh_ids,
-                          donated, args, ncf)
+                          donated, args, ncf, scores)
 
     def replay(self, h: _Superstep) -> _Superstep:
         """Re-issue a quarantined superstep from its clean args.
@@ -1136,11 +1308,11 @@ class _SuperstepState(_BatchedState):
         the ladder's host engines score around poisoned rows instead.
         """
         self.stats.retries += 1
-        donated = (self.dev_assign, self.dev_cache, self.dev_acc,
-                   self.dev_poison)
-        winners, n_stale, ncf = self._call_program(h.args, _RESET1)
+        donated = self._image_buffers()
+        winners, n_stale, ncf, scores = self._call_program(h.args,
+                                                           _RESET1)
         nh = _Superstep(winners, n_stale, self.dev_poison, h.fresh_ids,
-                        donated, h.args, ncf)
+                        donated, h.args, ncf, scores)
         if int(np.asarray(nh.poison)[0]) > 0:
             raise resilience.UnrecoverableFault(
                 "superstep still poisoned after a clean replay: the "
@@ -1174,8 +1346,27 @@ class _SuperstepState(_BatchedState):
         winners_dev, stale_dev = handle.winners, handle.n_stale
         fresh_ids = handle.fresh_ids
         t0 = _time.perf_counter()
-        winners = np.asarray(winners_dev)
-        n_stale = int(stale_dev)
+        try:
+            winners = np.asarray(winners_dev)
+            n_stale = int(stale_dev)
+            if self.host_cache is not None and handle.scores is not None:
+                # spill rung: adopt the fresh scores into the host
+                # mirror — the same pad-dropping scatter the device
+                # cache write performs, after the poison check above
+                flat = handle.args.fresh.reshape(-1)
+                sc = np.asarray(handle.scores).reshape(-1)
+                real = flat >= 0
+                self.host_cache[flat[real].astype(np.int64)] = sc[real]
+        except membudget.DeviceOOM:
+            raise
+        except Exception as exc:
+            # a real allocator failure can surface at the blocking
+            # transfer, not just at dispatch — same recovery path
+            if membudget.is_oom_error(exc):
+                raise membudget.DeviceOOM(
+                    f"superstep harvest failed: {exc!r}",
+                    rung=self.mem_rung) from exc
+            raise
         self.stats.device_s += _time.perf_counter() - t0
         t0 = _time.perf_counter()
         self.stats.stale_redraws += n_stale
@@ -1234,7 +1425,11 @@ class _SuperstepState(_BatchedState):
             "dirty_ratchet": int(self._dirty_ratchet),
             "stats": dataclasses.replace(self.stats),
             "dev_assign": np.asarray(self.dev_assign),
-            "dev_cache": np.asarray(self.dev_cache),
+            # on the spill rung the authoritative cache IS the host
+            # mirror; either way the payload carries plain numpy
+            "dev_cache": (self.host_cache.copy()
+                          if self.host_cache is not None
+                          else np.asarray(self.dev_cache)),
             "dev_acc": np.asarray(self.dev_acc),
         }
 
@@ -1265,7 +1460,11 @@ class _SuperstepState(_BatchedState):
         self._dirty_ratchet = int(pay["dirty_ratchet"])
         self.stats = dataclasses.replace(pay["stats"])
         self.dev_assign = self._to_device(pay["dev_assign"])
-        self.dev_cache = self._to_device(pay["dev_cache"])
+        if self.host_cache is not None:
+            self.host_cache = pay["dev_cache"].astype(np.float32,
+                                                      copy=True)
+        else:
+            self.dev_cache = self._to_device(pay["dev_cache"])
         self.dev_acc = self._to_device(pay["dev_acc"])
         self.dev_poison = self._to_device(np.zeros(1, dtype=np.int32))
         return pay["acc"].copy(), int(pay["cur_depth"])
@@ -1374,7 +1573,9 @@ def _teardown_pipeline(st: _SuperstepState,
 
 
 def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
-                  num_devices: Optional[int] = None):
+                  num_devices: Optional[int] = None, mem_rung: int = 0,
+                  mem_warm: Optional[np.ndarray] = None,
+                  mem_retries: int = 0):
     """Grow all ``k`` partitions concurrently; returns (assignment, state).
 
     The shared double-buffered superstep driver of the device engines
@@ -1401,14 +1602,15 @@ def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
     if num_devices is None:
         kG = k
         engine = "hype_superstep"
-        st = _SuperstepState(hg, k, p)
+        st = _SuperstepState(hg, k, p, mem_rung=mem_rung)
     else:
         kL = -(-k // num_devices)
         kG = kL * num_devices
         engine = "hype_sharded"
-        st = _ShardedState(hg, kG, p, num_devices)
+        st = _ShardedState(hg, kG, p, num_devices, mem_rung=mem_rung)
     if st.dev is None:
         return None, None                       # caller falls back
+    st.stats.mem_retries = int(mem_retries)
     n = hg.n
     base, rem = divmod(n, k)
     targets = np.zeros(kG, dtype=np.int64)
@@ -1417,16 +1619,25 @@ def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
     acc = np.zeros(kG, dtype=np.int64)
     R, P, t = p.rows, p.pool_cap, p.t
     delta_cap = max(2 * kG * t, kG)
-    depth = max(1, int(p.pipeline_depth))
+    # the memory plan may clamp the pipeline to lock-step (rung >= the
+    # depth reduction): the clamp is part of the schedule, and at an
+    # unconstrained budget the plan echoes the param unchanged
+    depth = max(1, min(int(p.pipeline_depth),
+                       int(st.mem_plan.pipeline_depth)))
     fringe = np.full((kG, 1), -1, dtype=np.int32)   # fringe-free scoring
     snap_every = max(0, int(p.snapshot_every or 0))
     # everything that decides the superstep schedule: an exact restore
     # requires all of it to match (snapshot cadence included — draining
-    # the pipeline at snapshots IS part of the schedule at depth > 1)
+    # the pipeline at snapshots IS part of the schedule at depth > 1).
+    # Of the memory plan (§4g) only the EFFECTIVE tile width and the
+    # depth clamp enter: the chunk/spill/paged rungs are bit-exact per
+    # superstep, so a snapshot restores exactly across them, while a
+    # tile_l or depth change is a schedule change and must warm-start
     config = {"k": k, "devices": 0 if num_devices is None else
               num_devices, "t": t, "rows": R, "pool_cap": P, "s": p.s,
               "seed": p.seed, "pipeline_depth": depth,
-              "snapshot_every": snap_every}
+              "snapshot_every": snap_every,
+              "tile_l": int(st.tile_l)}
 
     cur_depth = depth
     seeded = False
@@ -1441,6 +1652,11 @@ def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
             acc = st.restore_warm(resilience.warm_assignment(ckpt))
         st.stats.resumed_at = int(ckpt.superstep)
         st.stats.restore_s += _time.perf_counter() - t0
+    elif mem_warm is not None:
+        # memory-rung retry (DESIGN.md §4g): adopt the failed attempt's
+        # host assignment mirror so already-grown members survive the
+        # re-tiling — the seeding below only fills still-empty phases
+        acc = st.restore_warm(np.asarray(mem_warm, dtype=np.int32))
 
     if not seeded:
         # seed every empty phase with one random vertex (paper §III-B1
@@ -1511,6 +1727,16 @@ def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
                 break   # starved: remaining vertices sit in other pools
         while inflight:     # drain the pipeline before the safety net
             _harvest_next(st, inflight, acc, targets)
+    except membudget.DeviceOOM as exc:
+        # memory fault mid-run: settle the pipeline, then enrich the
+        # exception with everything the re-tiling retry loop needs —
+        # the rung this attempt ran at and the host assignment mirror
+        # (the admissions harvested so far) for the warm start
+        _teardown_pipeline(st, inflight)
+        if exc.rung is None:
+            exc.rung = int(st.mem_plan.rung)
+        exc.partial = st.assignment.copy()
+        raise
     except BaseException:
         # abort path (injected unrecoverable fault, KeyboardInterrupt,
         # real device failure): settle every donated chain before
@@ -1532,7 +1758,43 @@ def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
     # authoritative). Tests needing device/host parity flush explicitly
     # through dispatch/harvest.
     st.delta_ids, st.delta_vals = [], []
+    obs = membudget.observed_peak_bytes()
+    st.stats.peak_bytes_observed = (int(obs) if obs else
+                                    int(st.stats.peak_bytes_planned))
     return st.assignment, st
+
+
+def _run_pipeline_budgeted(hg: Hypergraph, k: int, p: SuperstepParams,
+                           num_devices: Optional[int] = None):
+    """``_run_pipeline`` under the memory-rung retry loop (§4g).
+
+    A ``DeviceOOM`` — a real allocator failure at the upload, dispatch
+    or harvest site, or an injected non-fatal ``oom`` fault — retries
+    the SAME engine at the next-smaller memory plan, warm-started from
+    the failed attempt's host assignment mirror, before the
+    engine-degradation ladder (``partition_resilient``) is ever
+    consulted. Only an exhausted rung ladder escalates, as
+    ``UnrecoverableFault``. The fault plan is resolved once up front so
+    a one-shot injected ``oom`` spec stays consumed across retries
+    (re-parsing ``REPRO_FAULT_PLAN`` per attempt would re-fire it
+    forever).
+    """
+    fplan = resilience.resolve_fault_plan(p.fault_plan)
+    if fplan is not None:
+        p = dataclasses.replace(p, fault_plan=fplan)
+    rung, warm, retries = 0, None, 0
+    while True:
+        try:
+            return _run_pipeline(hg, k, p, num_devices, mem_rung=rung,
+                                 mem_warm=warm, mem_retries=retries)
+        except membudget.DeviceOOM as exc:
+            retries += 1
+            rung = (rung if exc.rung is None else int(exc.rung)) + 1
+            if exc.partial is not None and (exc.partial >= 0).any():
+                warm = exc.partial
+        except membudget.MemoryLadderExhausted as exc:
+            raise resilience.UnrecoverableFault(
+                f"device memory rungs exhausted: {exc}") from exc
 
 
 # --------------------------------------------------------------------- #
@@ -1566,11 +1828,11 @@ class _ShardedState(_SuperstepState):
     """
 
     def __init__(self, hg: Hypergraph, k_padded: int, p: ShardedParams,
-                 num_devices: int):
+                 num_devices: int, mem_rung: int = 0):
         self.D = num_devices
         self.kL = k_padded // num_devices
         mesh = scoring._sharded_mesh(num_devices)
-        super().__init__(hg, k_padded, p, mesh=mesh)
+        super().__init__(hg, k_padded, p, mesh=mesh, mem_rung=mem_rung)
         if self.dev is None:
             return
         self.mesh = mesh
@@ -1621,7 +1883,10 @@ class _ShardedState(_SuperstepState):
 
     # the sharded dispatch site owns the per-superstep all_gather, so a
     # failed collective is injected (and retried) there too
-    _fault_kinds = ("dispatch", "collective")
+    _fault_kinds = ("dispatch", "collective", "oom")
+    # no chunked/spill/paged program variants exist for the replicated
+    # shard_map image — only width and depth shrink (DESIGN.md §4g)
+    _mem_features = membudget.SHARDED_FEATURES
 
     def _call_program(self, args: _CallArgs, reset: np.ndarray):
         """One mesh-sharded superstep (async).
@@ -1641,7 +1906,7 @@ class _ShardedState(_SuperstepState):
             args.fringe, args.targets, reset, num_devices=self.D,
             group_l=self.kL, tile_l=self.tile_l,
             select_k=args.select_k, interpret=self.interpret)
-        return winners, n_stale, ncf
+        return winners, n_stale, ncf, None
 
     def _count_dispatch(self, fresh: np.ndarray, select_k: int) -> None:
         kG, R = fresh.shape
@@ -1736,7 +2001,7 @@ def hype_sharded_partition(hg: Hypergraph, k: int,
     avail = len(jax.devices())
     num = params.devices if params.devices is not None else avail
     num = max(1, min(num, avail, k))
-    assignment, st = _run_pipeline(hg, k, params, num)
+    assignment, st = _run_pipeline_budgeted(hg, k, params, num)
     if assignment is None:
         return hype_superstep_partition(hg, k, params, return_stats)
     assert (assignment >= 0).all()
@@ -1780,7 +2045,7 @@ def hype_superstep_partition(hg: Hypergraph, k: int,
     if k == 1:
         out = np.zeros(hg.n, dtype=np.int32)
         return (out, BatchedStats()) if return_stats else out
-    assignment, st = _run_pipeline(hg, k, params)
+    assignment, st = _run_pipeline_budgeted(hg, k, params)
     if assignment is None:
         return hype_batched_partition(hg, k, params, return_stats)
     assert (assignment >= 0).all()

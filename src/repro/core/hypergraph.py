@@ -20,6 +20,30 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+# Ids at or above 2**31 no longer fit int32; the decision is extracted so
+# the boundary can be tested without allocating 2-billion-row graphs.
+_INT32_LIMIT = 2**31
+
+
+def csr_index_dtype(n: int, m: int):
+    """Numpy dtype for CSR *indices* arrays of an (n, m) hypergraph.
+
+    int32 while every vertex AND hyperedge id fits, int64 otherwise.
+    Indptr arrays stay int64 regardless (pin counts overflow first).
+    """
+    return np.int32 if max(int(n), int(m)) < _INT32_LIMIT else np.int64
+
+
+def device_ptr_dtype(n_indices: int):
+    """JAX dtype for the device CSR ``indptr`` image.
+
+    Offsets index into the flat indices array, so the flip happens at
+    ``n_indices`` (pin count), not vertex count. Imports jax lazily —
+    host-only code paths must not pay for it.
+    """
+    import jax.numpy as jnp
+    return jnp.int32 if int(n_indices) < _INT32_LIMIT else jnp.int64
+
 
 @dataclasses.dataclass(frozen=True)
 class Hypergraph:
@@ -71,7 +95,7 @@ class Hypergraph:
         _, uniq = np.unique(key, return_index=True)
         vertex_ids, edge_ids = vertex_ids[uniq], edge_ids[uniq]
 
-        idx_dtype = np.int32 if max(n, m) < 2**31 else np.int64
+        idx_dtype = csr_index_dtype(n, m)
 
         # e2v CSR: sort pins by edge id
         order = np.argsort(edge_ids, kind="stable")
@@ -207,7 +231,7 @@ class Hypergraph:
             import jax
             import jax.numpy as jnp
             indptr, indices = adj
-            ptr_t = jnp.int32 if indices.size < 2**31 else jnp.int64
+            ptr_t = device_ptr_dtype(indices.size)
             dev = (jnp.asarray(indptr, ptr_t), jnp.asarray(indices))
             if mesh is not None:
                 from jax.sharding import NamedSharding, PartitionSpec

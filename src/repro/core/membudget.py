@@ -1,0 +1,527 @@
+"""Device-memory budgeting for the superstep engines (DESIGN.md §4g).
+
+Running out of device memory should be a *handled, bounded-cost* event,
+not a crash or a silent fall-off-the-device cliff. This module holds the
+three pieces that make it one:
+
+  * **Budget planner** — ``plan_memory`` estimates the bytes of every
+    device-resident tensor of a superstep run (CSR image, assignment,
+    score cache, gather tiles, pipeline double buffers) *before* upload
+    with ``estimate_plan_bytes``, a pure function of the graph/knob
+    sizes, and walks a deterministic **rung ladder** of progressively
+    smaller configurations until one fits the budget:
+
+        rung 0  the engine's default plan (today's tile choices)
+        rung 1  phase-chunked scoring (``g_chunk=2`` — "halve tile_b")
+        rung 2  drop ``tile_l`` one ``L_BUCKETS`` bucket (skipped when
+                already at the smallest bucket)
+        rung 3  ``pipeline_depth=1`` (lock-step, golden-exact)
+        rung 4  spill the score cache to host (depth-1 only)
+        rung 5  paged adjacency (the CSR image itself no longer fits)
+
+    Every rung except the ``tile_l`` drop is *bit-exact* on the
+    single-device engine: phase chunks score the same tiles in the same
+    order, depth 1 is golden-hashed, the host float32 cache mirror
+    performs IEEE-identical arithmetic, and the paged gather feeds the
+    program the same raw rows ``scoring._gather_fresh_tiles`` would
+    have produced. The ``tile_l`` drop only changes results for rows
+    wider than the smaller bucket (they pick up the hub penalty).
+
+  * **OOM taxonomy** — ``is_oom_error`` classifies *real* allocator
+    failures (jaxlib ``XlaRuntimeError`` RESOURCE_EXHAUSTED,
+    ``MemoryError``) so the upload/dispatch/harvest sites can convert
+    them — and the injected non-fatal ``oom`` fault of
+    ``resilience.FaultPlan`` — into one ``DeviceOOM`` recovery path:
+    retry the *same* engine at the next rung, warm-started from the
+    host assignment mirror, before ``partition_resilient`` is ever
+    allowed to change engines. A fatal ``oom:fatal`` spec still raises
+    ``UnrecoverableFault`` for the engine-degradation ladder.
+
+  * **Paged adjacency** — ``PagedAdjacency`` keeps the vertex-adjacency
+    CSR on host and pages fixed-row-range chunks onto the device under
+    an LRU byte budget; per-superstep candidate tiles are gathered
+    chunk-by-chunk on device (async dispatch overlaps the uploads with
+    scoring), so graphs whose CSR image exceeds the budget still run
+    on-device. Per-chunk row offsets are narrowed to int32 and row
+    lengths to int16 when the ids allow (``narrow_len_dtype``).
+
+The budget itself comes from the ``mem_budget=`` engine knob, the
+``REPRO_DEVICE_MEM_BUDGET`` env var (``"512MB"``, ``"2GiB"``, plain
+bytes), or — when neither is set — a probe of the backend's
+``memory_stats()['bytes_limit']``; CPU backends without stats run
+unconstrained (rung 0, today's behavior, bit for bit).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import re
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import scoring
+
+ENV_BUDGET = "REPRO_DEVICE_MEM_BUDGET"
+
+# Rung feature sets: the single-device engine supports every reduction;
+# the sharded engine's program variants only exist for the width/depth
+# knobs (its CSR is replicated, so paging would need a different
+# collective layout — see DESIGN.md §4g).
+SUPERSTEP_FEATURES = ("chunk", "tile_l", "depth", "spill", "paged")
+SHARDED_FEATURES = ("tile_l", "depth")
+
+
+class DeviceOOM(RuntimeError):
+    """A device allocation failed (real or injected, non-fatal).
+
+    Carries enough context for the re-tiling retry loop: ``rung`` is the
+    memory-plan rung the failing attempt ran at (None when the failure
+    predates planning) and ``partial`` is the host assignment mirror at
+    failure time, used to warm-start the next rung.
+    """
+
+    def __init__(self, msg: str, rung: Optional[int] = None,
+                 partial: Optional[np.ndarray] = None):
+        super().__init__(msg)
+        self.rung = rung
+        self.partial = partial
+
+
+class MemoryLadderExhausted(RuntimeError):
+    """Every memory rung was tried and the device still OOMs.
+
+    The re-tiling loop converts this into ``UnrecoverableFault`` so the
+    engine-degradation ladder (partition_api) takes over.
+    """
+
+
+def is_oom_error(exc: BaseException) -> bool:
+    """True when ``exc`` is a real allocator failure.
+
+    Covers ``MemoryError``, jaxlib's ``XlaRuntimeError`` with a
+    RESOURCE_EXHAUSTED status, and any runtime error whose message names
+    an out-of-memory condition (different jaxlib versions route the
+    status through different exception classes, so the match is on the
+    message, not the type hierarchy).
+    """
+    if isinstance(exc, MemoryError):
+        return True
+    text = f"{type(exc).__name__}: {exc}"
+    return ("RESOURCE_EXHAUSTED" in text
+            or "out of memory" in text.lower()
+            or "OutOfMemory" in text)
+
+
+# ----------------------------------------------------------- budget source
+
+_UNIT = {
+    "": 1, "b": 1,
+    "k": 10 ** 3, "kb": 10 ** 3, "kib": 1 << 10,
+    "m": 10 ** 6, "mb": 10 ** 6, "mib": 1 << 20,
+    "g": 10 ** 9, "gb": 10 ** 9, "gib": 1 << 30,
+    "t": 10 ** 12, "tb": 10 ** 12, "tib": 1 << 40,
+}
+
+
+def parse_budget(text) -> Optional[int]:
+    """Parse a byte budget: int, ``"512MB"``, ``"1.5GiB"``, ``"2g"``.
+
+    Decimal units (KB/MB/GB) are powers of 10, binary units (KiB/MiB/
+    GiB) powers of 2. ``None``, ``""``, ``"none"`` and ``0`` mean
+    *unconstrained* and return None.
+    """
+    if text is None:
+        return None
+    if isinstance(text, (int, np.integer)):
+        return int(text) or None
+    s = str(text).strip().lower()
+    if s in ("", "none", "unlimited"):
+        return None
+    m = re.fullmatch(r"([0-9]*\.?[0-9]+)\s*([a-z]*)", s)
+    if not m or m.group(2) not in _UNIT:
+        raise ValueError(
+            f"unparseable memory budget {text!r}; use bytes or a "
+            f"KB/MB/GB/KiB/MiB/GiB suffix")
+    return int(float(m.group(1)) * _UNIT[m.group(2)]) or None
+
+
+def probe_device_budget() -> Optional[int]:
+    """The backend's allocator limit, or None when it has none to report.
+
+    CPU backends (and TPU runtimes without ``memory_stats``) return
+    None, which the planner treats as unconstrained — exactly today's
+    behavior.
+    """
+    try:
+        import jax
+        stats = jax.devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    limit = stats.get("bytes_limit")
+    return int(limit) if limit else None
+
+
+def observed_peak_bytes() -> Optional[int]:
+    """``peak_bytes_in_use`` of device 0, or None when untracked."""
+    try:
+        import jax
+        stats = jax.devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    peak = stats.get("peak_bytes_in_use")
+    return int(peak) if peak else None
+
+
+def resolve_budget(mem_budget=None) -> Optional[int]:
+    """Resolve the device byte budget: knob > env > backend probe.
+
+    ``mem_budget`` (the engine knob) wins when set; otherwise the
+    ``REPRO_DEVICE_MEM_BUDGET`` env var; otherwise the backend's own
+    reported limit. None means unconstrained.
+    """
+    if mem_budget is not None:
+        return parse_budget(mem_budget)
+    env = os.environ.get(ENV_BUDGET, "").strip()
+    if env:
+        return parse_budget(env)
+    return probe_device_budget()
+
+
+# ---------------------------------------------------------------- planner
+
+@dataclasses.dataclass(frozen=True)
+class MemSpec:
+    """The size inputs of the byte model — everything known pre-upload."""
+    n: int              # vertices
+    adj_pins: int       # vertex-adjacency indices (expanded neighbor pairs)
+    k: int              # stacked phases G of one superstep
+    rows: int           # fresh candidate rows per phase (R)
+    pool_cap: int       # held pool slots per phase (P)
+    t: int              # admissions per phase per superstep
+    tile_l: int         # default gather width (L bucket)
+    pipeline_depth: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MemPlan:
+    """One rung of the ladder, with its planned peak byte count."""
+    rung: int
+    tile_l: int
+    g_chunk: int            # phases scored in g_chunk sequential slices
+    pipeline_depth: int
+    spill_cache: bool       # score cache lives on host (float32 mirror)
+    paged: bool             # CSR paged on demand instead of resident
+    page_bytes: int         # resident-page budget when paged
+    planned_bytes: int
+    fits: bool              # planned_bytes <= budget (best-effort if not)
+
+
+def device_ptr_nbytes(adj_pins: int) -> int:
+    """Bytes per indptr entry of the device CSR image.
+
+    Mirrors ``Hypergraph.device_adjacency``: int32 while the indices
+    array is addressable with 31 bits, int64 beyond.
+    """
+    return 4 if adj_pins < 2 ** 31 else 8
+
+
+def narrow_len_dtype(max_len: int):
+    """Narrowest unsigned-safe int dtype for per-chunk row lengths."""
+    return np.int16 if max_len < 2 ** 15 else np.int32
+
+
+def estimate_plan_bytes(spec: MemSpec, *, tile_l: Optional[int] = None,
+                        g_chunk: int = 1,
+                        pipeline_depth: Optional[int] = None,
+                        spill_cache: bool = False, paged: bool = False,
+                        page_bytes: int = 0) -> int:
+    """Planned peak device bytes of one superstep-engine configuration.
+
+    A pure function, monotone non-decreasing in every size input
+    (``n``, ``adj_pins``, ``k``, ``rows``, ``pool_cap``, ``t``,
+    ``tile_l``, ``pipeline_depth``) — the property the planner tests
+    pin. The model counts:
+
+      * the CSR image (indptr + indices), or the resident-page budget
+        plus the assembled full-width gather tile when ``paged``;
+      * the mutable image: assignment + score cache (host-resident when
+        ``spill_cache``) + per-phase totals + poison flag;
+      * per-superstep transients — the (G/g_chunk · rows, tile_l)
+        gather tile, the kernel's score/select outputs and the small
+        host-built id buffers — multiplied by ``pipeline_depth``
+        (each in-flight superstep keeps its own transients live).
+    """
+    tile_l = spec.tile_l if tile_l is None else tile_l
+    depth = (spec.pipeline_depth if pipeline_depth is None
+             else pipeline_depth)
+    n, k = spec.n, spec.k
+    g, r, p, t = spec.k, spec.rows, spec.pool_cap, spec.t
+
+    if paged:
+        csr = page_bytes + (n + 1) * 8 // 64    # host indptr slices only
+    else:
+        csr = (n + 1) * device_ptr_nbytes(spec.adj_pins) \
+            + spec.adj_pins * 4
+    image = n * 4                               # assignment
+    if not spill_cache:
+        image += n * 4                          # score cache
+    image += k * 4 + 4                          # acc + poison
+
+    chunk_rows = -(-g // g_chunk) * r
+    gather = chunk_rows * tile_l * 4            # the dominant transient
+    if paged:
+        gather = g * r * tile_l * 4             # full assembled tile
+    kernel = g * r * 4 + g * (r + p) * 8        # scores + select scratch
+    hostbuf = g * (2 * r + p + t + 2) * 4       # fresh/bias/pool/targets
+    transient = gather + kernel + hostbuf
+    return csr + image + max(1, depth) * transient
+
+
+def rung_ladder(spec: MemSpec,
+                features: Sequence[str] = SUPERSTEP_FEATURES,
+                budget: Optional[int] = None) -> Tuple[MemPlan, ...]:
+    """The deterministic rung ladder for ``spec``.
+
+    Rungs are cumulative — each keeps the previous rung's reductions
+    and sheds one more thing. Feature-gated rungs are skipped when the
+    engine does not support them (``SHARDED_FEATURES``) or when they
+    would be a no-op (``tile_l`` already at the smallest bucket).
+    ``budget`` is only used to size the paged rung's resident-page
+    allowance; the fit decision lives in ``plan_memory``.
+    """
+    cfgs = [dict(tile_l=spec.tile_l, g_chunk=1,
+                 pipeline_depth=spec.pipeline_depth, spill_cache=False,
+                 paged=False, page_bytes=0)]
+
+    def push(**kw):
+        cfg = dict(cfgs[-1])
+        cfg.update(kw)
+        cfgs.append(cfg)
+
+    if "chunk" in features and spec.k > 1:
+        push(g_chunk=2)                          # "halve tile_b"
+    if "tile_l" in features:
+        buckets = [b for b in scoring.L_BUCKETS if b < spec.tile_l]
+        if buckets:
+            push(tile_l=buckets[-1])             # one bucket down
+    if "depth" in features and spec.pipeline_depth > 1:
+        push(pipeline_depth=1)
+    if "spill" in features:
+        # the spill program scores the full phase stack (no chunked
+        # variant exists for it), so its config says so honestly
+        push(pipeline_depth=1, spill_cache=True, g_chunk=1)
+    if "paged" in features:
+        base = cfgs[-1]
+        fixed = estimate_plan_bytes(
+            spec, tile_l=base["tile_l"], g_chunk=1,
+            pipeline_depth=1, spill_cache=False, paged=True,
+            page_bytes=0)
+        page_bytes = _MIN_PAGE_BYTES * 2
+        if budget is not None and budget > fixed:
+            page_bytes = max(page_bytes, budget - fixed)
+        push(pipeline_depth=1, spill_cache=False, paged=True,
+             g_chunk=1, page_bytes=int(page_bytes))
+
+    plans = []
+    for rung, cfg in enumerate(cfgs):
+        bytes_ = estimate_plan_bytes(spec, **cfg)
+        plans.append(MemPlan(rung=rung, planned_bytes=bytes_,
+                             fits=(budget is None or bytes_ <= budget),
+                             **cfg))
+    return tuple(plans)
+
+
+def plan_memory(spec: MemSpec, budget: Optional[int],
+                features: Sequence[str] = SUPERSTEP_FEATURES,
+                rung_start: int = 0) -> MemPlan:
+    """Pick the largest plan (lowest rung) that fits ``budget``.
+
+    With ``budget=None`` (unconstrained) rung ``rung_start`` is chosen
+    directly — rung 0 reproduces today's tile choices bit-identically.
+    When no rung from ``rung_start`` on fits, the *last* rung is
+    returned with ``fits=False`` (best effort: the ladder's smallest
+    configuration is still the best available answer; a real allocator
+    failure will surface as ``DeviceOOM`` and walk further rungs).
+    ``rung_start`` past the end of the ladder raises
+    ``MemoryLadderExhausted`` — every retry rung has been consumed.
+    """
+    plans = rung_ladder(spec, features, budget)
+    if rung_start >= len(plans):
+        raise MemoryLadderExhausted(
+            f"all {len(plans)} memory rungs exhausted "
+            f"(budget={budget}, spec={spec})")
+    for plan in plans[rung_start:]:
+        if plan.fits:
+            return plan
+    return plans[-1]
+
+
+# ----------------------------------------------------------- paged image
+
+_MIN_PAGE_BYTES = 1 << 18       # floor so at least two chunks stay resident
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _page_gather_program():
+    """Jitted per-chunk tile gather, shared across chunks via padding.
+
+    One trace per (B, tile_l, chunk_rows, chunk_pins) shape — chunks
+    are padded to a common shape so the whole paged run traces once.
+    ``lo`` is a traced scalar (the chunk's first vertex id), so chunk
+    identity never retraces.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    @_functools.partial(jax.jit, donate_argnums=(0,))
+    def gather(out, rstart, rlen, idx, ids, lo):
+        rows = rlen.shape[0]
+        local = ids - lo
+        in_chunk = (local >= 0) & (local < rows) & (ids >= 0)
+        lsafe = jnp.where(in_chunk, local, 0)
+        start = rstart[lsafe]
+        deg = rlen[lsafe].astype(jnp.int32)
+        col = jax.lax.broadcasted_iota(
+            jnp.int32, (ids.shape[0], out.shape[1]), 1)
+        valid = (col < deg[:, None]) & in_chunk[:, None]
+        nbr = idx[jnp.where(valid, start[:, None] + col, 0)]
+        return jnp.where(valid, nbr, out)
+
+    return gather
+
+
+class PagedAdjacency:
+    """LRU-paged device copy of the vertex-adjacency CSR.
+
+    The CSR is split into fixed-row-count chunks (vertex-id ranges);
+    each chunk's device image is ``(row_start int32, row_len int16 when
+    degrees allow, indices int32)``, padded to a common shape so the
+    gather program traces once. ``gather`` assembles a raw (B, tile_l)
+    neighbor-id tile for a candidate batch on device, uploading absent
+    chunks and evicting least-recently-used ones to stay under
+    ``page_bytes``. Uploads are async (jax dispatch), so the next
+    chunk's transfer overlaps the previous chunk's gather — and the
+    pipeline driver overlaps the whole assembly with the in-flight
+    superstep's scoring.
+
+    Counters (page_uploads / page_hits / page_evictions / page_bytes)
+    are accumulated onto ``stats`` when given (a ``BatchedStats``).
+    """
+
+    def __init__(self, adj, page_bytes: int, stats=None):
+        indptr, indices = adj
+        self.indptr = indptr
+        self.indices = indices
+        self.n = int(indptr.shape[0]) - 1
+        self.page_bytes = max(int(page_bytes), 2 * _MIN_PAGE_BYTES)
+        self.stats = stats
+        deg = np.diff(indptr)
+        self.max_deg = int(deg.max()) if deg.size else 0
+        self.len_dtype = narrow_len_dtype(self.max_deg)
+        # fixed row count per chunk, sized so an *average* chunk costs
+        # about 1/16 of the page budget: fine-grained chunks make the
+        # resident hit ratio track page_bytes/csr_bytes smoothly (the
+        # zigzag sweep in gather() keeps ~capacity/total chunks hot),
+        # while the floor keeps per-chunk dispatch overhead bounded
+        mean_deg = indices.size / max(self.n, 1)
+        target = max(self.page_bytes // 16, _MIN_PAGE_BYTES)
+        per_row = 4 * mean_deg + 4 + self.len_dtype().itemsize
+        self.chunk_rows = int(max(1, min(self.n, target // max(per_row, 1))))
+        self.n_chunks = -(-self.n // self.chunk_rows)
+        # common padded shape: one trace for every chunk of the run
+        bounds = np.minimum(
+            np.arange(self.n_chunks + 1, dtype=np.int64) * self.chunk_rows,
+            self.n)
+        self.chunk_pins = int(
+            (indptr[bounds[1:]] - indptr[bounds[:-1]]).max()
+        ) if self.n_chunks else 0
+        self._resident: "collections.OrderedDict[int, tuple]" = \
+            collections.OrderedDict()
+        self._resident_bytes = 0
+        self._sweep = 0
+
+    def chunk_of(self, ids: np.ndarray) -> np.ndarray:
+        return ids // self.chunk_rows
+
+    def _upload(self, c: int):
+        import jax.numpy as jnp
+
+        lo = c * self.chunk_rows
+        hi = min(lo + self.chunk_rows, self.n)
+        base = int(self.indptr[lo])
+        rstart = np.zeros(self.chunk_rows, dtype=np.int32)
+        rlen = np.zeros(self.chunk_rows, dtype=self.len_dtype)
+        rstart[:hi - lo] = (self.indptr[lo:hi] - base).astype(np.int32)
+        rlen[:hi - lo] = (self.indptr[lo + 1:hi + 1]
+                          - self.indptr[lo:hi]).astype(self.len_dtype)
+        idx = np.zeros(self.chunk_pins, dtype=np.int32)
+        pins = int(self.indptr[hi]) - base
+        idx[:pins] = self.indices[base:base + pins]
+        entry = (jnp.asarray(rstart), jnp.asarray(rlen),
+                 jnp.asarray(idx), np.int32(lo),
+                 rstart.nbytes + rlen.nbytes + idx.nbytes)
+        self._resident[c] = entry
+        self._resident_bytes += entry[4]
+        if self.stats is not None:
+            self.stats.page_uploads += 1
+            self.stats.page_bytes += entry[4]
+        while (self._resident_bytes > self.page_bytes
+               and len(self._resident) > 1):
+            _, old = self._resident.popitem(last=False)
+            self._resident_bytes -= old[4]
+            if self.stats is not None:
+                self.stats.page_evictions += 1
+        return entry
+
+    def gather(self, flat_ids: np.ndarray, tile_l: int):
+        """Raw (B, tile_l) neighbor-id device tile for ``flat_ids``.
+
+        Rows of pad ids (< 0) stay all -1; real rows hold the first
+        ``tile_l`` CSR neighbors, -1 padded — exactly the pre-masking
+        rows ``scoring._gather_fresh_tiles`` reads from a resident CSR,
+        so the paged program's in-program assignment masking reproduces
+        the resident path bit for bit.
+        """
+        import jax.numpy as jnp
+
+        flat_ids = np.asarray(flat_ids, dtype=np.int32)
+        out = jnp.full((flat_ids.shape[0], tile_l), -1, jnp.int32)
+        real = flat_ids[flat_ids >= 0]
+        if real.size == 0:
+            return out
+        ids_dev = jnp.asarray(flat_ids)
+        gather = _page_gather_program()
+        # Alternate the chunk visit direction per call: each chunk
+        # writes a disjoint row set of `out`, so order is free — and a
+        # zigzag turns the repeated full-range sweep (LRU's worst case:
+        # zero hits whenever capacity < total) into one where every
+        # sweep re-enters where the last one ended, keeping
+        # ~capacity/total of the chunks permanently hot.
+        chunks = np.unique(self.chunk_of(real.astype(np.int64)))
+        if self._sweep & 1:
+            chunks = chunks[::-1]
+        self._sweep += 1
+        for c in chunks:
+            c = int(c)
+            entry = self._resident.get(c)
+            if entry is None:
+                entry = self._upload(c)
+            else:
+                self._resident.move_to_end(c)
+                if self.stats is not None:
+                    self.stats.page_hits += 1
+            rstart, rlen, idx, lo, _ = entry
+            out = gather(out, rstart, rlen, idx, ids_dev, lo)
+        return out
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident_bytes

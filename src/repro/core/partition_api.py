@@ -77,7 +77,8 @@ METHOD_INFO: Dict[str, dict] = {
         "balance_slack": lambda n, k: 1,
         "knobs": ("t", "rows", "pool_cap", "pipeline_depth",
                   "refine_passes", "snapshot_every", "snapshot_dir",
-                  "keep_last", "resume", "fault_plan", "max_retries"),
+                  "keep_last", "resume", "fault_plan", "max_retries",
+                  "mem_budget"),
     },
     "hype_sharded": {
         "desc": "mesh-sharded superstep HYPE: phase groups sharded over "
@@ -86,7 +87,8 @@ METHOD_INFO: Dict[str, dict] = {
         "balance_slack": lambda n, k: 1,
         "knobs": ("t", "rows", "pool_cap", "pipeline_depth", "devices",
                   "refine_passes", "snapshot_every", "snapshot_dir",
-                  "keep_last", "resume", "fault_plan", "max_retries"),
+                  "keep_last", "resume", "fault_plan", "max_retries",
+                  "mem_budget"),
     },
     "hype_weighted": {
         "desc": "numpy HYPE with degree-weighted balancing (HypeParams"
@@ -167,13 +169,33 @@ def balance_slack(method: str, n: int, k: int) -> int:
     return int(METHOD_INFO[method]["balance_slack"](n, k))
 
 
-# Above this vertex count "auto" validation is skipped: the O(pins)
-# invariant sweep starts to rival the cheap engines' own runtime.
-_AUTO_VALIDATE_MAX_N = 1_000_000
+# Method-independent knobs ``partition()`` itself consumes (never
+# forwarded to an engine), name -> default. Registered so the knob
+# drift test can enforce the signature defaults the same way engine
+# knobs are enforced against their params dataclasses.
+#
+# ``auto_validate_max_n``: above this vertex count ``validate="auto"``
+# skips the O(pins) invariant sweep — it starts to rival the cheap
+# engines' own runtime. Huge-graph runs opt back in with
+# ``validate=True`` or a larger threshold.
+PARTITION_KNOBS: Dict[str, object] = {
+    "auto_validate_max_n": 1_000_000,
+}
+
+
+def _resolve_validate(hg: Hypergraph, validate,
+                      auto_validate_max_n: int) -> bool:
+    if validate == "auto":
+        return hg.n < int(auto_validate_max_n)
+    if not isinstance(validate, bool):
+        raise ValueError(
+            f"validate must be 'auto' or a bool, got {validate!r}")
+    return validate
 
 
 def partition(hg: Hypergraph, k: int, method: str = "hype", *,
-              seed: int = 0, validate="auto", **kw) -> np.ndarray:
+              seed: int = 0, validate="auto",
+              auto_validate_max_n: int = 1_000_000, **kw) -> np.ndarray:
     """Partition ``hg`` into ``k`` parts; the single entry point.
 
     Parameters
@@ -196,8 +218,13 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
         Run ``hg.validate()`` before dispatching so CSR corruption
         surfaces as a clear ``ValueError`` here rather than an opaque
         kernel failure after the device image upload. ``"auto"`` (the
-        default) validates graphs below 1e6 vertices and skips larger
-        ones; pass an explicit bool to force either way.
+        default) validates graphs below ``auto_validate_max_n``
+        vertices and skips larger ones; pass an explicit bool to force
+        either way.
+    auto_validate_max_n : int
+        The ``"auto"`` cutoff (default 1e6, see ``PARTITION_KNOBS``).
+        Raise it to keep validating huge graphs, or lower it to skip
+        validation sooner; ignored when ``validate`` is a bool.
     **kw
         Engine-specific knobs, forwarded to the engine's params
         (e.g. ``t=16`` for the batched engines, ``devices=4`` for
@@ -210,12 +237,7 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
         ``[0, k)``. Balance is engine-specific (``balance_slack``): the
         HYPE family guarantees ``max - min <= 1`` vertex counts.
     """
-    if validate == "auto":
-        validate = hg.n < _AUTO_VALIDATE_MAX_N
-    elif not isinstance(validate, bool):
-        raise ValueError(
-            f"validate must be 'auto' or a bool, got {validate!r}")
-    if validate:
+    if _resolve_validate(hg, validate, auto_validate_max_n):
         hg.validate()
     if method == "hype":
         return hype_partition(hg, k, HypeParams(seed=seed, **kw))
@@ -325,6 +347,7 @@ def partition_resilient(hg: Hypergraph, k: int,
                         resume: Optional[str] = None,
                         fault_plan=None,
                         validate="auto",
+                        auto_validate_max_n: int = 1_000_000,
                         **kw) -> Tuple[np.ndarray, dict]:
     """Partition with retries, snapshots and the degradation ladder.
 
@@ -356,9 +379,7 @@ def partition_resilient(hg: Hypergraph, k: int,
         raise ValueError(
             f"unknown resilient method {method!r}; choose from "
             f"{('hype', *_LADDER)}")
-    if validate == "auto":
-        validate = hg.n < _AUTO_VALIDATE_MAX_N
-    if validate:
+    if _resolve_validate(hg, validate, auto_validate_max_n):
         hg.validate()
     plan = resilience.resolve_fault_plan(fault_plan)
     t0 = time.perf_counter()

@@ -64,18 +64,22 @@ class FaultInjected(RuntimeError):
 class UnrecoverableFault(RuntimeError):
     """The engine cannot recover inside this run.
 
-    Raised on a fatal injected fault, an exhausted retry budget, a
-    simulated OOM during image upload, or a device failure after buffer
-    donation (the donated inputs are consumed, so the call cannot be
-    re-issued). ``partition_resilient`` catches it and falls back down
-    the engine ladder from the last snapshot.
+    Raised on a fatal injected fault, an exhausted retry budget, an
+    exhausted memory-rung ladder (``membudget.MemoryLadderExhausted``
+    after every re-tiling rung still OOMs), or a device failure after
+    buffer donation (the donated inputs are consumed, so the call
+    cannot be re-issued). ``partition_resilient`` catches it and falls
+    back down the engine ladder from the last snapshot. Non-fatal
+    memory faults do NOT raise this — they raise
+    ``membudget.DeviceOOM`` and are retried on the same engine at a
+    smaller memory plan first (DESIGN.md §4g).
     """
 
 
 @dataclasses.dataclass
 class FaultSpec:
     kind: str            # one of FAULT_KINDS
-    superstep: int = 0   # 1-based dispatch ordinal; ignored for "oom"
+    superstep: int = 0   # 1-based dispatch ordinal; 0 for "oom" = any site
     fatal: bool = False  # fatal -> UnrecoverableFault instead of retry
 
 
@@ -83,10 +87,16 @@ class FaultPlan:
     """A deterministic, one-shot-per-spec fault schedule.
 
     ``fire(kinds, superstep)`` consumes and returns the first pending
-    spec whose kind is in ``kinds`` and whose superstep matches (``oom``
-    matches any superstep — it fires at the upload site). A plan object
-    is stateful: pass the *same* instance through a degradation ladder
-    so a consumed fault does not re-fire after a fallback.
+    spec whose kind is in ``kinds`` and whose superstep matches. A bare
+    ``"oom"`` spec (superstep 0) matches ANY site that asks for the
+    kind — it fires at the first, the device-image upload — while
+    ``"oom@N"`` pins the fault to dispatch ordinal ``N`` so allocation
+    failures mid-run can be simulated too. A non-fatal ``oom`` is
+    recovered by the memory-rung retry loop (``core/membudget.py``,
+    DESIGN.md §4g) on the SAME engine; only ``oom:fatal`` abandons the
+    engine for the degradation ladder. A plan object is stateful: pass
+    the *same* instance through a degradation ladder so a consumed
+    fault does not re-fire after a fallback.
     """
 
     def __init__(self, specs: Sequence[FaultSpec] = ()):
@@ -142,8 +152,9 @@ class FaultPlan:
     def fire(self, kinds: Tuple[str, ...],
              superstep: int) -> Optional[FaultSpec]:
         for sp in self.specs:
-            if sp.kind in kinds and (sp.kind == "oom"
-                                     or sp.superstep == superstep):
+            if sp.kind in kinds and (sp.superstep == superstep
+                                     or (sp.kind == "oom"
+                                         and sp.superstep == 0)):
                 self.specs.remove(sp)
                 self.fired.append(sp)
                 return sp

@@ -477,6 +477,291 @@ def pipeline_superstep_device(indptr, indices, assign, cache, acc,
         interpret=interpret)
 
 
+# ------------------------------------------------- memory-rung variants
+# Program variants for the memory-budget rung ladder (core/membudget.py,
+# DESIGN.md §4g). Each shares the traced helpers above with
+# ``_pipeline_program`` — the default program is deliberately left
+# untouched (its depth-1 outputs are golden-hashed), and every variant
+# is bit-exact to it on the single-device engine:
+#
+#   * ``_chunked_program``   — scores the G phases in ``g_chunk``
+#     sequential slices (``lax.map``), dividing the peak (G·R, tile_l)
+#     gather-tile footprint by ``g_chunk``. Phases are independent
+#     until admission (selection runs against the pre-winner assignment
+#     snapshot), so chunked scoring computes the same scores in the
+#     same order.
+#   * ``_spill_program``     — no device score cache: the host keeps a
+#     float32 mirror, applies the dirty decrements itself (IEEE-
+#     identical float32 adds of integer counts) and ships the held-pool
+#     scores in; fresh scores return with the winners. Depth-1 only.
+#   * ``_paged_program``     — takes the *pre-gathered raw* neighbor
+#     tile (built chunk-by-chunk by ``membudget.PagedAdjacency``) and
+#     applies the assignment masking in-program, reproducing
+#     ``_gather_fresh_tiles``'s output exactly without a resident CSR.
+
+
+@_functools.lru_cache(maxsize=None)
+def _chunked_program():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hype_score.kernel import SELECT_PAD
+    from repro.kernels.hype_score.ops import hype_score_select
+
+    @_functools.partial(
+        jax.jit,
+        static_argnames=("tile_l", "select_k", "interpret", "g_chunk"),
+        donate_argnums=(2, 3, 4))
+    def step(indptr, indices, assign, cache, acc, poison, delta_ids,
+             delta_vals, dirty_ids, dirty_counts, fresh, bias, pool,
+             fringe, targets, reset, *, tile_l, select_k, interpret,
+             g_chunk):
+        n = assign.shape[0]
+        G, R = fresh.shape
+        assign0, cache0, acc0 = assign, cache, acc
+        assign, cache, acc = _apply_host_injections(
+            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
+            dirty_counts)
+        prev, n_stale = _stale_masked_prev(pool, assign, cache)
+        # phase-chunked gather + score: pad G to a g_chunk multiple
+        # (pad phases carry -1 candidates / +inf bias, so they select
+        # nothing), then lax.map the gather + fused kernel over the
+        # chunks — sequential execution divides the peak tile bytes by
+        # g_chunk while computing the exact scores of the full call.
+        Gc = -(-G // g_chunk)
+        pad = g_chunk * Gc - G
+
+        def padg(a, fill):
+            if pad == 0:
+                return a
+            return jnp.concatenate(
+                [a, jnp.full((pad,) + a.shape[1:], fill, a.dtype)])
+
+        fresh_p = padg(fresh, -1).reshape(g_chunk, Gc, R)
+        bias_p = padg(bias, jnp.inf).reshape(g_chunk, Gc, R)
+        prev_p = padg(prev, jnp.inf).reshape(g_chunk, Gc, prev.shape[1])
+        fringe_p = padg(fringe, -1).reshape(
+            g_chunk, Gc, fringe.shape[1])
+
+        def score_chunk(args):
+            fr_c, bi_c, pr_c, fg_c = args
+            flat_c = fr_c.reshape(-1)
+            tile_c = _gather_fresh_tiles(indptr, indices, assign,
+                                         flat_c, tile_l)
+            return hype_score_select(
+                tile_c.reshape(Gc, R, tile_l), fg_c, bi_c, pr_c,
+                select_k=select_k, interpret=interpret)
+
+        scores_c, sel_idx_c, sel_val_c = jax.lax.map(
+            score_chunk, (fresh_p, bias_p, prev_p, fringe_p))
+        scores = scores_c.reshape(g_chunk * Gc, R)[:G]
+        sel_idx = sel_idx_c.reshape(g_chunk * Gc, select_k)[:G]
+        sel_val = sel_val_c.reshape(g_chunk * Gc, select_k)[:G]
+        # steps 6-9 of _pipeline_program, verbatim
+        flat = fresh.reshape(-1)
+        cache = cache.at[jnp.where(flat >= 0, flat, n)].set(
+            scores.reshape(-1), mode="drop")
+        slots = jnp.concatenate([fresh, pool], axis=1)
+        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
+        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
+        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
+        cap = jnp.maximum(targets - acc, 0)
+        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+        adm = ok & (rank <= cap[:, None])
+        winners = jnp.where(adm, cand, -1)
+        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
+        assign = assign.at[jnp.where(adm, cand, n)].set(
+            phase_row, mode="drop")
+        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
+        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
+        assign = jnp.where(poisoned, assign0, assign)
+        cache = jnp.where(poisoned, cache0, cache)
+        acc = jnp.where(poisoned, acc0, acc)
+        winners = jnp.where(poisoned, -1, winners)
+        n_stale = jnp.where(poisoned, 0, n_stale)
+        poison = poisoned.astype(jnp.int32)[None]
+        return assign, cache, acc, poison, winners, n_stale
+
+    return step
+
+
+def chunked_superstep_device(indptr, indices, assign, cache, acc,
+                             poison, delta_ids, delta_vals, dirty_ids,
+                             dirty_counts, fresh, bias, pool, fringe,
+                             targets, reset, *, tile_l: int,
+                             select_k: int, interpret: bool,
+                             g_chunk: int):
+    """``pipeline_superstep_device`` with phase-chunked scoring.
+
+    Identical contract and bit-identical outputs; ``g_chunk`` slices
+    the gather + fused-kernel stage so only 1/g_chunk of the phases'
+    tiles is materialized at a time (memory rung 1+, DESIGN.md §4g).
+    """
+    return _chunked_program()(
+        indptr, indices, assign, cache, acc, poison, delta_ids,
+        delta_vals, dirty_ids, dirty_counts, fresh, bias, pool, fringe,
+        targets, reset, tile_l=tile_l, select_k=select_k,
+        interpret=interpret, g_chunk=g_chunk)
+
+
+@_functools.lru_cache(maxsize=None)
+def _spill_program():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hype_score.kernel import SELECT_PAD
+    from repro.kernels.hype_score.ops import hype_score_select
+
+    @_functools.partial(
+        jax.jit, static_argnames=("tile_l", "select_k", "interpret"),
+        donate_argnums=(2, 3))
+    def step(indptr, indices, assign, acc, poison, delta_ids,
+             delta_vals, fresh, bias, pool, prev_host, fringe, targets,
+             reset, *, tile_l, select_k, interpret):
+        n = assign.shape[0]
+        G, R = fresh.shape
+        assign0, acc0 = assign, acc
+        # injections only — the dirty decrements were applied to the
+        # HOST cache mirror at pack time (identical float32 arithmetic)
+        inj = delta_ids >= 0
+        assign = assign.at[jnp.where(inj, delta_ids, n)].set(
+            delta_vals, mode="drop")
+        acc = acc.at[jnp.where(inj, delta_vals, acc.shape[0])].add(
+            1, mode="drop")
+        flat = fresh.reshape(-1)
+        tile = _gather_fresh_tiles(indptr, indices, assign, flat, tile_l)
+        # held pool scores arrive from the host mirror; staleness is
+        # still masked on device against the post-injection assignment
+        psafe = jnp.where(pool >= 0, pool, 0)
+        pool_ok = (pool >= 0) & (assign[psafe] < 0)
+        prev = jnp.where(pool_ok, prev_host, jnp.inf).astype(jnp.float32)
+        n_stale = ((pool >= 0) & ~pool_ok).sum().astype(jnp.int32)
+        scores, sel_idx, sel_val = hype_score_select(
+            tile.reshape(G, R, tile_l), fringe, bias, prev,
+            select_k=select_k, interpret=interpret)
+        slots = jnp.concatenate([fresh, pool], axis=1)
+        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
+        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
+        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
+        cap = jnp.maximum(targets - acc, 0)
+        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+        adm = ok & (rank <= cap[:, None])
+        winners = jnp.where(adm, cand, -1)
+        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
+        assign = assign.at[jnp.where(adm, cand, n)].set(
+            phase_row, mode="drop")
+        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
+        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
+        assign = jnp.where(poisoned, assign0, assign)
+        acc = jnp.where(poisoned, acc0, acc)
+        winners = jnp.where(poisoned, -1, winners)
+        n_stale = jnp.where(poisoned, 0, n_stale)
+        poison = poisoned.astype(jnp.int32)[None]
+        # fresh scores return to the host, which owns the cache now;
+        # the host only writes them after the poison check
+        return assign, acc, poison, winners, n_stale, scores
+
+    return step
+
+
+def spill_superstep_device(indptr, indices, assign, acc, poison,
+                           delta_ids, delta_vals, fresh, bias, pool,
+                           prev_host, fringe, targets, reset, *,
+                           tile_l: int, select_k: int, interpret: bool):
+    """``pipeline_superstep_device`` with the score cache spilled to host.
+
+    The (n,) float32 cache lives on host (memory rung 4, depth-1 only):
+    the caller applies dirty decrements to its mirror, ships the held
+    pool's ``prev_host`` scores in, and writes the returned ``scores``
+    back at harvest. All arithmetic the device skipped is IEEE-exact
+    float32 on host, so results match the resident-cache program bit
+    for bit at depth 1. ``assign``/``acc`` are DONATED.
+    Returns ``(assign', acc', poison', winners, n_stale, scores)``.
+    """
+    return _spill_program()(
+        indptr, indices, assign, acc, poison, delta_ids, delta_vals,
+        fresh, bias, pool, prev_host, fringe, targets, reset,
+        tile_l=tile_l, select_k=select_k, interpret=interpret)
+
+
+@_functools.lru_cache(maxsize=None)
+def _paged_program():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hype_score.kernel import SELECT_PAD
+    from repro.kernels.hype_score.ops import hype_score_select
+
+    @_functools.partial(
+        jax.jit, static_argnames=("select_k", "interpret"),
+        donate_argnums=(0, 1, 2))
+    def step(assign, cache, acc, poison, delta_ids, delta_vals,
+             dirty_ids, dirty_counts, tile_raw, fresh, bias, pool,
+             fringe, targets, reset, *, select_k, interpret):
+        n = assign.shape[0]
+        G, R = fresh.shape
+        tile_l = tile_raw.shape[1]
+        assign0, cache0, acc0 = assign, cache, acc
+        assign, cache, acc = _apply_host_injections(
+            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
+            dirty_counts)
+        flat = fresh.reshape(-1)
+        # the raw tile was gathered from the paged CSR before this call;
+        # masking assigned neighbors here — against the post-injection
+        # assignment — reproduces _gather_fresh_tiles's output exactly
+        valid = tile_raw >= 0
+        unassigned = assign[jnp.where(valid, tile_raw, 0)] < 0
+        tile = jnp.where(valid & unassigned, tile_raw,
+                         -1).astype(jnp.int32)
+        prev, n_stale = _stale_masked_prev(pool, assign, cache)
+        scores, sel_idx, sel_val = hype_score_select(
+            tile.reshape(G, R, tile_l), fringe, bias, prev,
+            select_k=select_k, interpret=interpret)
+        cache = cache.at[jnp.where(flat >= 0, flat, n)].set(
+            scores.reshape(-1), mode="drop")
+        slots = jnp.concatenate([fresh, pool], axis=1)
+        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
+        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
+        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
+        cap = jnp.maximum(targets - acc, 0)
+        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+        adm = ok & (rank <= cap[:, None])
+        winners = jnp.where(adm, cand, -1)
+        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
+        assign = assign.at[jnp.where(adm, cand, n)].set(
+            phase_row, mode="drop")
+        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
+        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
+        assign = jnp.where(poisoned, assign0, assign)
+        cache = jnp.where(poisoned, cache0, cache)
+        acc = jnp.where(poisoned, acc0, acc)
+        winners = jnp.where(poisoned, -1, winners)
+        n_stale = jnp.where(poisoned, 0, n_stale)
+        poison = poisoned.astype(jnp.int32)[None]
+        return assign, cache, acc, poison, winners, n_stale
+
+    return step
+
+
+def paged_superstep_device(assign, cache, acc, poison, delta_ids,
+                           delta_vals, dirty_ids, dirty_counts,
+                           tile_raw, fresh, bias, pool, fringe, targets,
+                           reset, *, select_k: int, interpret: bool):
+    """``pipeline_superstep_device`` without a resident CSR image.
+
+    ``tile_raw`` is the (G·R, tile_l) *unmasked* neighbor-id tile
+    assembled by ``membudget.PagedAdjacency.gather`` (memory rung 5);
+    the program applies the assignment masking itself, so the scores —
+    and therefore the whole run — are bit-identical to the
+    resident-image engine. The single-device program's only other CSR
+    use (winner decrements) already lives host-side, which is what
+    makes this rung possible at all. ``assign``/``cache``/``acc`` are
+    DONATED. Returns ``(assign', cache', acc', poison', winners,
+    n_stale)``.
+    """
+    return _paged_program()(
+        assign, cache, acc, poison, delta_ids, delta_vals, dirty_ids,
+        dirty_counts, tile_raw, fresh, bias, pool, fringe, targets,
+        reset, select_k=select_k, interpret=interpret)
+
+
 # ---------------------------------------------------------- sharded superstep
 # Mesh-sharded superstep program: the per-superstep device work of the
 # sharded engine, run under shard_map over a 1-D device mesh. The CSR

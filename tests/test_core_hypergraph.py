@@ -165,3 +165,56 @@ def test_property_metric_bounds(hg, k, seed):
     assert metrics.hyperedge_cut(hg, a) <= km1 or km1 == 0
     assert hg.flip().n_pins == hg.n_pins
     hg.flip().validate()
+
+
+# ------------------------------------------------ index-dtype boundaries
+
+def test_csr_index_dtype_boundary():
+    """The int32->int64 flip happens exactly at max(n, m) == 2**31 —
+    tested on the extracted decision function, no giant allocations."""
+    from repro.core.hypergraph import csr_index_dtype
+    lim = 2**31
+    assert csr_index_dtype(10, 10) is np.int32
+    assert csr_index_dtype(lim - 1, 1) is np.int32
+    assert csr_index_dtype(1, lim - 1) is np.int32
+    assert csr_index_dtype(lim, 1) is np.int64
+    assert csr_index_dtype(1, lim) is np.int64
+    assert csr_index_dtype(lim + 7, lim + 7) is np.int64
+
+
+def test_from_pins_uses_decision_dtype():
+    hg = tiny()
+    from repro.core.hypergraph import csr_index_dtype
+    want = csr_index_dtype(hg.n, hg.m)
+    assert hg.v2e_indices.dtype == want
+    assert hg.e2v_indices.dtype == want
+    # indptr stays int64 regardless: pin counts overflow before ids do
+    assert hg.v2e_indptr.dtype == np.int64
+    assert hg.e2v_indptr.dtype == np.int64
+
+
+def test_device_ptr_dtype_boundary():
+    """Device indptr narrows on the flat *indices* length (pin count),
+    flipping at 2**31 like the host decision."""
+    import jax.numpy as jnp
+    from repro.core.hypergraph import device_ptr_dtype
+    lim = 2**31
+    assert device_ptr_dtype(0) is jnp.int32
+    assert device_ptr_dtype(lim - 1) is jnp.int32
+    assert device_ptr_dtype(lim) is jnp.int64
+    assert device_ptr_dtype(lim + 1) is jnp.int64
+
+
+def test_device_adjacency_ptr_dtype_propagation():
+    """device_adjacency must upload its indptr with the dtype the
+    decision function picks for the actual indices length."""
+    import jax.numpy as jnp
+    from repro.core.hypergraph import device_ptr_dtype
+    hg = tiny()
+    dev = hg.device_adjacency()
+    assert dev is not None
+    indptr_dev, indices_dev = dev
+    host = hg.vertex_adjacency(80_000_000)
+    assert indptr_dev.dtype == device_ptr_dtype(host[1].size)
+    assert indptr_dev.dtype == jnp.int32          # tiny graph fits
+    np.testing.assert_array_equal(np.asarray(indptr_dev), host[0])

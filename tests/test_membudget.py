@@ -1,0 +1,377 @@
+"""Device-memory budgeting (DESIGN.md §4g): budget parsing and
+resolution, the pure byte-model planner and its rung ladder, the paged
+adjacency image, and the engine-level OOM recovery contract — a budget
+tight enough to force re-tiling rungs must complete on the SAME engine
+with results bit-identical to the unconstrained run, and real allocator
+failures must converge on the injected-fault recovery path."""
+import dataclasses
+import hashlib
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import hype_batched as hb
+from repro.core import membudget as mb
+from repro.core import metrics, partition_api, resilience
+from repro.core.hype_batched import (SuperstepParams,
+                                     hype_superstep_partition)
+from repro.core.hypergraph import Hypergraph
+from repro.data.synthetic import powerlaw_hypergraph
+
+
+def _digest(a: np.ndarray) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(a, dtype=np.int32).tobytes()).hexdigest()[:16]
+
+
+@pytest.fixture(autouse=True)
+def _hang_guard():
+    """Same 180 s wall-clock guard as test_resilience: a wedged retry
+    loop must fail the test, not hang the suite."""
+    def _alarm(signum, frame):
+        raise TimeoutError("test exceeded the 180 s membudget guard")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(180)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(600, 400, seed=11, max_edge=30,
+                               max_degree=20)
+
+
+@pytest.fixture(scope="module")
+def base_d2(hg):
+    """Unconstrained depth-2 baseline (assignment, stats)."""
+    return hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8), return_stats=True)
+
+
+@pytest.fixture(scope="module")
+def base_d1(hg):
+    """Unconstrained depth-1 (lock-step) baseline assignment."""
+    return hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8, pipeline_depth=1))
+
+
+# -------------------------------------------------- parsing / taxonomy
+
+def test_parse_budget():
+    assert mb.parse_budget(None) is None
+    assert mb.parse_budget(0) is None
+    assert mb.parse_budget("") is None
+    assert mb.parse_budget(" none ") is None
+    assert mb.parse_budget("unlimited") is None
+    assert mb.parse_budget(12345) == 12345
+    assert mb.parse_budget("512") == 512
+    assert mb.parse_budget("2KB") == 2_000
+    assert mb.parse_budget("2KiB") == 2048
+    assert mb.parse_budget("512MB") == 512 * 10 ** 6
+    assert mb.parse_budget("1.5GiB") == int(1.5 * (1 << 30))
+    assert mb.parse_budget("2g") == 2 * 10 ** 9
+    with pytest.raises(ValueError, match="unparseable"):
+        mb.parse_budget("lots")
+    with pytest.raises(ValueError, match="unparseable"):
+        mb.parse_budget("12 parsecs")
+
+
+def test_is_oom_error():
+    class XlaRuntimeError(RuntimeError):
+        pass
+
+    class OutOfMemoryError(RuntimeError):
+        pass
+
+    assert mb.is_oom_error(MemoryError())
+    assert mb.is_oom_error(
+        XlaRuntimeError("RESOURCE_EXHAUSTED: Out of memory allocating "
+                        "1073741824 bytes"))
+    assert mb.is_oom_error(RuntimeError("device out of memory"))
+    assert mb.is_oom_error(OutOfMemoryError("alloc failed"))
+    assert not mb.is_oom_error(ValueError("bad tile width"))
+    assert not mb.is_oom_error(RuntimeError("INVALID_ARGUMENT: shape"))
+
+
+def test_resolve_budget_priority(monkeypatch):
+    monkeypatch.setenv(mb.ENV_BUDGET, "1MB")
+    assert mb.resolve_budget("2KiB") == 2048          # knob wins
+    assert mb.resolve_budget(None) == 10 ** 6         # env next
+    # knob 0/"none" is an EXPLICIT unconstrained, beating the env var
+    assert mb.resolve_budget(0) is None
+    assert mb.resolve_budget("none") is None
+    monkeypatch.delenv(mb.ENV_BUDGET)
+    # no knob, no env: backend probe (None on stat-less CPU backends)
+    probed = mb.resolve_budget(None)
+    assert probed is None or probed > 0
+
+
+# --------------------------------------------------------- pure planner
+
+def _spec(**kw):
+    base = dict(n=600, adj_pins=20_000, k=5, rows=8, pool_cap=64, t=8,
+                tile_l=512, pipeline_depth=2)
+    base.update(kw)
+    return mb.MemSpec(**base)
+
+
+def test_estimate_bytes_monotone():
+    """Planned bytes are monotone non-decreasing in every size input."""
+    base = _spec()
+    b0 = mb.estimate_plan_bytes(base)
+    assert b0 > 0
+    for field, bump in [("n", 600), ("adj_pins", 50_000), ("k", 11),
+                        ("rows", 24), ("pool_cap", 128), ("t", 24),
+                        ("tile_l", 2048), ("pipeline_depth", 3)]:
+        bigger = _spec(**{field: bump})
+        assert mb.estimate_plan_bytes(bigger) >= b0, field
+    # and in the override knobs the ladder actually varies
+    assert mb.estimate_plan_bytes(base, tile_l=128) <= b0
+    assert mb.estimate_plan_bytes(base, g_chunk=2) <= b0
+    assert mb.estimate_plan_bytes(base, pipeline_depth=1) <= b0
+    assert mb.estimate_plan_bytes(
+        base, spill_cache=True) <= mb.estimate_plan_bytes(base)
+
+
+def test_rung_ladder_deterministic_and_cumulative():
+    spec = _spec()
+    a = mb.rung_ladder(spec)
+    b = mb.rung_ladder(spec)
+    assert a == b                                    # deterministic
+    assert [p.rung for p in a] == list(range(len(a)))
+    assert a[0].tile_l == spec.tile_l and a[0].g_chunk == 1
+    assert not a[0].spill_cache and not a[0].paged
+    # the documented shedding order: chunk, tile_l, depth, spill, paged
+    assert a[1].g_chunk == 2
+    assert a[2].tile_l < spec.tile_l                 # one bucket down
+    assert a[3].pipeline_depth == 1
+    assert a[4].spill_cache and a[4].g_chunk == 1    # full-stack program
+    assert a[5].paged and not a[5].spill_cache and a[5].page_bytes > 0
+    # the width/depth rungs each shed bytes monotonically; the spill
+    # rung trades the score cache (n*4) against re-widening the gather
+    # (its program has no chunked variant), so it only promises to stay
+    # below rung 0 — and the paged rung pays a resident-page floor
+    planned = [p.planned_bytes for p in a]
+    assert planned[:4] == sorted(planned[:4], reverse=True)
+    assert len(set(planned[:4])) == 4              # strictly shedding
+    assert planned[4] < planned[0]
+
+
+def test_rung_ladder_feature_gating():
+    plans = mb.rung_ladder(_spec(), mb.SHARDED_FEATURES)
+    assert all(not p.spill_cache and not p.paged and p.g_chunk == 1
+               for p in plans)
+    assert any(p.tile_l < 512 for p in plans)
+    assert any(p.pipeline_depth == 1 for p in plans)
+    # tile_l already at the smallest bucket: the drop rung is skipped
+    small = mb.rung_ladder(_spec(tile_l=32))
+    assert all(p.tile_l == 32 for p in small)
+
+
+def test_plan_memory_picks_first_fitting_rung():
+    spec = _spec()
+    plans = mb.rung_ladder(spec)
+    # unconstrained -> rung 0, today's tile choices
+    p0 = mb.plan_memory(spec, None)
+    assert p0.rung == 0 and p0.fits and p0.tile_l == spec.tile_l
+    assert mb.plan_memory(spec, plans[0].planned_bytes * 10).rung == 0
+    # a budget exactly at rung 2's bytes excludes rungs 0-1
+    chosen = mb.plan_memory(spec, plans[2].planned_bytes)
+    assert chosen.rung == 2 and chosen.fits
+    assert chosen.planned_bytes <= plans[2].planned_bytes
+
+
+def test_plan_memory_best_effort_when_nothing_fits():
+    spec = _spec()
+    plan = mb.plan_memory(spec, 1)
+    assert not plan.fits
+    assert plan.rung == mb.rung_ladder(spec)[-1].rung
+
+
+def test_plan_memory_rung_start_and_exhaustion():
+    spec = _spec()
+    assert mb.plan_memory(spec, None, rung_start=2).rung == 2
+    with pytest.raises(mb.MemoryLadderExhausted):
+        mb.plan_memory(spec, None, rung_start=99)
+
+
+def test_dtype_narrowing_helpers():
+    assert mb.device_ptr_nbytes(2 ** 31 - 1) == 4
+    assert mb.device_ptr_nbytes(2 ** 31) == 8
+    assert mb.narrow_len_dtype(2 ** 15 - 1) is np.int16
+    assert mb.narrow_len_dtype(2 ** 15) is np.int32
+
+
+# ------------------------------------------------------- paged adjacency
+
+def _synthetic_csr(n=200_000, deg=4, seed=0):
+    rng = np.random.default_rng(seed)
+    indptr = (np.arange(n + 1, dtype=np.int64) * deg)
+    indices = rng.integers(0, n, size=n * deg).astype(np.int32)
+    return indptr, indices
+
+
+def test_paged_gather_matches_dense_reference():
+    indptr, indices = _synthetic_csr()
+    stats = hb.BatchedStats()
+    pa = mb.PagedAdjacency((indptr, indices), page_bytes=1, stats=stats)
+    assert pa.n_chunks > 4                    # floor forces real paging
+    rng = np.random.default_rng(1)
+    ids = rng.integers(0, pa.n, size=64).astype(np.int32)
+    ids[::7] = -1                             # pad rows stay all -1
+    tile_l = 16
+    got = np.asarray(pa.gather(ids, tile_l))
+    want = np.full((ids.size, tile_l), -1, np.int32)
+    for i, v in enumerate(ids):
+        if v < 0:
+            continue
+        row = indices[indptr[v]:indptr[v + 1]][:tile_l]
+        want[i, :row.size] = row
+    np.testing.assert_array_equal(got, want)
+    assert stats.page_uploads > 0 and stats.page_bytes > 0
+
+
+def test_paged_lru_hits_and_evictions():
+    indptr, indices = _synthetic_csr()
+    stats = hb.BatchedStats()
+    pa = mb.PagedAdjacency((indptr, indices), page_bytes=1, stats=stats)
+    # touch every chunk: more chunks than fit under the byte budget
+    ids = (np.arange(pa.n_chunks) * pa.chunk_rows).astype(np.int32)
+    pa.gather(ids, 8)
+    assert stats.page_uploads == pa.n_chunks
+    assert stats.page_evictions > 0
+    assert pa.resident_bytes <= pa.page_bytes
+    # re-gathering the most recent chunk is a hit, not an upload
+    up = stats.page_uploads
+    pa.gather(ids[-1:], 8)
+    assert stats.page_uploads == up and stats.page_hits >= 1
+
+
+# -------------------------------------------------- engine-level contract
+
+def test_unconstrained_budget_is_rung0_golden(hg, base_d1):
+    """mem_budget='none' is an explicit unconstrained run: rung 0,
+    today's tile choices, bit-identical output."""
+    a, st = hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8, pipeline_depth=1,
+                               mem_budget="none"), return_stats=True)
+    assert _digest(a) == _digest(base_d1)
+    assert st.plan_rung == 0 and st.mem_retries == 0
+    assert st.peak_bytes_planned > 0
+    assert st.peak_bytes_observed > 0
+
+
+def test_tight_budget_forces_rung_without_degradation(hg, base_d2):
+    """The ISSUE acceptance bar: a budget below rung 0's planned bytes
+    forces >= 1 re-tiling rung, the engine completes WITHOUT engine
+    degradation, and the result matches the unconstrained run
+    bit-identically (so km1 matches exactly too)."""
+    base_a, base_st = base_d2
+    budget = int(base_st.peak_bytes_planned) - 1
+    a, st = hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8, mem_budget=budget),
+        return_stats=True)
+    assert st.plan_rung >= 1                  # planned below rung 0
+    assert st.mem_retries == 0                # planning, not crashing
+    assert st.fallbacks == 0                  # same engine throughout
+    assert _digest(a) == _digest(base_a)
+    assert metrics.k_minus_1(hg, a) == metrics.k_minus_1(hg, base_a)
+
+
+@pytest.mark.parametrize("rung", [1, 2, 3, 4, 5])
+def test_forced_rungs_bit_exact(hg, base_d2, base_d1, rung):
+    """Every rung of the ladder reproduces its reference exactly:
+    rungs 1-2 keep the depth-2 schedule (phase chunking and the tile_l
+    drop are bit-exact on this graph), rungs 3-5 clamp the pipeline to
+    depth 1 and land on the lock-step baseline."""
+    a, st = hb._run_pipeline(
+        hg, 5, SuperstepParams(seed=0, t=8, rows=8), mem_rung=rung)
+    want = base_d2[0] if rung <= 2 else base_d1
+    assert _digest(a) == _digest(want), rung
+    assert st.stats.plan_rung == rung
+    if rung == 5:
+        assert st.stats.page_uploads > 0
+
+
+def test_paged_rung_runs_csr_exceeding_budget(hg, base_d1):
+    """A budget smaller than the CSR image itself: only the paged rung
+    can host the graph, and it still reproduces the lock-step result."""
+    a, st = hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8, mem_budget="24KB"),
+        return_stats=True)
+    assert st.plan_rung == 5
+    assert st.page_uploads > 0
+    assert _digest(a) == _digest(base_d1)
+
+
+def test_injected_and_real_oom_converge(hg, base_d2, monkeypatch):
+    """The satellite contract: a real RESOURCE_EXHAUSTED at the upload
+    site and the injected non-fatal 'oom' fault take the SAME recovery
+    path — one same-engine retry at rung 1 — and converge on identical
+    assignments (which also equal the fault-free run's)."""
+    inj, sti = hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8, fault_plan="oom"),
+        return_stats=True)
+
+    calls = {"n": 0}
+    real = Hypergraph.device_adjacency
+
+    def failing_once(self, *a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError(
+                "RESOURCE_EXHAUSTED: Out of memory allocating "
+                "9999999999 bytes")
+        return real(self, *a, **kw)
+
+    monkeypatch.setattr(Hypergraph, "device_adjacency", failing_once)
+    rea, str_ = hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8), return_stats=True)
+
+    assert sti.mem_retries == 1 == str_.mem_retries
+    assert sti.plan_rung == str_.plan_rung == 1
+    assert _digest(inj) == _digest(rea) == _digest(base_d2[0])
+
+
+def test_oom_at_dispatch_warm_starts_next_rung(hg):
+    """'oom@N' pins the allocation failure to dispatch ordinal N: the
+    retry warm-starts from the partial assignment and still delivers a
+    complete, balanced partition on the same engine."""
+    a, st = hype_superstep_partition(
+        hg, 5, SuperstepParams(seed=0, t=8, fault_plan="oom@2"),
+        return_stats=True)
+    assert st.mem_retries == 1 and st.plan_rung >= 1
+    assert st.fallbacks == 0
+    assert (a >= 0).all() and (a < 5).all()
+    sizes = np.bincount(a, minlength=5)
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_oom_ladder_exhaustion_escalates(hg):
+    """One injected OOM per rung: after the last rung the engine raises
+    UnrecoverableFault (for the engine-degradation ladder), never an
+    infinite retry loop."""
+    n_rungs = len(mb.rung_ladder(mb.MemSpec(
+        n=hg.n, adj_pins=1, k=5, rows=8, pool_cap=64, t=8,
+        tile_l=512, pipeline_depth=2)))
+    plan = resilience.FaultPlan(
+        [resilience.FaultSpec("oom", 0) for _ in range(n_rungs)])
+    with pytest.raises(resilience.UnrecoverableFault,
+                       match="memory rungs exhausted"):
+        hype_superstep_partition(
+            hg, 5, SuperstepParams(seed=0, t=8, fault_plan=plan))
+    assert not plan.specs                      # every rung consumed one
+
+
+def test_mem_budget_knob_via_partition(hg, base_d1):
+    """The registered knob path: mem_budget forwarded through
+    partition() reaches the engine's planner."""
+    a = partition_api.partition(hg, 5, "hype_superstep", seed=0, t=8,
+                                mem_budget="24KB")
+    assert _digest(a) == _digest(base_d1)

@@ -95,6 +95,46 @@ def test_registered_knobs_match_engine_signatures():
         for knob in ("snapshot_every", "snapshot_dir", "resume",
                      "fault_plan", "max_retries", "keep_last"):
             assert knob in method_knobs(method), (method, knob)
+    # the device-memory budget knob (DESIGN.md §4g) is registered on the
+    # device-resident engines only — host engines have no device image
+    for method in ("hype_superstep", "hype_sharded"):
+        assert "mem_budget" in method_knobs(method), method
+    assert "mem_budget" not in method_knobs("hype_batched")
+
+
+def test_partition_knobs_match_signatures():
+    """Method-independent knobs in ``PARTITION_KNOBS`` must exist as
+    keyword parameters of ``partition`` AND ``partition_resilient``
+    with defaults equal to the registered value — the hard-coded
+    threshold can never silently drift from the documented knob."""
+    from repro.core.partition_api import PARTITION_KNOBS, partition_resilient
+
+    assert "auto_validate_max_n" in PARTITION_KNOBS
+    for fn in (partition, partition_resilient):
+        sig = inspect.signature(fn)
+        for name, default in PARTITION_KNOBS.items():
+            assert name in sig.parameters, (fn.__name__, name)
+            par = sig.parameters[name]
+            assert par.kind is inspect.Parameter.KEYWORD_ONLY, name
+            assert par.default == default, (fn.__name__, name)
+
+
+def test_auto_validate_threshold_knob(hg):
+    """auto_validate_max_n gates the "auto" sweep: a corrupt graph slips
+    past a tiny threshold (validation skipped) but is caught by the
+    default, and validate=True overrides the threshold entirely."""
+    bad = dataclasses.replace(hg, v2e_indptr=hg.v2e_indptr.copy())
+    bad.v2e_indptr[-1] += 1                      # CSR corruption
+    # threshold below n: auto skips validation, random engine completes
+    a = partition(bad, 4, "random", seed=0, auto_validate_max_n=10)
+    assert a.shape == (hg.n,)
+    # default threshold: auto validates and rejects the corruption
+    with pytest.raises(ValueError):
+        partition(bad, 4, "random", seed=0)
+    # explicit validate=True ignores the threshold
+    with pytest.raises(ValueError):
+        partition(bad, 4, "random", seed=0, validate=True,
+                  auto_validate_max_n=10)
 
 
 def test_registered_knobs_are_forwarded(hg):

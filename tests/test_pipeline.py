@@ -9,7 +9,7 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import metrics
+from repro.core import metrics, resilience
 from repro.core.hype_batched import (ShardedParams, SuperstepParams,
                                      _SuperstepState,
                                      hype_sharded_partition,
@@ -175,7 +175,10 @@ def test_take_delta_cap_overflow():
     """The leftover path must preserve FIFO order and dtypes (int64 ids,
     int32 phases) across an overflowing drain."""
     hg = powerlaw_hypergraph(120, 90, seed=3, max_edge=12, max_degree=8)
-    st = _SuperstepState(hg, 4, SuperstepParams(seed=0))
+    # empty plan: these unit tests drive host-side state directly, so
+    # an env-injected fault (chaos/low-memory CI) must not fire here
+    st = _SuperstepState(hg, 4, SuperstepParams(
+        seed=0, fault_plan=resilience.FaultPlan()))
     st.assign_now(np.array([5, 7, 9]), 1)
     st.assign_now(np.array([11, 13]), 2)
     ids, vals = st.take_delta(3)
@@ -196,7 +199,10 @@ def test_take_delta_cap_overflow():
 
 def test_take_delta_exact_cap_boundary():
     hg = powerlaw_hypergraph(120, 90, seed=3, max_edge=12, max_degree=8)
-    st = _SuperstepState(hg, 4, SuperstepParams(seed=0))
+    # empty plan: these unit tests drive host-side state directly, so
+    # an env-injected fault (chaos/low-memory CI) must not fire here
+    st = _SuperstepState(hg, 4, SuperstepParams(
+        seed=0, fault_plan=resilience.FaultPlan()))
     st.assign_now(np.array([1, 2, 3]), 0)
     ids, vals = st.take_delta(3)        # exactly cap: no leftover
     np.testing.assert_array_equal(ids, [1, 2, 3])

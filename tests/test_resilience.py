@@ -325,10 +325,22 @@ def test_retry_budget_exhaustion_is_unrecoverable(hg):
     assert a_plan.fired and not a_plan.specs
 
 
-def test_oom_at_upload_is_unrecoverable(hg):
+def test_oom_at_upload_recovers_on_same_engine(hg):
+    # Non-fatal OOM at upload is no longer unrecoverable: the memory
+    # rung ladder (DESIGN.md §4g) retries the SAME engine at a smaller
+    # plan and the result matches the fault-free run bit-identically.
+    base = hype_superstep_partition(hg, 16, SuperstepParams(seed=0))
+    a, st = hype_superstep_partition(hg, 16, SuperstepParams(
+        seed=0, fault_plan="oom"), return_stats=True)
+    assert _digest(a) == _digest(base)
+    assert st.mem_retries == 1 and st.plan_rung >= 1
+
+
+def test_fatal_oom_at_upload_is_unrecoverable(hg):
+    # Only oom:fatal abandons the engine for the degradation ladder.
     with pytest.raises(resilience.UnrecoverableFault, match="OOM"):
         hype_superstep_partition(hg, 16, SuperstepParams(
-            seed=0, fault_plan="oom"))
+            seed=0, fault_plan="oom:fatal"))
 
 
 # ------------------------------------------------- chaos (env-driven)
@@ -401,7 +413,10 @@ def test_abort_via_injected_exception_leaves_no_debris(hg, monkeypatch):
 def test_superstep_interpret_not_cached(hg, monkeypatch):
     """Engine state must re-read pallas_interpret() per call — a cached
     value would pin the whole run to the mode active at __init__."""
-    st = _SuperstepState(hg, 4, SuperstepParams(seed=0))
+    # empty plan: state is constructed directly, so an env-injected
+    # fault (chaos/low-memory CI) must not fire at __init__
+    st = _SuperstepState(hg, 4, SuperstepParams(
+        seed=0, fault_plan=resilience.FaultPlan()))
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
     assert st.interpret is True
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
