@@ -16,7 +16,7 @@ from repro.core.hype import HypeParams, hype_partition
 from repro.core.hype_jax import hype_parallel_partition
 from repro.core.minmax import random_partition
 from repro.data.synthetic import powerlaw_hypergraph
-from repro.dist.partitioned_gnn import (build_partitioned_graph,
+from repro.placement.partitioned_gnn import (build_partitioned_graph,
                                         graph_to_hypergraph)
 
 from .common import emit
@@ -62,7 +62,7 @@ def run_placement_traffic(n=4000, avg_deg=8, k=8):
 def run_embedding_placement(vocab=8192, n_queries=4000, bag=16, k=8):
     """Shards-touched / remote fraction under affinity routing (each
     query served by the shard owning most of its rows): HYPE vs hash."""
-    from repro.dist.partitioned_embedding import (RowPlacement,
+    from repro.placement.partitioned_embedding import (RowPlacement,
                                                   partition_rows_hype)
     rng = np.random.default_rng(0)
     # co-access pattern with popularity skew and correlated rows

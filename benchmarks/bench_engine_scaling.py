@@ -28,6 +28,8 @@ from repro.core.hype_batched import (BatchedParams, ShardedParams,
                                      hype_batched_partition,
                                      hype_sharded_partition,
                                      hype_superstep_partition)
+from repro.core.hype_stream import (StreamParams, apply_updates,
+                                    hype_stream_partition)
 from repro.data.synthetic import powerlaw_hypergraph
 
 from .common import QUICK, dataset, emit
@@ -46,6 +48,8 @@ REFINE_K = 32            # refinement axis: the k/t acceptance row gets a
 REFINE_T = 16            # refined sibling (engine suffix `_r{passes}`)
 REFINE_PASSES = 4        # kway_refine post-passes for the refined rows
 JAX_N = 300              # hype_jax validation row size
+STREAM_MB = 64           # streaming-engine micro-batch for the rows
+STREAM_OPS = 120         # op-log length for the update-throughput row
 
 
 def _run(fn, *args, **kw):
@@ -77,7 +81,7 @@ def run():
     meta = {"quick": QUICK, "repeats": REPEATS,
             "adjacency_build_s": {}, "speedups": {},
             "superstep_stats": {}, "sharded_stats": {}, "pipeline": {},
-            "refine": {}}
+            "refine": {}, "streaming": {}}
 
     # warm the Pallas interpret traces once (process-wide)
     import jax
@@ -100,6 +104,28 @@ def run():
             a, dt = _run(hype_partition, hg, k, HypeParams(seed=0))
             base = _row(name, hg, k, "hype", dt, a)
             rows.append(base)
+            # streaming axis (DESIGN.md §4h): the one-pass engine vs
+            # the offline base — km1 ratio must stay under the
+            # documented STREAM_KM1_BOUND (compare_baseline gates it),
+            # vertices/sec is the sustained-ingest headline
+            (a_s, st_s), dt_s = _run(
+                hype_stream_partition, hg, k,
+                StreamParams(seed=0, micro_batch=STREAM_MB),
+                return_stats=True)
+            rec_s = _row(name, hg, k, "hype_stream", dt_s, a_s,
+                         {"micro_batch": STREAM_MB,
+                          "speedup_vs_hype": round(
+                              base["runtime_s"] / max(dt_s, 1e-9), 2),
+                          "km1_ratio_vs_hype": round(
+                              rec_ratio(a_s, base, hg), 4)})
+            rows.append(rec_s)
+            meta["streaming"][f"{name}_k{k}"] = {
+                "micro_batch": STREAM_MB,
+                "micro_batches": st_s.micro_batches,
+                "vertices_per_s": round(st_s.vertices_per_s),
+                "host_to_device_bytes": st_s.host_to_device_bytes,
+                "km1_ratio_vs_hype": rec_s["km1_ratio_vs_hype"],
+            }
             batched_t8_s = None
             superstep_ref = None
             for t in TS:
@@ -383,6 +409,48 @@ def run():
             metrics.k_minus_1(hg_m, a_mp) == km1_m0,
     }
     meta["memory"] = mem_meta
+
+    # streaming update-throughput axis (DESIGN.md §4h): replay a mixed
+    # insert/delete op log through apply_updates on a live stream state
+    # — updates/sec sustained is the incremental-maintenance headline,
+    # and the exact-decrement invariant is re-checked after the replay
+    from repro.core.hype_stream import recompute_sketch
+
+    hg_s = dataset("github")
+    _, state = hype_stream_partition(
+        hg_s, PIPELINE_K, StreamParams(seed=0, micro_batch=STREAM_MB),
+        return_state=True)
+    rng = np.random.default_rng(7)
+    ops = []
+    for i in range(STREAM_OPS):
+        kind = i % 4
+        if kind == 0:
+            ops.append(("remove_vertex", int(rng.integers(0, hg_s.n))))
+        elif kind == 1:
+            ops.append(("remove_edge", int(rng.integers(0, hg_s.m))))
+        elif kind == 2:
+            pins = rng.integers(0, hg_s.n, size=4)
+            ops.append(("add_edge", sorted({int(x) for x in pins})))
+        else:
+            es = rng.integers(0, hg_s.m, size=3)
+            ops.append(("add_vertex", sorted({int(x) for x in es})))
+    t0 = time.perf_counter()
+    apply_updates(state, ops)
+    dt_u = time.perf_counter() - t0
+    sk, sz = recompute_sketch(state.hg, state.assignment, PIPELINE_K,
+                              state.params.sketch_bits)
+    meta["streaming"]["updates"] = {
+        "dataset": "github", "k": PIPELINE_K, "ops": len(ops),
+        "updates_per_s": round(len(ops) / max(dt_u, 1e-9)),
+        "readmitted": state.stats.readmitted,
+        "refine_moves": state.stats.refine_moves,
+        "rebalance_moves": state.stats.rebalance_moves,
+        "sketch_invariant_exact": bool(
+            (sk == state.sketch).all() and (sz == state.sizes).all()),
+    }
+    emit(f"engine/github/k{PIPELINE_K}/hype_stream_updates",
+         dt_u * 1e6 / max(len(ops), 1),
+         f"updates_per_s={meta['streaming']['updates']['updates_per_s']}")
 
     # small-n row including the jittable engines (validation scale)
     from repro.core.hype_jax import (hype_jax_partition,

@@ -16,6 +16,14 @@ guarded twice:
   ``KM1_REFINED_TOL`` (2%) over its baseline fails, so the quality the
   refinement subsystem bought stays *enforced*, not just measured.
 
+The streaming engine has its own gate (``check_streaming``): every
+``meta["streaming"]`` row of the *current* run with a
+``km1_ratio_vs_hype`` must stay under ``STREAM_KM1_BOUND`` (the
+documented one-pass bound of DESIGN.md §4h — a single pass is allowed
+to trail offline quality, but boundedly), and the update-throughput row
+must report an exact sketch invariant. Absolute, not baseline-relative:
+the bound holds from the first run that has streaming rows.
+
 Pure stdlib — runnable before dependencies are installed.
 """
 from __future__ import annotations
@@ -26,12 +34,47 @@ import sys
 MAX_REGRESSION = 0.25      # fraction of baseline speedup a row may lose
 KM1_BOUND = 1.10           # quality acceptance bound (ISSUE 2)
 KM1_REFINED_TOL = 0.02     # max relative km1 regression on refined rows
+STREAM_KM1_BOUND = 2.0     # one-pass bound; = core.hype_stream's constant
 
 
 def load_speedups(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
     return payload.get("meta", {}).get("speedups", {})
+
+
+def load_streaming(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("meta", {}).get("streaming", {})
+
+
+def check_streaming(streaming: dict) -> int:
+    """Absolute quality gate on the current run's streaming rows."""
+    failures = []
+    for key in sorted(streaming):
+        row = streaming[key]
+        if "km1_ratio_vs_hype" in row:
+            ratio = float(row["km1_ratio_vs_hype"])
+            status = "ok"
+            if ratio > STREAM_KM1_BOUND:
+                status = "QUALITY"
+                failures.append(
+                    f"streaming {key}: km1_ratio_vs_hype {ratio} > "
+                    f"one-pass bound {STREAM_KM1_BOUND}")
+            print(f"    streaming {key}: km1 {ratio}  "
+                  f"v/s {row.get('vertices_per_s', '-')}  [{status}]")
+        if "sketch_invariant_exact" in row \
+                and not row["sketch_invariant_exact"]:
+            failures.append(
+                f"streaming {key}: sketch invariant broke during the "
+                "update-throughput replay")
+    if failures:
+        print("\nFAIL: streaming gate:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    return 0
 
 
 def compare(base: dict, cur: dict) -> int:
@@ -93,10 +136,12 @@ def main(argv) -> int:
         return 2
     base = load_speedups(argv[1])
     cur = load_speedups(argv[2])
+    stream_rc = check_streaming(load_streaming(argv[2]))
     if not base:
-        print("baseline has no meta.speedups — nothing to compare; OK")
-        return 0
-    return compare(base, cur)
+        print("baseline has no meta.speedups — nothing to compare; "
+              + ("OK" if stream_rc == 0 else "streaming gate FAILED"))
+        return stream_rc
+    return compare(base, cur) or stream_rc
 
 
 if __name__ == "__main__":

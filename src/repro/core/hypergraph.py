@@ -241,6 +241,83 @@ class Hypergraph:
         return dev
 
     # ------------------------------------------------------------------ #
+    # Delta / append APIs (streaming engine, core/hype_stream.py)
+    # ------------------------------------------------------------------ #
+    def _pin_arrays(self):
+        """Parallel ``(vertex_ids, edge_ids)`` int64 pin arrays."""
+        edge_ids = np.repeat(np.arange(self.m, dtype=np.int64),
+                             self.edge_sizes)
+        return self.e2v_indices.astype(np.int64), edge_ids
+
+    def with_edges(self, new_edges: Sequence[Iterable[int]],
+                   n: int | None = None) -> "Hypergraph":
+        """Append hyperedges; returns a new graph with ``m + len(new_edges)``.
+
+        ``new_edges`` is a sequence of pin iterables over *existing*
+        vertex ids (or ids below ``n`` when growing the vertex count).
+        Edge ids of the incumbent graph are preserved — appended edges
+        take ids ``m, m+1, ...`` — so per-edge bookkeeping (the stream
+        engine's sketch buckets) stays valid across the append.
+        """
+        vids, eids = self._pin_arrays()
+        add_v, add_e = [], []
+        for i, pins in enumerate(new_edges):
+            for v in pins:
+                add_v.append(int(v))
+                add_e.append(self.m + i)
+        vids = np.concatenate([vids, np.asarray(add_v, dtype=np.int64)])
+        eids = np.concatenate([eids, np.asarray(add_e, dtype=np.int64)])
+        return Hypergraph.from_pins(n if n is not None else self.n,
+                                    self.m + len(new_edges), vids, eids)
+
+    def with_vertices(self, memberships: Sequence[Iterable[int]]
+                      ) -> "Hypergraph":
+        """Append vertices; returns a new graph with ``n + len(memberships)``.
+
+        Each entry lists the *existing* hyperedge ids the new vertex
+        joins (possibly empty — isolated vertices are legal). Incumbent
+        vertex and edge ids are preserved; appended vertices take ids
+        ``n, n+1, ...``.
+        """
+        vids, eids = self._pin_arrays()
+        add_v, add_e = [], []
+        for i, edges in enumerate(memberships):
+            for e in edges:
+                add_v.append(self.n + i)
+                add_e.append(int(e))
+        vids = np.concatenate([vids, np.asarray(add_v, dtype=np.int64)])
+        eids = np.concatenate([eids, np.asarray(add_e, dtype=np.int64)])
+        return Hypergraph.from_pins(self.n + len(memberships), self.m,
+                                    vids, eids)
+
+    def without_edges(self, edge_ids: Iterable[int]) -> "Hypergraph":
+        """Drop all pins of the given hyperedges; ids stay stable.
+
+        The edge *slots* are kept (they become empty hyperedges), so no
+        surviving edge is renumbered — deletions never invalidate ids
+        held by incremental state.
+        """
+        drop = np.zeros(self.m, dtype=bool)
+        drop[np.asarray(list(edge_ids), dtype=np.int64)] = True
+        vids, eids = self._pin_arrays()
+        keep = ~drop[eids]
+        return Hypergraph.from_pins(self.n, self.m, vids[keep],
+                                    eids[keep])
+
+    def without_vertices(self, vertex_ids: Iterable[int]) -> "Hypergraph":
+        """Drop all pins of the given vertices; ids stay stable.
+
+        The vertex *slots* are kept (they become isolated vertices), so
+        no surviving vertex is renumbered.
+        """
+        drop = np.zeros(self.n, dtype=bool)
+        drop[np.asarray(list(vertex_ids), dtype=np.int64)] = True
+        vids, eids = self._pin_arrays()
+        keep = ~drop[vids]
+        return Hypergraph.from_pins(self.n, self.m, vids[keep],
+                                    eids[keep])
+
+    # ------------------------------------------------------------------ #
     # Transformations
     # ------------------------------------------------------------------ #
     def flip(self) -> "Hypergraph":

@@ -362,6 +362,72 @@ def plan_memory(spec: MemSpec, budget: Optional[int],
     return plans[-1]
 
 
+# ------------------------------------------------------- streaming planner
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Size inputs of the streaming engine's byte model (DESIGN.md §4h)."""
+    n: int              # vertices
+    k: int              # partitions
+    micro_batch: int    # vertices per device call
+    sketch_bits: int    # sketch table is (k, 2**sketch_bits) int32
+    s: int              # fringe slots per partition
+    tile_l: int         # neighbor-tile gather width (L bucket)
+
+
+def estimate_stream_bytes(spec: StreamSpec, *,
+                          micro_batch: Optional[int] = None,
+                          tile_l: Optional[int] = None) -> int:
+    """Planned peak device bytes of one streaming micro-batch step.
+
+    Pure and monotone non-decreasing in every size input, like
+    ``estimate_plan_bytes``. Counts the resident sketch + sizes image,
+    the per-batch edge/neighbor tiles, and the kernel's (k, mb, L)
+    broadcast of the neighbor tile (the dominant transient of the fused
+    fringe scoring), plus the small fringe/score buffers.
+    """
+    mb = spec.micro_batch if micro_batch is None else micro_batch
+    tl = spec.tile_l if tile_l is None else tile_l
+    k, s = spec.k, spec.s
+    image = k * (1 << spec.sketch_bits) * 4 + k * 4     # sketch + sizes
+    tiles = 2 * mb * tl * 4                             # edge + nbr tile
+    kernel = k * mb * tl * 4 + k * mb * 4 + k * s * 4   # broadcast+scores
+    out = mb * 4                                        # chosen parts
+    return image + tiles + kernel + out
+
+
+def plan_stream_memory(spec: StreamSpec,
+                       budget: Optional[int]) -> Tuple[int, int, int, bool]:
+    """Pick the streaming rung: halve ``micro_batch``, then drop ``tile_l``.
+
+    Returns ``(micro_batch, tile_l, planned_bytes, fits)``. Rung 0 is
+    the caller's own plan (returned untouched when the budget is None
+    or already met — the unconstrained path stays bit-identical).
+    Subsequent rungs halve the micro-batch down to 1, then walk
+    ``tile_l`` down the ``L_BUCKETS`` ladder; like ``plan_memory``, an
+    exhausted ladder returns the smallest configuration best-effort
+    with ``fits=False``.
+    """
+    mb, tl = spec.micro_batch, spec.tile_l
+    planned = estimate_stream_bytes(spec)
+    if budget is None or planned <= budget:
+        return mb, tl, planned, True
+    while mb > 1:
+        mb = max(1, mb // 2)
+        planned = estimate_stream_bytes(spec, micro_batch=mb)
+        if planned <= budget:
+            return mb, tl, planned, True
+    while True:
+        lower = [b for b in scoring.L_BUCKETS if b < tl]
+        if not lower:
+            break
+        tl = lower[-1]
+        planned = estimate_stream_bytes(spec, micro_batch=mb, tile_l=tl)
+        if planned <= budget:
+            return mb, tl, planned, True
+    return mb, tl, planned, False
+
+
 # ----------------------------------------------------------- paged image
 
 _MIN_PAGE_BYTES = 1 << 18       # floor so at least two chunks stay resident

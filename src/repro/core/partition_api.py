@@ -90,6 +90,19 @@ METHOD_INFO: Dict[str, dict] = {
                   "keep_last", "resume", "fault_plan", "max_retries",
                   "mem_budget"),
     },
+    "hype_stream": {
+        "desc": "single-pass streaming HYPE: micro-batched arrivals "
+                "scored against a partition sketch + fringe kernel "
+                "with a FREIGHT-style balance penalty; apply_updates "
+                "mutates assignments incrementally (DESIGN.md §4h)",
+        # hard ceil(n/k) capacity cap, no final rebalance: the last
+        # arrivals can leave up to a k-wide size gap
+        "balance_slack": lambda n, k: k,
+        "knobs": ("micro_batch", "sketch_bits", "update_radius", "s",
+                  "balance_alpha", "fringe_weight", "order",
+                  "snapshot_every", "snapshot_dir", "keep_last",
+                  "resume", "fault_plan", "max_retries", "mem_budget"),
+    },
     "hype_weighted": {
         "desc": "numpy HYPE with degree-weighted balancing (HypeParams"
                 "(balance='weighted'))",
@@ -255,6 +268,9 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
     if method == "hype_sharded":
         return hype_sharded_partition(
             hg, k, ShardedParams(seed=seed, **kw))
+    if method == "hype_stream":
+        from .hype_stream import StreamParams, hype_stream_partition
+        return hype_stream_partition(hg, k, StreamParams(seed=seed, **kw))
     if method == "hype_weighted":
         return hype_partition(hg, k, HypeParams(seed=seed, balance="weighted", **kw))
     if method == "minmax_nb":

@@ -214,7 +214,8 @@ def refine_kway(hg: Hypergraph, assignment: np.ndarray, k: int,
                 lo: Optional[np.ndarray] = None,
                 hi: Optional[np.ndarray] = None,
                 cand_cap: int = 8192, tile_rows: int = 4096,
-                use_device: Optional[bool] = None
+                use_device: Optional[bool] = None,
+                candidates: Optional[np.ndarray] = None
                 ) -> Tuple[np.ndarray, RefineStats]:
     """Run up to ``passes`` boundary-refinement passes; see module doc.
 
@@ -228,6 +229,11 @@ def refine_kway(hg: Hypergraph, assignment: np.ndarray, k: int,
     ``use_device=None`` screens on device whenever the adjacency image
     exists, the host twin otherwise; ``passes <= 0`` or ``k <= 1``
     return the input unchanged (same array, zero stats).
+
+    ``candidates`` restricts every pass to the given vertex ids: the
+    cut boundary is intersected with them before screening, so only
+    those vertices can move (the streaming engine's bounded-radius
+    re-expansion — dirtied neighborhoods only, never the whole graph).
     """
     stats = RefineStats()
     if passes <= 0 or k <= 1 or hg.n == 0:
@@ -275,8 +281,13 @@ def refine_kway(hg: Hypergraph, assignment: np.ndarray, k: int,
         pend_ids = np.empty(0, dtype=np.int64)
         pend_vals = np.empty(0, dtype=np.int32)
 
+    if candidates is not None:
+        candidates = np.unique(np.asarray(candidates, dtype=np.int64))
     for _ in range(passes):
         boundary = _cut_boundary(hg, assignment)
+        if candidates is not None:
+            boundary = np.intersect1d(boundary, candidates,
+                                      assume_unique=True)
         if boundary.size == 0:
             break
         stats.boundary_rows += int(boundary.size)

@@ -1020,6 +1020,117 @@ def refine_gains_device(indptr, indices, assign, delta_ids, delta_vals,
         tile_l=tile_l, k=k, interpret=interpret)
 
 
+# ------------------------------------------------- streaming sketch program
+# Device program of the single-pass streaming engine (core/hype_stream.py,
+# DESIGN.md §4h). One jitted call per micro-batch: the fused
+# ``hype_score_select`` kernel computes the batch's fringe-intersection
+# counts against all k partition fringes at once, then a ``fori_loop``
+# commits the batch *sequentially* — each vertex scores its k targets
+# against the live partition sketch (per-partition hashed edge-presence
+# counts) with a FREIGHT-style balance penalty, and its admission updates
+# the sketch and sizes in the loop carry. Sketch and sizes are DONATED
+# and stay device-resident across micro-batches; only the (mb, L) tiles
+# go down and the (mb,) chosen partitions come back. At micro_batch=1
+# the schedule is exactly the sequential streaming algorithm, which is
+# what the numpy oracle in tests/test_hype_stream.py replicates
+# bit-for-bit (same f32 expression, same first-max tie break).
+
+# Fibonacci multiplicative hashing: bucket = top ``sketch_bits`` bits of
+# (id * 2654435761) in uint32 arithmetic — identical on host and device.
+STREAM_HASH_MULT = 2654435761
+
+
+def stream_bucket(edge_ids: np.ndarray, sketch_bits: int) -> np.ndarray:
+    """Host twin of the device bucket hash (exactly the same uint32 math).
+
+    Negative (pad) ids hash like any other bits — callers mask validity
+    separately, the hash itself never branches.
+    """
+    ids = np.asarray(edge_ids).astype(np.uint32)
+    h = ids * np.uint32(STREAM_HASH_MULT)
+    return (h >> np.uint32(32 - sketch_bits)).astype(np.int32)
+
+
+@_functools.lru_cache(maxsize=None)
+def _stream_program(sketch_bits: int, interpret: bool):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.hype_score.ops import hype_score_select
+
+    n_buckets = 1 << sketch_bits
+    shift = jnp.uint32(32 - sketch_bits)
+    mult = jnp.uint32(STREAM_HASH_MULT)
+
+    @_functools.partial(jax.jit, donate_argnums=(3, 4))
+    def step(edge_tile, nbr_tile, fringe, sketch, sizes, valid_row,
+             alpha, fringe_w, inv_target, cap):
+        mb = edge_tile.shape[0]
+        k = sketch.shape[0]
+        e_valid = edge_tile >= 0
+        buckets = ((edge_tile.astype(jnp.uint32) * mult)
+                   >> shift).astype(jnp.int32)
+        # Fringe-intersection counts via the fused Pallas kernel: the
+        # kernel scores #valid - #(valid ∩ fringe_p) per phase, so the
+        # intersection count is valid_cnt - score — exact integers in
+        # float32. The pool is a single +inf slot (selection unused).
+        nbrs = jnp.broadcast_to(nbr_tile[None],
+                                (k,) + nbr_tile.shape)
+        bias = jnp.zeros((k, mb), jnp.float32)
+        prev = jnp.full((k, 1), jnp.inf, jnp.float32)
+        kscore, _, _ = hype_score_select(nbrs, fringe, bias, prev,
+                                         select_k=1,
+                                         interpret=interpret)
+        valid_cnt = (nbr_tile >= 0).sum(axis=1).astype(jnp.float32)
+        fcnt = valid_cnt[:, None] - kscore.T          # (mb, k) f32
+
+        def body(i, carry):
+            parts, sketch, sizes = carry
+            ev = e_valid[i]
+            brow = buckets[i]
+            pres = sketch[:, brow] > 0                # (k, Le)
+            conn = jnp.sum(pres & ev[None, :],
+                           axis=1).astype(jnp.float32)
+            score = conn + fringe_w * fcnt[i] \
+                - alpha * sizes.astype(jnp.float32) * inv_target
+            score = jnp.where(sizes >= cap, -jnp.inf, score)
+            p = jnp.argmax(score).astype(jnp.int32)   # first-max tie break
+            upd = valid_row[i]
+            sizes = sizes.at[p].add(jnp.where(upd, 1, 0))
+            bm = jnp.where(ev & upd, brow, n_buckets)
+            sketch = sketch.at[p, bm].add(1, mode="drop")
+            parts = parts.at[i].set(jnp.where(upd, p, -1))
+            return parts, sketch, sizes
+
+        parts0 = jnp.full((mb,), -1, jnp.int32)
+        parts, sketch, sizes = jax.lax.fori_loop(
+            0, mb, body, (parts0, sketch, sizes))
+        return parts, sketch, sizes
+
+    return step
+
+
+def stream_step_device(edge_tile, nbr_tile, fringe, sketch, sizes,
+                       valid_row, *, alpha: float, fringe_w: float,
+                       inv_target: float, cap: int, sketch_bits: int,
+                       interpret: bool):
+    """Run one streaming micro-batch; see ``_stream_program``.
+
+    ``edge_tile`` (mb, Le) int32 incident-edge ids / ``nbr_tile``
+    (mb, Ln) int32 neighbor ids, both -1 padded; ``fringe`` (k, s)
+    int32 per-partition fringes (-1 = empty slot); ``valid_row`` (mb,)
+    bool marks real (non-pad) batch rows. ``sketch`` (k, 2**sketch_bits)
+    int32 and ``sizes`` (k,) int32 are DONATED device arrays — keep the
+    returned pair, never reuse the inputs. Returns
+    ``(parts (mb,) int32, sketch', sizes')``.
+    """
+    import jax.numpy as jnp
+
+    return _stream_program(int(sketch_bits), bool(interpret))(
+        edge_tile, nbr_tile, fringe, sketch, sizes, valid_row,
+        jnp.float32(alpha), jnp.float32(fringe_w),
+        jnp.float32(inv_target), jnp.int32(cap))
+
+
 # --------------------------------------------------------------------- JAX
 # (imported lazily by callers that run on device; keeping the import at
 # module level is fine — the repo is a JAX codebase — but the numpy helpers

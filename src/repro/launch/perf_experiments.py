@@ -100,7 +100,7 @@ def _measure_beta(k=64, scale=20):
     """Boundary fraction of HYPE vs random on a products-like graph
     (scaled 1/scale in nodes, same mean degree)."""
     from repro.core.hype import HypeParams, hype_partition
-    from repro.dist.partitioned_gnn import graph_to_hypergraph
+    from repro.placement.partitioned_gnn import graph_to_hypergraph
     rng = np.random.default_rng(0)
     n = 2_449_029 // scale
     deg = 25

@@ -1,0 +1,9 @@
+"""Distributed-placement consumers of the partitioners.
+
+Two thin model layers that turn an assignment into the quantities a
+distributed runtime actually pays for: halo-exchange rows for
+partitioned GNN aggregation (``partitioned_gnn``) and shard-local
+routing for partitioned embedding tables (``partitioned_embedding``).
+Consumed by ``benchmarks/bench_beyond_paper.py`` and
+``launch/perf_experiments.py``.
+"""

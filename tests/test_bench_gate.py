@@ -1,9 +1,17 @@
-"""The compare_baseline CI gate: speedup-regression logic plus the
-refined-row km1 quality gate added with the refinement subsystem."""
+"""The compare_baseline CI gate: speedup-regression logic, the
+refined-row km1 quality gate added with the refinement subsystem, and
+the absolute streaming gate (one-pass km1 bound + sketch invariant)
+added with the streaming engine. Also a bench collection guard: every
+``benchmarks/bench_*.py`` must import, expose a callable ``run`` and be
+wired into ``benchmarks/run.py`` — a dead stub can't silently rot."""
+import importlib
 import importlib.util
+import json
 import pathlib
 
 import pytest
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
 
 
 @pytest.fixture(scope="module")
@@ -58,3 +66,102 @@ def test_gate_refined_new_row_never_fails(gate):
     base = {"a": _row(4.0, 1.0)}
     cur = {"a": _row(4.0, 1.0), "r": _row(3.0, 0.9, refined=True)}
     assert gate.compare(base, cur) == 0
+
+
+# -- the streaming gate (DESIGN.md §4h) ---------------------------------
+
+def test_streaming_gate_passes_under_bound(gate, capsys):
+    rows = {"github_k8": {"km1_ratio_vs_hype": 1.4,
+                          "vertices_per_s": 5000},
+            "updates": {"updates_per_s": 40.0,
+                        "sketch_invariant_exact": True}}
+    assert gate.check_streaming(rows) == 0
+    assert "[ok]" in capsys.readouterr().out
+
+
+def test_streaming_gate_fails_over_bound(gate, capsys):
+    rows = {"github_k8": {"km1_ratio_vs_hype":
+                          gate.STREAM_KM1_BOUND + 0.1}}
+    assert gate.check_streaming(rows) == 1
+    assert "one-pass bound" in capsys.readouterr().out
+
+
+def test_streaming_gate_fails_on_broken_sketch_invariant(gate, capsys):
+    rows = {"updates": {"updates_per_s": 40.0,
+                        "sketch_invariant_exact": False}}
+    assert gate.check_streaming(rows) == 1
+    assert "sketch invariant" in capsys.readouterr().out
+
+
+def test_streaming_gate_empty_is_ok(gate):
+    assert gate.check_streaming({}) == 0
+
+
+def test_stream_bound_matches_engine_constant(gate):
+    from repro.core.hype_stream import STREAM_KM1_BOUND
+    assert gate.STREAM_KM1_BOUND == STREAM_KM1_BOUND
+
+
+def _bench_json(tmp_path, name, speedups=None, streaming=None):
+    meta = {}
+    if speedups is not None:
+        meta["speedups"] = speedups
+    if streaming is not None:
+        meta["streaming"] = streaming
+    path = tmp_path / name
+    path.write_text(json.dumps({"meta": meta, "rows": []}))
+    return str(path)
+
+
+def test_main_combines_compare_and_streaming_rcs(gate, tmp_path):
+    """main() must fail when EITHER the baseline comparison or the
+    streaming gate fails — a streaming-quality break can't hide behind
+    a clean speedup table, and vice versa."""
+    ok_speed = {"a": _row(4.0, 1.0)}
+    bad_stream = {"g_k8": {"km1_ratio_vs_hype": 9.9}}
+    ok_stream = {"g_k8": {"km1_ratio_vs_hype": 1.2}}
+    base = _bench_json(tmp_path, "base.json", speedups=ok_speed)
+    # clean compare + bad streaming -> fail
+    cur = _bench_json(tmp_path, "cur1.json", speedups=ok_speed,
+                      streaming=bad_stream)
+    assert gate.main(["prog", base, cur]) == 1
+    # clean compare + clean streaming -> pass
+    cur = _bench_json(tmp_path, "cur2.json", speedups=ok_speed,
+                      streaming=ok_stream)
+    assert gate.main(["prog", base, cur]) == 0
+    # regressed compare + clean streaming -> fail
+    cur = _bench_json(tmp_path, "cur3.json",
+                      speedups={"a": _row(1.0, 1.0)},
+                      streaming=ok_stream)
+    assert gate.main(["prog", base, cur]) == 1
+    # no baseline speedups: only the streaming gate decides
+    empty = _bench_json(tmp_path, "empty.json")
+    cur = _bench_json(tmp_path, "cur4.json", streaming=bad_stream)
+    assert gate.main(["prog", empty, cur]) == 1
+    cur = _bench_json(tmp_path, "cur5.json", streaming=ok_stream)
+    assert gate.main(["prog", empty, cur]) == 0
+
+
+# -- bench collection guard ---------------------------------------------
+
+def _bench_modules():
+    return sorted(p.stem for p in BENCH_DIR.glob("bench_*.py"))
+
+
+@pytest.mark.parametrize("name", _bench_modules())
+def test_bench_module_imports_and_has_run(name):
+    """Every bench_*.py must import cleanly and expose a callable
+    ``run`` — a module that stops importing (or loses its entry point)
+    is a dead stub and fails collection here, not at release time."""
+    mod = importlib.import_module(f"benchmarks.{name}")
+    assert callable(getattr(mod, "run", None)), \
+        f"benchmarks/{name}.py has no callable run()"
+
+
+def test_bench_runner_references_every_module():
+    """benchmarks/run.py is the umbrella entry point: a bench module
+    that exists but is never referenced there silently rots."""
+    src = (BENCH_DIR / "run.py").read_text()
+    missing = [n for n in _bench_modules() if n not in src]
+    assert not missing, \
+        f"benchmarks/run.py does not reference: {missing}"

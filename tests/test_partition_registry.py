@@ -55,6 +55,7 @@ def test_registered_knobs_match_engine_signatures():
     from repro.core.hype import HypeParams
     from repro.core.hype_batched import (BatchedParams, ShardedParams,
                                          SuperstepParams)
+    from repro.core.hype_stream import StreamParams
     from repro.core.minmax import minmax_partition
     from repro.core.multilevel import hype_multilevel_partition
     from repro.core.shp import shp_partition
@@ -67,6 +68,8 @@ def test_registered_knobs_match_engine_signatures():
                            for f in dataclasses.fields(SuperstepParams)},
         "hype_sharded": {f.name
                          for f in dataclasses.fields(ShardedParams)},
+        "hype_stream": {f.name
+                        for f in dataclasses.fields(StreamParams)},
         "hype_multilevel": set(
             inspect.signature(hype_multilevel_partition).parameters),
         "minmax_nb": set(inspect.signature(minmax_partition).parameters),
@@ -97,9 +100,17 @@ def test_registered_knobs_match_engine_signatures():
             assert knob in method_knobs(method), (method, knob)
     # the device-memory budget knob (DESIGN.md §4g) is registered on the
     # device-resident engines only — host engines have no device image
-    for method in ("hype_superstep", "hype_sharded"):
+    for method in ("hype_superstep", "hype_sharded", "hype_stream"):
         assert "mem_budget" in method_knobs(method), method
     assert "mem_budget" not in method_knobs("hype_batched")
+    # the streaming engine's own knobs (DESIGN.md §4h): micro-batching,
+    # sketch width and the incremental-update dirty radius are public
+    for knob in ("micro_batch", "sketch_bits", "update_radius"):
+        assert knob in method_knobs("hype_stream"), knob
+    # ... and it shares the full resilience surface with the family
+    for knob in ("snapshot_every", "snapshot_dir", "resume",
+                 "fault_plan", "max_retries", "keep_last"):
+        assert knob in method_knobs("hype_stream"), knob
 
 
 def test_partition_knobs_match_signatures():
