@@ -23,9 +23,10 @@ import numpy as np
 
 from repro.core import metrics
 from repro.core.hype import HypeParams, hype_partition
-from repro.core.hype_batched import (BatchedParams, ShardedParams,
-                                     SuperstepParams,
+from repro.core.hype_batched import (BatchedParams, DeviceParams,
+                                     ShardedParams, SuperstepParams,
                                      hype_batched_partition,
+                                     hype_device_partition,
                                      hype_sharded_partition,
                                      hype_superstep_partition)
 from repro.core.hype_stream import (StreamParams, apply_updates,
@@ -81,7 +82,7 @@ def run():
     meta = {"quick": QUICK, "repeats": REPEATS,
             "adjacency_build_s": {}, "speedups": {},
             "superstep_stats": {}, "sharded_stats": {}, "pipeline": {},
-            "refine": {}, "streaming": {}}
+            "refine": {}, "streaming": {}, "device_loop": {}}
 
     # warm the Pallas interpret traces once (process-wide)
     import jax
@@ -224,6 +225,48 @@ def run():
                                  base["runtime_s"] / max(dt1, 1e-9), 2),
                              "km1_ratio_vs_hype": round(
                                  rec_ratio(a1, base, hg), 4)}))
+                    # device-loop axis (DESIGN.md §4i): the megakernel
+                    # engine vs the lock-step schedule it reproduces —
+                    # bit-identical assignment, host time off the loop
+                    (ad, std), dtd = _run(
+                        hype_device_partition, hg, k,
+                        DeviceParams(seed=0, t=t), return_stats=True)
+                    rows.append(_row(
+                        name, hg, k, f"hype_device_t{t}", dtd, ad,
+                        {"t": t,
+                         "speedup_vs_hype": round(
+                             base["runtime_s"] / max(dtd, 1e-9), 2),
+                         "speedup_vs_superstep_pd1": round(
+                             dt1 / max(dtd, 1e-9), 2),
+                         "km1_ratio_vs_hype": round(
+                             rec_ratio(ad, base, hg), 4),
+                         "km1_ratio_vs_superstep_pd1": round(
+                             metrics.k_minus_1(hg, ad)
+                             / max(km1_d1, 1), 4)}))
+                    loop_total = std.host_s + std.device_s
+                    meta["device_loop"][f"{name}_k{k}_t{t}"] = {
+                        "runtime_s": round(dtd, 4),
+                        "pd1_s": round(dt1, 4),
+                        "speedup_vs_pd1": round(
+                            dt1 / max(dtd, 1e-9), 3),
+                        "host_s": round(std.host_s, 4),
+                        "device_s": round(std.device_s, 4),
+                        # the tentpole gate: host share of loop time
+                        # must stay under 10% (compare_baseline fails
+                        # above it)
+                        "host_frac": round(
+                            std.host_s / max(loop_total, 1e-9), 4),
+                        "bit_identical_to_pd1": bool((ad == a1).all()),
+                        "supersteps": std.supersteps,
+                        "loop_chunks": std.loop_chunks,
+                        "loop_rounds": std.loop_rounds,
+                        "loop_pack_only": std.loop_pack_only,
+                        "refill_signals": std.refill_signals,
+                        "cache_hits": std.cache_hits,
+                        "loop_store_peak": std.loop_store_peak,
+                        "loop_state_bytes": std.loop_state_bytes,
+                        "device_image_bytes": std.device_image_bytes,
+                    }
                     meta["pipeline"][f"{name}_k{k}_t{t}"] = {
                         "depth1_s": round(dt1, 4),
                         "depth2_s": round(dt, 4),
@@ -235,6 +278,10 @@ def run():
                         "depth1_device_s": round(st1.device_s, 4),
                         "depth2_host_s": round(stt.host_s, 4),
                         "depth2_device_s": round(stt.device_s, 4),
+                        "device_loop_s": round(dtd, 4),
+                        "device_loop_host_s": round(std.host_s, 4),
+                        "device_loop_host_frac": round(
+                            std.host_s / max(loop_total, 1e-9), 4),
                         "depth2_stale_redraws": stt.stale_redraws,
                         "depth2_pipeline_stalls": stt.pipeline_stalls,
                         "supersteps_depth1": st1.supersteps,
@@ -472,7 +519,8 @@ def run():
         if r["dataset"] == "reddit" and r["k"] == 32 \
                 and (r["engine"].startswith("hype_batched")
                      or r["engine"].startswith("hype_superstep")
-                     or r["engine"].startswith("hype_sharded")):
+                     or r["engine"].startswith("hype_sharded")
+                     or r["engine"].startswith("hype_device")):
             head = {
                 "speedup_vs_hype": r["speedup_vs_hype"],
                 "km1_ratio_vs_hype": r["km1_ratio_vs_hype"],
@@ -481,6 +529,11 @@ def run():
                 head["speedup_vs_batched_t8"] = r["speedup_vs_batched_t8"]
             if "km1_ratio_vs_superstep" in r:
                 head["km1_ratio_vs_superstep"] = r["km1_ratio_vs_superstep"]
+            if "speedup_vs_superstep_pd1" in r:
+                head["speedup_vs_superstep_pd1"] = \
+                    r["speedup_vs_superstep_pd1"]
+                head["km1_ratio_vs_superstep_pd1"] = \
+                    r["km1_ratio_vs_superstep_pd1"]
             if r.get("refined"):
                 head["refined"] = True      # compare_baseline km1 gate
             meta["speedups"][f"reddit_k32_{r['engine']}"] = head

@@ -24,6 +24,14 @@ to trail offline quality, but boundedly), and the update-throughput row
 must report an exact sketch invariant. Absolute, not baseline-relative:
 the bound holds from the first run that has streaming rows.
 
+The device-resident loop (DESIGN.md §4i) adds ``check_device_loop``:
+every ``meta["device_loop"]`` row of the current run must be
+bit-identical to the lock-step pd1 schedule it reproduces
+(``bit_identical_to_pd1``) and keep the host's share of loop time under
+``HOST_FRAC_BOUND`` — the tentpole claim, enforced per run. Its
+``reddit_k32_hype_device_*`` speedup/km1 rows ride the regular
+baseline-relative gates above through ``meta["speedups"]``.
+
 Pure stdlib — runnable before dependencies are installed.
 """
 from __future__ import annotations
@@ -35,6 +43,8 @@ MAX_REGRESSION = 0.25      # fraction of baseline speedup a row may lose
 KM1_BOUND = 1.10           # quality acceptance bound (ISSUE 2)
 KM1_REFINED_TOL = 0.02     # max relative km1 regression on refined rows
 STREAM_KM1_BOUND = 2.0     # one-pass bound; = core.hype_stream's constant
+HOST_FRAC_BOUND = 0.10     # §4i: host share of device-loop wall time
+KM1_DEVICE_TOL = 0.02      # device row vs pd1 quality tolerance (ISSUE 9)
 
 
 def load_speedups(path: str) -> dict:
@@ -47,6 +57,50 @@ def load_streaming(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
     return payload.get("meta", {}).get("streaming", {})
+
+
+def load_device_loop(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("meta", {}).get("device_loop", {})
+
+
+def check_device_loop(dev: dict, speedups: dict | None = None) -> int:
+    """Absolute gates on the current run's §4i device-loop rows."""
+    failures = []
+    for key in sorted(speedups or {}):
+        if "hype_device" not in key:
+            continue
+        ratio = float(speedups[key].get("km1_ratio_vs_superstep_pd1",
+                                        1.0))
+        if ratio > 1.0 + KM1_DEVICE_TOL:
+            failures.append(
+                f"{key}: km1_ratio_vs_superstep_pd1 {ratio} > "
+                f"{1.0 + KM1_DEVICE_TOL} (device quality drifted from "
+                "the schedule it claims to reproduce)")
+    for key in sorted(dev):
+        row = dev[key]
+        status = "ok"
+        if not row.get("bit_identical_to_pd1", True):
+            status = "PARITY"
+            failures.append(
+                f"device_loop {key}: assignment diverged from the "
+                "lock-step pd1 schedule (bit_identical_to_pd1 false)")
+        frac = float(row.get("host_frac", 0.0))
+        if frac > HOST_FRAC_BOUND:
+            status = "HOST_FRAC"
+            failures.append(
+                f"device_loop {key}: host_frac {frac} > "
+                f"{HOST_FRAC_BOUND} — the host crept back onto the loop")
+        print(f"    device_loop {key}: host_frac {frac}  "
+              f"speedup_vs_pd1 {row.get('speedup_vs_pd1', '-')}x  "
+              f"[{status}]")
+    if failures:
+        print("\nFAIL: device-loop gate:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    return 0
 
 
 def check_streaming(streaming: dict) -> int:
@@ -137,11 +191,13 @@ def main(argv) -> int:
     base = load_speedups(argv[1])
     cur = load_speedups(argv[2])
     stream_rc = check_streaming(load_streaming(argv[2]))
+    dev_rc = check_device_loop(load_device_loop(argv[2]), cur)
     if not base:
         print("baseline has no meta.speedups — nothing to compare; "
-              + ("OK" if stream_rc == 0 else "streaming gate FAILED"))
-        return stream_rc
-    return compare(base, cur) or stream_rc
+              + ("OK" if stream_rc == 0 and dev_rc == 0
+                 else "absolute gates FAILED"))
+        return stream_rc or dev_rc
+    return compare(base, cur) or stream_rc or dev_rc
 
 
 if __name__ == "__main__":

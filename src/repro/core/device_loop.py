@@ -1,0 +1,795 @@
+"""Fully device-resident HYPE superstep loop (DESIGN.md §4i).
+
+One ``lax.while_loop`` program runs the entire k-way growth round —
+[stage-0 pool maintenance → store take → pins gather/dedup → per-slot
+liveness/draw/restart → requeue → gather → score+select kernel → admit
+→ exact cache decrement → activation] — with every piece of the host
+scheduler's mutable state (assignment, score cache, candidate pools,
+the sorted bucket store, pending decrements, the random-restart
+stream pointer) carried as device arrays. The host uploads the graph
+image once and, per *chunk* of supersteps, downloads only a handful of
+scalars (flags / progress / acc); full state comes back only at
+snapshot boundaries and at the end.
+
+Parity contract: with matching knobs this loop is **bit-identical** to
+``hype_superstep`` at ``pipeline_depth=1`` (golden-hashed in
+tests/test_hype_device.py). The invariants that make that possible:
+
+* The host's sorted int64 bucket store ``(ph<<50 | cls<<44 | seq)`` is
+  re-encoded per phase as fixed-width ``(kG, SP)`` int32 rows with key
+  ``(cls << 25) | seq``; back-inserted seqs ascend from ``SEQ0`` and
+  requeue seqs descend from ``SEQ0 - 1``, so within-phase (cls, seq)
+  order equals the host's within-phase (cls, global-seq) order — and
+  only within-phase order is observable (takes are per-phase prefixes).
+* All three store-insertion blocks (requeue, restart activations,
+  winner activations) are built already sorted, so merging is two
+  ``searchsorted`` scatters per phase — no sorts on the store itself.
+* Random restarts replay ``random_unassigned`` exactly, including its
+  dynamic chunk width ``max(1024, count)`` and skip-pointer advance.
+* Restart activations are deferred to the end of the round but filter
+  edge deaths with a per-round ``dead_slot`` minimum so they observe
+  exactly the deaths that had happened by their pack slot.
+
+Capacity model: every variable-size host structure gets a fixed
+power-of-two capacity planned by :func:`plan_caps`. Overflow never
+produces a wrong partition — it raises a sticky flag and the driver
+re-runs (bit-identically, schedules are capacity-independent) with the
+flagged capacity doubled, except seq-space exhaustion (FLAG_SEQ) which
+falls back to the host engine.
+"""
+from __future__ import annotations
+
+import functools as _functools
+from typing import NamedTuple
+
+import numpy as np
+
+# int32 key pad: larger than any live key ((cls<=31)<<25 | seq < 2^30).
+PAD32 = np.int32(2**31 - 1)
+# Per-phase seq origin: back inserts ascend from SEQ0, requeue descends
+# from SEQ0-1; FLAG_SEQ fires before either side leaves [0, 2^25).
+SEQ0 = 1 << 24
+CLS_SHIFT = 25          # device key = (cls << CLS_SHIFT) | seq
+CLS_CLAMP = 18          # store-take size clamp, see _round stage A
+DEAD_NEVER = 1 << 30    # dead_slot value for "not killed this round"
+
+# Host store key layout (mirrors hype_batched._PH_SHIFT/_CLS_SHIFT;
+# duplicated here so the module imports without the engine).
+_HOST_PH_SHIFT = 50
+_HOST_CLS_SHIFT = 44
+
+# Sticky overflow / fault flags (bitmask in carry["flags"]).
+FLAG_POISON = 1         # kernel NaN survived a clean-bias replay
+FLAG_STORE = 2          # per-phase store rows exceeded SP
+FLAG_ACT = 4            # one activation batch exceeded ACT per phase
+FLAG_RAWT = 8           # flat activation walk exceeded RAWT slots
+FLAG_RAWD = 16          # flat decrement walk exceeded RAWD slots
+FLAG_SEQ = 32           # per-phase seq space exhausted (unrecoverable)
+
+# Loop counter slots in the carry["stats"] vector.
+S_ROUNDS = 0
+S_KERNEL_ROWS = 1
+S_EDGES_SCANNED = 2
+S_CACHE_INV = 3
+S_CACHE_HITS = 4
+S_RESTARTS = 5
+S_STALE = 6
+S_RETRIES = 7
+S_REFILL = 8
+S_PACK_ONLY = 9
+S_STORE_PEAK = 10
+NSTATS = 11
+
+
+class DeviceLoopConfig(NamedTuple):
+    """Static (trace-time) shape of one device-loop program."""
+
+    n: int              # vertices
+    m: int              # hyperedges
+    kG: int             # phases (k)
+    rows: int           # fresh tile rows per phase (R)
+    pool_cap: int       # held-pool slots per phase (P)
+    t: int              # select_k / max admissions per phase per step
+    tile_l: int         # adjacency tile width
+    bud: int            # store-take row budget ceiling per phase
+    pp: int             # pins-gather width per phase (bud + max edge)
+    sp: int             # store rows per phase
+    act: int            # activation insert width per phase
+    rawt: int           # flat activation CSR-walk slots
+    rawd: int           # flat decrement CSR-walk slots
+    cw: int             # random-draw scan window (max(1024, t))
+    cache_f16: bool     # store the score cache as float16 between steps
+    interpret: bool     # Pallas interpret mode
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+def plan_caps(*, n, m, kG, rows, t, mean_vdeg, mean_adeg, max_edge,
+              resume_store_max=0, store_cap=None, act_cap=None,
+              rawt_cap=None, rawd_cap=None):
+    """Pick the static capacities for :class:`DeviceLoopConfig`.
+
+    Heuristics sized from measured occupancies (reddit-quick per-phase
+    store peak ~29k at m=105847); every cap is a power of two so the
+    doubling-on-overflow rerun ladder converges in a few steps.
+    ``resume_store_max`` lets a snapshot resume start above the
+    fresh-run heuristic. Returns a dict of cap fields.
+    """
+    bud = max(4 * int(rows), 512)
+    pp = bud + _pow2ceil(max_edge)
+    sp = store_cap or min(
+        _pow2ceil(m),
+        _pow2ceil(max(4096, int(resume_store_max), m // 4 + 4 * bud)))
+    act = act_cap or min(
+        _pow2ceil(m), _pow2ceil(max(1024, int(2 * t * mean_vdeg))))
+    rawt = rawt_cap or _pow2ceil(max(16384, int(2 * kG * t * mean_vdeg)))
+    rawd = rawd_cap or _pow2ceil(max(16384, int(2 * kG * t * mean_adeg)))
+    return dict(bud=bud, pp=pp, sp=sp, act=act, rawt=rawt, rawd=rawd,
+                cw=max(1024, int(t)))
+
+
+def supported(*, n, m, kG, bud) -> bool:
+    """Static gates for the int32 device encoding (else host engine).
+
+    ``bud * 2^CLS_CLAMP < 2^31`` keeps the stage-A size cumsum exact in
+    int32 even when every taken row clamps (a clamped row is always
+    bigger than any budget, so clamping never changes the take set).
+    """
+    return (kG * m < 2**31 and m < 2**26
+            and bud * (1 << CLS_CLAMP) < 2**31 and n < 2**31)
+
+
+def host_store_to_device(bq_key, bq_edge, kG, sp):
+    """Re-encode the host's sorted int64 store as per-phase int32 rows.
+
+    Host keys are globally sorted by ``(ph, cls, seq)``; per phase the
+    rows are emitted in that order with fresh device seqs ascending
+    from ``SEQ0``, which preserves the within-phase relative order —
+    the only order the take/requeue machinery observes. Returns
+    ``(skey, sedge, sback, sfront)`` or None if a phase overflows
+    ``sp`` (caller re-plans with a bigger store).
+    """
+    skey = np.full((kG, sp), PAD32, dtype=np.int32)
+    sedge = np.full((kG, sp), -1, dtype=np.int32)
+    sback = np.full(kG, SEQ0, dtype=np.int32)
+    sfront = np.full(kG, SEQ0 - 1, dtype=np.int32)
+    key = np.asarray(bq_key, dtype=np.int64)
+    bounds = np.searchsorted(
+        key, np.arange(kG + 1, dtype=np.int64) << _HOST_PH_SHIFT)
+    for g in range(kG):
+        lo, hi = int(bounds[g]), int(bounds[g + 1])
+        c = hi - lo
+        if c > sp:
+            return None
+        cls = ((key[lo:hi] >> _HOST_CLS_SHIFT) & np.int64(63)).astype(
+            np.int32)
+        skey[g, :c] = (cls << CLS_SHIFT) | (SEQ0 + np.arange(
+            c, dtype=np.int32))
+        sedge[g, :c] = bq_edge[lo:hi]
+        sback[g] = SEQ0 + c
+    return skey, sedge, sback, sfront
+
+
+def carry_bytes(carry) -> int:
+    """Total bytes of the device-resident loop state (for BENCH meta)."""
+    tot = 0
+    for v in carry.values():
+        tot += int(np.asarray(v).nbytes) if np.isscalar(v) or getattr(
+            v, "nbytes", None) is None else int(v.nbytes)
+    return tot
+
+
+@_functools.lru_cache(maxsize=None)
+def _device_loop_program(cfg: DeviceLoopConfig):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.hype_score.kernel import SELECT_PAD
+    from repro.kernels.hype_score.ops import hype_score_select
+    from . import scoring as _scoring
+
+    n, m, kG = cfg.n, cfg.m, cfg.kG
+    R, P, t, L = cfg.rows, cfg.pool_cap, cfg.t, cfg.tile_l
+    BUD, PP, SP = cfg.bud, cfg.pp, cfg.sp
+    ACT, RAWT, RAWD, CW = cfg.act, cfg.rawt, cfg.rawd, cfg.cw
+    i32, f32 = jnp.int32, jnp.float32
+    PADK = jnp.int32(int(PAD32))
+
+    def _exclusive(x):
+        c = jnp.cumsum(x)
+        return c - x
+
+    def _merge1(ak, av, bk, bv):
+        """Merge two sorted (PADK-padded) key rows; keep the first SP.
+
+        Keys are globally unique and pad destinations are provably
+        collision-free (an a-pad lands at index + live_b < SA + live_b,
+        a b-pad at index + SA >= SA + live_b), so two plain scatters
+        replace a sort.
+        """
+        SA, SB = ak.shape[0], bk.shape[0]
+        pa = jnp.arange(SA, dtype=i32) + jnp.searchsorted(
+            bk, ak, side="left").astype(i32)
+        pb = jnp.arange(SB, dtype=i32) + jnp.searchsorted(
+            ak, bk, side="right").astype(i32)
+        ok = jnp.full(SA + SB, PADK, i32).at[pa].set(ak).at[pb].set(bk)
+        ov = jnp.full(SA + SB, -1, i32).at[pa].set(av).at[pb].set(bv)
+        return ok[:SP], ov[:SP]
+
+    _merge = jax.vmap(_merge1)
+
+    def run_factory(consts):
+        adj_indptr = consts["adj_indptr"]
+        adj_indices = consts["adj_indices"]
+        v2e_indptr = consts["v2e_indptr"]
+        v2e_indices = consts["v2e_indices"]
+        e2v_indptr = consts["e2v_indptr"]
+        e2v_indices = consts["e2v_indices"]
+        cls_edge = consts["cls_edge"]
+        deg = consts["deg"]
+        vdeg = consts["vdeg"]
+        targets = consts["targets"]
+        rand_order = consts["rand_order"]
+        fringe = consts["fringe"]
+
+        def _activate(vs_grid, deadfn, eq, sback, skey, sedge, flags):
+            """Queue the edges incident to ``vs_grid`` admissions.
+
+            Mirrors ``activate_many``: one flat RAWT-slot CSR walk over
+            every (phase, vertex) row, dedup of (phase, edge) keys, a
+            (ph, cls, e)-ordered compaction (== the host lexsort), and
+            a pre-sorted per-phase insertion block merged into the
+            store. Returns updated (eq, sback, skey, sedge, flags).
+            """
+            W = vs_grid.shape[1]
+            vflat = vs_grid.reshape(-1)
+            phflat = jnp.arange(kG * W, dtype=i32) // W
+            vok = vflat >= 0
+            vsafe = jnp.where(vok, vflat, 0)
+            vd = jnp.where(vok, vdeg[vsafe], 0)
+            offs = _exclusive(vd)
+            total = vd.sum()
+            pos = jnp.arange(RAWT, dtype=i32)
+            owner = jnp.searchsorted(offs, pos, side="right").astype(
+                i32) - 1
+            pvalid = pos < total
+            own = jnp.where(pvalid, owner, 0)
+            eidx = v2e_indptr[vsafe[own]] + pos - offs[own]
+            e = v2e_indices[jnp.where(pvalid, eidx, 0)]
+            oph = phflat[own]
+            key = oph * m + e
+            qrow = eq.reshape(-1)[jnp.where(pvalid, key, 0)]
+            live = pvalid & ~qrow & ~deadfn(e, oph)
+            sk = jnp.sort(jnp.where(live, key, PADK))
+            prevk = jnp.concatenate([jnp.full(1, -1, i32), sk[:-1]])
+            first = (sk != PADK) & (sk != prevk)
+            rank = jnp.cumsum(first.astype(i32)) - 1
+            ckey = jnp.full(RAWT, PADK, i32).at[
+                jnp.where(first, rank, RAWT)].set(sk, mode="drop")
+            uvalid = ckey != PADK
+            uph = jnp.where(uvalid, ckey // m, kG)
+            ue = jnp.where(uvalid, ckey % m, 0)
+            ucls = cls_edge[ue]
+            # reorder (ph, e) -> (ph, cls, e); stable sort keeps the
+            # within-(ph, cls) e-ascending order the host lexsort gives
+            okey = jnp.where(uvalid, uph * 64 + ucls, 64 * kG + 63)
+            perm = jnp.argsort(okey)
+            uph, ue, ucls, uvalid = (uph[perm], ue[perm], ucls[perm],
+                                     uvalid[perm])
+            grank = jnp.arange(RAWT, dtype=i32)
+            local = grank - jnp.searchsorted(
+                uph, uph, side="left").astype(i32)
+            cnt = jnp.zeros(kG, i32).at[
+                jnp.where(uvalid, uph, kG)].add(1, mode="drop")
+            seq = sback[jnp.where(uvalid, uph, 0)] + local
+            nkey = jnp.where(uvalid, (ucls << CLS_SHIFT) | seq, PADK)
+            sback = sback + cnt
+            flags = flags | jnp.where(
+                (sback >= (1 << CLS_SHIFT)).any(), FLAG_SEQ, 0)
+            flags = flags | jnp.where(total > RAWT, FLAG_RAWT, 0)
+            flags = flags | jnp.where((cnt > ACT).any(), FLAG_ACT, 0)
+            rows_ = jnp.where(uvalid, uph, kG)
+            cols_ = jnp.minimum(local, ACT)
+            ins_k = jnp.full((kG, ACT), PADK, i32).at[
+                rows_, cols_].set(nkey, mode="drop")
+            ins_e = jnp.full((kG, ACT), -1, i32).at[rows_, cols_].set(
+                jnp.where(uvalid, ue, -1), mode="drop")
+            eq = eq.reshape(-1).at[
+                jnp.where(uvalid, uph * m + ue, kG * m)].set(
+                    True, mode="drop").reshape(kG, m)
+            seg = (skey != PADK).sum(axis=1)
+            flags = flags | jnp.where(
+                (seg + cnt > SP).any(), FLAG_STORE, 0)
+            skey, sedge = _merge(skey, sedge, ins_k, ins_e)
+            return eq, sback, skey, sedge, flags
+
+        def _decrements(vflat, pend, flags):
+            """Accumulate the admissions' neighbor multiset into pend.
+
+            The flat RAWD-slot walk over full adjacency rows replicates
+            the host's ``bincount(concat(adjacency rows))`` exactly
+            (duplicates included).
+            """
+            vok = vflat >= 0
+            vsafe = jnp.where(vok, vflat, 0)
+            vd = jnp.where(vok, deg[vsafe], 0)
+            offs = _exclusive(vd)
+            total = vd.sum()
+            pos = jnp.arange(RAWD, dtype=i32)
+            owner = jnp.searchsorted(offs, pos, side="right").astype(
+                i32) - 1
+            pvalid = pos < total
+            own = jnp.where(pvalid, owner, 0)
+            idx = adj_indptr[vsafe[own]] + pos - offs[own]
+            nbr = adj_indices[jnp.where(pvalid, idx, 0)]
+            pend = pend.at[jnp.where(pvalid, nbr, n)].add(
+                1, mode="drop")
+            flags = flags | jnp.where(total > RAWD, FLAG_RAWD, 0)
+            return pend, flags
+
+        def _rand_draw(assign, in_pool, ptr, cnt):
+            """Exact ``random_unassigned(cnt)`` over the device stream.
+
+            The scan window is the *dynamic* ``max(1024, cnt)`` (masked
+            inside the static CW width) because the host chunk width
+            feeds its pointer-advance rule. Returns (vs (t,), got,
+            ptr); vs is -1-padded.
+            """
+            cw = jnp.maximum(jnp.int32(1024), cnt)
+            vs0 = jnp.full(t, -1, i32)
+
+            def cond(s):
+                ptr_, got_, _ = s
+                return (ptr_ < n) & (got_ < cnt)
+
+            def body(s):
+                ptr_, got_, vs_ = s
+                csz = jnp.minimum(cw, n - ptr_)
+                pos = jnp.arange(CW, dtype=i32)
+                inb = pos < csz
+                v = rand_order[jnp.where(inb, ptr_ + pos, 0)]
+                okv = inb & (assign[v] < 0) & ~in_pool[v]
+                navail = okv.sum()
+                need_now = cnt - got_
+                rank = jnp.cumsum(okv.astype(i32)) - 1
+                take = okv & (rank < need_now)
+                vs_ = vs_.at[jnp.where(take, got_ + rank, t)].set(
+                    v, mode="drop")
+                last = jnp.max(jnp.where(take, pos, -1))
+                adv = jnp.where(navail >= need_now, last + 1, csz)
+                return (ptr_ + adv, got_ + jnp.minimum(
+                    navail, need_now), vs_)
+
+            ptr, got, vs = jax.lax.while_loop(
+                cond, body, (ptr, jnp.int32(0), vs0))
+
+            def fallback(args):
+                # stream exhausted: stragglers sit before the pointer —
+                # host takes the remaining unassigned by ascending id
+                got_, vs_ = args
+                taken = jnp.zeros(n, bool).at[
+                    jnp.where(vs_ >= 0, vs_, n)].set(True, mode="drop")
+                remm = (assign < 0) & ~in_pool & ~taken
+                rrank = jnp.cumsum(remm.astype(i32)) - 1
+                tk = remm & (rrank < cnt - got_)
+                vs_ = vs_.at[jnp.where(tk, got_ + rrank, t)].set(
+                    jnp.arange(n, dtype=i32), mode="drop")
+                return (got_ + jnp.minimum(remm.sum(), cnt - got_),
+                        vs_)
+
+            got, vs = jax.lax.cond(
+                got < cnt, fallback, lambda a: a, (got, vs))
+            return vs, got, ptr
+
+        _TRUNC = jnp.float32(_scoring.TRUNC_PENALTY)
+        _PADSEL = jnp.float32(SELECT_PAD)
+        iota_k = jnp.arange(kG, dtype=i32)
+        iota_r = jnp.arange(R, dtype=i32)
+        iota_pool = jnp.arange(P, dtype=i32)
+        iota_bud = jnp.arange(BUD, dtype=i32)
+
+        def _round(c, poison_at):
+            """One full host round: pack + dispatch + harvest."""
+            assign, cache, acc = c["assign"], c["cache"], c["acc"]
+            in_pool = c["in_pool"]
+            cache_scored = c["cache_scored"]
+            eq, edge_dead = c["edge_queued"], c["edge_dead"]
+            skey, sedge = c["skey"], c["sedge"]
+            sback, sfront = c["sback"], c["sfront"]
+            pool, pool_n = c["pool"], c["pool_n"]
+            pend, rand_ptr = c["pend"], c["rand_ptr"]
+            ss, flags, stats = c["supersteps"], c["flags"], c["stats"]
+            pre_dead = edge_dead    # death view at the top of the round
+
+            # -- slot order: host rolls the ascending active ids by the
+            #    superstep counter
+            active_mask = acc < targets
+            n_active = jnp.maximum(active_mask.sum().astype(i32), 1)
+            ord0 = jnp.argsort(jnp.where(active_mask, 0, 1))
+            rot = ss % n_active
+            order_arr = jnp.where(
+                iota_k < n_active, ord0[(rot + iota_k) % n_active], -1)
+
+            # -- stage 0: drop stale held ids, size each phase's draw
+            psafe = jnp.where(pool >= 0, pool, 0)
+            keep = (pool >= 0) & (assign[psafe] < 0)
+            in_pool = in_pool.at[jnp.where(
+                (pool >= 0) & ~keep, pool, n).reshape(-1)].set(
+                    False, mode="drop")
+            perm0 = jnp.argsort(jnp.where(keep, 0, 1), axis=1)
+            pool_n = keep.sum(axis=1).astype(i32)
+            pool = jnp.where(
+                iota_pool[None, :] < pool_n[:, None],
+                jnp.take_along_axis(pool, perm0, axis=1), -1)
+            need = jnp.where(
+                active_mask, jnp.minimum(R, P - pool_n), 0)
+            budget = jnp.where(
+                need > 0, jnp.maximum(4 * need, 512), 0)
+
+            # -- stage A: greedy smallest-class prefix take per phase.
+            #    csize clamps at 2^CLS_CLAMP (> any budget — the gate
+            #    guarantees BUD < 2^CLS_CLAMP) which keeps int32 exact:
+            #    a clamped row can only ever be the LAST taken row.
+            sl_key, sl_edge = skey[:, :BUD], sedge[:, :BUD]
+            live_row = sl_key != PADK
+            cls_row = jnp.where(live_row, sl_key >> CLS_SHIFT, 0)
+            csize = jnp.where(live_row, jnp.left_shift(
+                1, jnp.minimum(cls_row, CLS_CLAMP)), 0)
+            excl = jnp.cumsum(csize, axis=1) - csize
+            take = live_row & (excl < budget[:, None])
+            T = take.sum(axis=1).astype(i32)
+            ek = jnp.where(take, sl_edge, -1)
+            tcls = jnp.where(take, cls_row, 0)
+            iota_sp = jnp.arange(SP, dtype=i32)[None, :]
+            src = iota_sp + T[:, None]
+            srcc = jnp.minimum(src, SP - 1)
+            skey = jnp.where(
+                src < SP, jnp.take_along_axis(skey, srcc, 1), PADK)
+            sedge = jnp.where(
+                src < SP, jnp.take_along_axis(sedge, srcc, 1), -1)
+
+            # -- pins gather: one flat PP-slot walk per phase (the PP
+            #    bound sum(taken sizes) <= BUD + max_edge is proven in
+            #    DESIGN.md §4i — no overflow flag needed) + stream-order
+            #    first-occurrence dedup
+            ek_safe = jnp.where(take, ek, 0)
+            esz = jnp.where(take, e2v_indptr[ek_safe + 1]
+                            - e2v_indptr[ek_safe], 0)
+            offs_ex = jnp.concatenate(
+                [jnp.zeros((kG, 1), i32), jnp.cumsum(esz, axis=1)], 1)
+            total_g = offs_ex[:, -1]
+            pos_pp = jnp.arange(PP, dtype=i32)
+            jcol = jax.vmap(lambda o: jnp.searchsorted(
+                o, pos_pp, side="right"))(offs_ex).astype(i32) - 1
+            pv = pos_pp[None, :] < total_g[:, None]
+            jsafe = jnp.where(pv, jcol, 0)
+            eoj = jnp.take_along_axis(ek_safe, jsafe, 1)
+            obase = jnp.take_along_axis(offs_ex, jsafe, 1)
+            pidx = e2v_indptr[eoj] + pos_pp[None, :] - obase
+            pins = e2v_indices[jnp.where(pv, pidx, 0)]
+            stats = stats.at[S_EDGES_SCANNED].add(pv.sum())
+            permd = jnp.argsort(jnp.where(pv, pins, n), axis=1)
+            spin = jnp.take_along_axis(pins, permd, 1)
+            svalid = jnp.take_along_axis(pv, permd, 1)
+            dprev = jnp.concatenate(
+                [jnp.full((kG, 1), -1, i32), spin[:, :-1]], 1)
+            firsts = svalid & (spin != dprev)
+            dedup = jnp.put_along_axis(
+                jnp.zeros((kG, PP), bool), permd, firsts, axis=1,
+                inplace=False)
+
+            # -- stage B: rotation-ordered liveness / draws / restarts
+            sB = dict(
+                assign=assign, in_pool=in_pool, acc=acc,
+                edge_dead=edge_dead,
+                dead_slot=jnp.full(m, DEAD_NEVER, i32),
+                slot_r=jnp.full(kG, -1, i32),
+                pool=pool, pool_n=pool_n, rand_ptr=rand_ptr,
+                fresh=jnp.full((kG, R), -1, i32),
+                bias=jnp.full((kG, R), jnp.inf, f32),
+                pool_arr=jnp.full((kG, P), -1, i32),
+                live_rq=jnp.zeros((kG, BUD), bool),
+                restart_vs=jnp.full((kG, t), -1, i32),
+                injected=jnp.int32(0),
+                packed_any=jnp.zeros((), bool),
+                stats=stats)
+
+            def slot_body(i, s):
+                g = order_arr[i]
+
+                def work(s):
+                    gs = jnp.maximum(g, 0)
+                    pins_g, pv_g = pins[gs], pv[gs]
+                    # liveness of the taken edges at this phase's turn
+                    unas = pv_g & (s["assign"][pins_g] < 0)
+                    live_e = jnp.zeros(BUD, bool).at[jnp.where(
+                        unas, jcol[gs], BUD)].set(True, mode="drop")
+                    taken_g = iota_bud < T[gs]
+                    live_e = live_e & taken_g
+                    newly_dead = taken_g & ~live_e
+                    ekg = ek[gs]
+                    ed = s["edge_dead"].at[jnp.where(
+                        newly_dead, ekg, m)].set(True, mode="drop")
+                    dsl = s["dead_slot"].at[jnp.where(
+                        newly_dead, ekg, m)].min(
+                            jnp.full(BUD, i, i32), mode="drop")
+                    lrq = s["live_rq"].at[gs].set(live_e)
+                    # candidate draw in pin-stream first-occurrence
+                    # order (== the host's np.unique first-index order)
+                    okc = (dedup[gs] & pv_g & (s["assign"][pins_g] < 0)
+                           & ~s["in_pool"][pins_g])
+                    crank = jnp.cumsum(okc.astype(i32)) - 1
+                    drawn = okc & (crank < need[gs])
+                    nd = drawn.sum().astype(i32)
+                    ip = s["in_pool"].at[jnp.where(
+                        drawn, pins_g, n)].set(True, mode="drop")
+                    sc = cache_scored[pins_g]
+                    hits_m = drawn & sc
+                    miss_m = drawn & ~sc
+                    nh = hits_m.sum().astype(i32)
+                    nm = miss_m.sum().astype(i32)
+                    held = s["pool_n"][gs]
+                    s = dict(s, edge_dead=ed, dead_slot=dsl,
+                             live_rq=lrq, in_pool=ip)
+                    is_restart = (held == 0) & (nd == 0)
+
+                    def restart(s):
+                        cnt = jnp.minimum(
+                            jnp.int32(t), targets[gs] - s["acc"][gs])
+                        vs, nv, ptr = _rand_draw(
+                            s["assign"], s["in_pool"], s["rand_ptr"],
+                            cnt)
+                        st = s["stats"].at[S_RESTARTS].add(
+                            (nv > 0).astype(i32))
+                        asg = s["assign"].at[jnp.where(
+                            vs >= 0, vs, n)].set(gs, mode="drop")
+                        return dict(
+                            s, assign=asg, stats=st, rand_ptr=ptr,
+                            acc=s["acc"].at[gs].add(nv),
+                            restart_vs=s["restart_vs"].at[gs].set(vs),
+                            slot_r=s["slot_r"].at[gs].set(
+                                jnp.where(nv > 0, i, -1)),
+                            injected=s["injected"] + nv)
+
+                    def pack(s):
+                        permM = jnp.argsort(jnp.where(miss_m, 0, 1))
+                        mc = pins_g[permM][:R]
+                        fr = jnp.where(iota_r < nm, mc, -1)
+                        frs = jnp.where(fr >= 0, fr, 0)
+                        br = jnp.where(
+                            iota_r < nm,
+                            jnp.where(deg[frs] > L, _TRUNC,
+                                      jnp.float32(0.0)),
+                            jnp.float32(jnp.inf))
+                        permH = jnp.argsort(jnp.where(hits_m, 0, 1))
+                        hc = pins_g[permH]
+                        prow = s["pool"][gs]
+                        idxh = jnp.clip(iota_pool - held, 0, PP - 1)
+                        pa_row = jnp.where(
+                            iota_pool < held, prow,
+                            jnp.where(iota_pool < held + nh,
+                                      hc[idxh], -1))
+                        idxm = jnp.clip(
+                            iota_pool - held - nh, 0, R - 1)
+                        np_row = jnp.where(
+                            iota_pool < held + nh, pa_row,
+                            jnp.where(iota_pool < held + nh + nm,
+                                      mc[idxm], -1))
+                        st = s["stats"].at[S_KERNEL_ROWS].add(nm)
+                        st = st.at[S_CACHE_HITS].add(held + nh)
+                        return dict(
+                            s,
+                            fresh=s["fresh"].at[gs].set(fr),
+                            bias=s["bias"].at[gs].set(br),
+                            pool_arr=s["pool_arr"].at[gs].set(pa_row),
+                            pool=s["pool"].at[gs].set(np_row),
+                            pool_n=s["pool_n"].at[gs].add(nd),
+                            stats=st,
+                            packed_any=jnp.ones((), bool))
+
+                    return jax.lax.cond(is_restart, restart, pack, s)
+
+                return jax.lax.cond(g >= 0, work, lambda s: s, s)
+
+            sB = jax.lax.fori_loop(0, kG, slot_body, sB)
+            assign, in_pool, acc = sB["assign"], sB["in_pool"], sB["acc"]
+            edge_dead, pool, pool_n = (sB["edge_dead"], sB["pool"],
+                                       sB["pool_n"])
+            rand_ptr, stats = sB["rand_ptr"], sB["stats"]
+            fresh, bias, pool_arr = sB["fresh"], sB["bias"], sB["pool_arr"]
+            injected, packed_any = sB["injected"], sB["packed_any"]
+
+            # -- requeue still-live taken rows at the queue fronts
+            #    (front seqs descend, so requeues sort before fresher
+            #    rows of the same class — the host's global-front rule)
+            rq_c = sB["live_rq"].sum(axis=1).astype(i32)
+            permq = jnp.argsort(jnp.where(sB["live_rq"], 0, 1), axis=1)
+            rq_e = jnp.take_along_axis(ek, permq, 1)
+            rq_cl = jnp.take_along_axis(tcls, permq, 1)
+            colb = iota_bud[None, :]
+            rq_val = colb < rq_c[:, None]
+            rq_seq = (sfront - rq_c)[:, None] + 1 + colb
+            rq_key = jnp.where(
+                rq_val, (rq_cl << CLS_SHIFT) | rq_seq, PADK)
+            sfront = sfront - rq_c
+            flags = flags | jnp.where((sfront < 0).any(), FLAG_SEQ, 0)
+            seg = (skey != PADK).sum(axis=1)
+            flags = flags | jnp.where(
+                (seg + rq_c > SP).any(), FLAG_STORE, 0)
+            skey, sedge = _merge(skey, sedge, rq_key,
+                                 jnp.where(rq_val, rq_e, -1))
+
+            # -- deferred restart activations: filter deaths with the
+            #    per-round dead_slot so each sees exactly the deaths
+            #    that had happened by its pack slot; their neighbor
+            #    decrements join pend now (host drains the restart
+            #    delta at THIS round's dispatch)
+            dead_slot, slot_r = sB["dead_slot"], sB["slot_r"]
+            eq, sback, skey, sedge, flags = _activate(
+                sB["restart_vs"],
+                lambda e, ph: pre_dead[e] | (dead_slot[e]
+                                             <= slot_r[ph]),
+                eq, sback, skey, sedge, flags)
+            pend, flags = _decrements(
+                sB["restart_vs"].reshape(-1), pend, flags)
+
+            # -- dispatch + harvest (skipped on a pack-only round:
+            #    host neither bumps supersteps nor drains decrements)
+            D = dict(assign=assign, cache=cache, acc=acc,
+                     in_pool=in_pool, cache_scored=cache_scored,
+                     eq=eq, edge_dead=edge_dead, skey=skey,
+                     sedge=sedge, sback=sback, pend=pend,
+                     pool=pool, pool_n=pool_n, supersteps=ss,
+                     flags=flags, stats=stats,
+                     ss_in_chunk=c["ss_in_chunk"], nwin=jnp.int32(0))
+
+            def dispatch(D):
+                ss = D["supersteps"] + 1
+                stats = D["stats"].at[S_CACHE_INV].add(
+                    (D["pend"] > 0).sum())
+                c32 = (D["cache"].astype(f32) if cfg.cache_f16
+                       else D["cache"])
+                # exact decrement drain: one full-array subtract is
+                # bit-equal to the host's scatter-add of -counts
+                # (x - 0.0 == x; the cache never holds -0.0)
+                c32 = c32 - D["pend"].astype(f32)
+                pend = jnp.zeros_like(D["pend"])
+                assign = D["assign"]
+                flat = fresh.reshape(-1)
+                tile = _scoring._gather_fresh_tiles(
+                    adj_indptr, adj_indices, assign, flat, L)
+                prev, n_stale = _scoring._stale_masked_prev(
+                    pool_arr, assign, c32)
+                bad_bias = jnp.where(
+                    fresh >= 0, jnp.float32(jnp.nan), bias)
+                bias_used = jnp.where(ss == poison_at, bad_bias, bias)
+
+                def kernel(b):
+                    return hype_score_select(
+                        tile.reshape(kG, R, L), fringe, b, prev,
+                        select_k=t, interpret=cfg.interpret,
+                        with_remaining=True)
+
+                out = kernel(bias_used)
+
+                def _bad(o):
+                    return ((flat >= 0)
+                            & ~jnp.isfinite(o[0].reshape(-1))).any()
+
+                pois = _bad(out)
+                # poisoned scores admit nothing: replay in-place with
+                # the clean bias (the host's _RESET1 replay)
+                out = jax.lax.cond(
+                    pois, lambda _: kernel(bias), lambda o: o, out)
+                scores, sel_idx, sel_val, rem = out
+                stats = stats.at[S_RETRIES].add(pois.astype(i32))
+                flags = D["flags"] | jnp.where(
+                    _bad(out), FLAG_POISON, 0)
+                phase_has = ((fresh >= 0).any(axis=1)
+                             | (pool_arr >= 0).any(axis=1))
+                stats = stats.at[S_REFILL].add(
+                    (phase_has & (rem < t)).sum())
+                c32 = c32.at[jnp.where(flat >= 0, flat, n)].set(
+                    scores.reshape(-1), mode="drop")
+                slots = jnp.concatenate([fresh, pool_arr], axis=1)
+                cand = jnp.take_along_axis(slots, sel_idx, axis=1)
+                okw = (sel_val < _PADSEL) & (cand >= 0)
+                okw &= assign[jnp.where(cand >= 0, cand, 0)] < 0
+                cap = jnp.maximum(targets - D["acc"], 0)
+                rankw = jnp.cumsum(okw.astype(i32), axis=1)
+                adm = okw & (rankw <= cap[:, None])
+                winners = jnp.where(adm, cand, -1)
+                phase_row = jax.lax.broadcasted_iota(
+                    i32, adm.shape, 0)
+                assign = assign.at[jnp.where(adm, cand, n)].set(
+                    phase_row, mode="drop")
+                acc = D["acc"] + adm.sum(axis=1, dtype=i32)
+                # harvest: mirror of the host's post-kernel pass
+                stats = stats.at[S_STALE].add(n_stale)
+                cache_scored = D["cache_scored"].at[jnp.where(
+                    flat >= 0, flat, n)].set(True, mode="drop")
+                in_pool = D["in_pool"].at[jnp.where(
+                    winners >= 0, winners, n).reshape(-1)].set(
+                        False, mode="drop")
+                nwin = (winners >= 0).sum().astype(i32)
+                edge_dead = D["edge_dead"]
+                eq, sback, skey, sedge, flags = _activate(
+                    winners, lambda e, ph: edge_dead[e], D["eq"],
+                    D["sback"], D["skey"], D["sedge"], flags)
+                pend, flags = _decrements(
+                    winners.reshape(-1), pend, flags)
+                # release completed phases' pools
+                done = adm.any(axis=1) & (acc >= targets)
+                pool = D["pool"]
+                in_pool = in_pool.at[jnp.where(
+                    done[:, None] & (pool >= 0), pool,
+                    n).reshape(-1)].set(False, mode="drop")
+                pool = jnp.where(done[:, None], -1, pool)
+                pool_n = jnp.where(done, 0, D["pool_n"])
+                cache = (jnp.clip(c32, -65504.0, 65504.0).astype(
+                    jnp.float16) if cfg.cache_f16 else c32)
+                return dict(
+                    D, assign=assign, cache=cache, acc=acc,
+                    in_pool=in_pool, cache_scored=cache_scored,
+                    eq=eq, edge_dead=edge_dead, skey=skey,
+                    sedge=sedge, sback=sback, pend=pend, pool=pool,
+                    pool_n=pool_n, supersteps=ss, flags=flags,
+                    stats=stats,
+                    ss_in_chunk=D["ss_in_chunk"] + 1, nwin=nwin)
+
+            def pack_only(D):
+                return dict(
+                    D, stats=D["stats"].at[S_PACK_ONLY].add(1))
+
+            D = jax.lax.cond(packed_any, dispatch, pack_only, D)
+            stats = D["stats"].at[S_ROUNDS].add(1)
+            stats = stats.at[S_STORE_PEAK].max(
+                (D["skey"] != PADK).sum())
+            return dict(
+                assign=D["assign"], cache=D["cache"], acc=D["acc"],
+                in_pool=D["in_pool"],
+                cache_scored=D["cache_scored"],
+                edge_queued=D["eq"], edge_dead=D["edge_dead"],
+                skey=D["skey"], sedge=D["sedge"], sback=D["sback"],
+                sfront=sfront, pool=D["pool"], pool_n=D["pool_n"],
+                pend=D["pend"], rand_ptr=rand_ptr,
+                supersteps=D["supersteps"],
+                progress=injected + D["nwin"], flags=D["flags"],
+                ss_in_chunk=D["ss_in_chunk"], stats=stats)
+
+        return _round
+
+    @_functools.partial(jax.jit, donate_argnums=(1,))
+    def run(consts, carry, chunk_cap, poison_at):
+        """Run up to ``chunk_cap`` supersteps fully on device.
+
+        ``carry`` is donated; ``chunk_cap``/``poison_at`` are traced
+        scalars so chunk resizing never retraces. Pack-only rounds do
+        not count against the chunk (host snapshot cadence counts
+        supersteps). Exits early on completion, zero progress, or any
+        sticky flag.
+        """
+        _round = run_factory(consts)
+
+        def cond(c):
+            return ((c["acc"] < consts["targets"]).any()
+                    & (c["progress"] > 0) & (c["flags"] == 0)
+                    & (c["ss_in_chunk"] < chunk_cap))
+
+        carry = dict(carry, ss_in_chunk=jnp.int32(0))
+        return jax.lax.while_loop(
+            cond, lambda c: _round(c, poison_at), carry)
+
+    return run
+
+
+def device_loop_program(cfg: DeviceLoopConfig):
+    """The jitted chunked device-loop runner for a static config.
+
+    Returns ``run(consts, carry, chunk_cap, poison_at) -> carry`` with
+    ``carry`` donated. See the module docstring for the state layout;
+    ``core.hype_batched._run_device_loop`` is the host driver.
+    """
+    return _device_loop_program(cfg)

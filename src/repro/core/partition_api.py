@@ -7,7 +7,8 @@ an assignment produced here, so partitioners are interchangeable.
 Engine selection in one line each (see DESIGN.md for the full ladder):
 ``hype`` is the paper-faithful reference, ``hype_batched`` the
 throughput default, ``hype_superstep`` the device-resident large-k
-engine, ``hype_sharded`` the multi-device mesh engine,
+engine, ``hype_device`` the fully device-resident while_loop engine,
+``hype_sharded`` the multi-device mesh engine,
 ``hype_multilevel`` the quality-first multilevel composition, and the
 remaining methods are the paper's baselines. The batched-family
 engines take a ``refine_passes`` knob — the k-way refinement post-pass
@@ -23,8 +24,10 @@ import numpy as np
 
 from .hypergraph import Hypergraph
 from .hype import HypeParams, hype_partition
-from .hype_batched import (BatchedParams, ShardedParams, SuperstepParams,
+from .hype_batched import (BatchedParams, DeviceParams, ShardedParams,
+                           SuperstepParams,
                            hype_batched_partition,
+                           hype_device_partition,
                            hype_sharded_partition,
                            hype_superstep_partition)
 from . import resilience
@@ -76,6 +79,17 @@ METHOD_INFO: Dict[str, dict] = {
                 "pipeline (large-k choice; pipeline_depth=1 locks step)",
         "balance_slack": lambda n, k: 1,
         "knobs": ("t", "rows", "pool_cap", "pipeline_depth",
+                  "refine_passes", "snapshot_every", "snapshot_dir",
+                  "keep_last", "resume", "fault_plan", "max_retries",
+                  "mem_budget"),
+    },
+    "hype_device": {
+        "desc": "fully device-resident HYPE: the whole growth loop as "
+                "one lax.while_loop megakernel with on-device pool "
+                "maintenance; host syncs once per chunk (DESIGN.md §4i)",
+        "balance_slack": lambda n, k: 1,
+        "knobs": ("t", "rows", "pool_cap", "chunk_supersteps",
+                  "cache_dtype", "store_cap", "act_cap",
                   "refine_passes", "snapshot_every", "snapshot_dir",
                   "keep_last", "resume", "fault_plan", "max_retries",
                   "mem_budget"),
@@ -265,6 +279,9 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
     if method == "hype_superstep":
         return hype_superstep_partition(
             hg, k, SuperstepParams(seed=seed, **kw))
+    if method == "hype_device":
+        return hype_device_partition(
+            hg, k, DeviceParams(seed=seed, **kw))
     if method == "hype_sharded":
         return hype_sharded_partition(
             hg, k, ShardedParams(seed=seed, **kw))
@@ -317,6 +334,7 @@ def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
 # pure numpy) rather than abandoning the run. The final ``hype`` rung
 # has no device dependency at all, so the ladder always terminates.
 _LADDER = {
+    "hype_device": "hype_superstep",
     "hype_sharded": "hype_superstep",
     "hype_superstep": "hype_batched",
     "hype_batched": "hype",
@@ -345,9 +363,11 @@ def _run_rung(hg: Hypergraph, k: int, method: str, seed: int,
                               return_stats=True, warm_start=warm)
     params_cls = {"hype_batched": BatchedParams,
                   "hype_superstep": SuperstepParams,
+                  "hype_device": DeviceParams,
                   "hype_sharded": ShardedParams}[method]
     runner = {"hype_batched": hype_batched_partition,
               "hype_superstep": hype_superstep_partition,
+              "hype_device": hype_device_partition,
               "hype_sharded": hype_sharded_partition}[method]
     sub.update(snapshot_every=snapshot_every, snapshot_dir=snapshot_dir,
                keep_last=keep_last, resume=resume, fault_plan=plan)

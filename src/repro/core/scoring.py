@@ -1165,3 +1165,12 @@ def batched_dext_jax(v2e, e2v, vs, ext_mask):
     ext_pad = jnp.concatenate([ext_mask, jnp.zeros((1,), bool)])
     counted = first & ext_pad[srt]
     return counted.sum(axis=1).astype(jnp.float32)
+
+
+# ISSUE.md names `scoring.device_loop_program` as the fully
+# device-resident loop's entry point; the program outgrew this module
+# and lives in core/device_loop.py — re-exported here so the documented
+# import path keeps working. Bottom-of-file on purpose: device_loop's
+# program builder imports back into scoring lazily.
+from .device_loop import (  # noqa: E402,F401
+    DeviceLoopConfig, device_loop_program)

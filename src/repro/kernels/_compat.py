@@ -1,4 +1,5 @@
 """Pallas API compatibility shims shared by all kernels."""
+import functools
 import os
 
 from jax.experimental.pallas import tpu as pltpu
@@ -33,3 +34,31 @@ def pallas_interpret() -> bool:
         return False
     import jax
     return jax.default_backend() != "tpu"
+
+
+@functools.lru_cache(maxsize=1)
+def enable_compile_cache() -> str | None:
+    """Opt into JAX's persistent compilation cache via env knob.
+
+    ``REPRO_COMPILE_CACHE`` names a directory to store compiled
+    executables across processes; unset or falsy leaves caching off.
+    The repro engines retrace identical while_loop/kernel programs on
+    every cold start — for the device-resident loop that single XLA
+    compile dominates small-graph wall time — so benchmarks and CI set
+    this to amortise it. Min compile-time / entry-size thresholds are
+    zeroed so the many small Pallas kernels qualify, not just the
+    megakernel. Idempotent (cached); returns the directory in use, or
+    ``None`` when disabled. Safe on jax builds without the persistent
+    cache: config failures disable silently rather than break the run.
+    """
+    path = os.environ.get("REPRO_COMPILE_CACHE", "").strip()
+    if not path or path.lower() in _FALSY:
+        return None
+    import jax
+    try:
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:
+        return None
+    return path

@@ -75,8 +75,8 @@ SELECT_PAD = 1e30
 
 
 def _score_select_kernel(fringe_ref, prev_ref, bias_ref, nbrs_ref,
-                         score_ref, idx_ref, val_ref, *, select_k: int,
-                         rows: int):
+                         score_ref, idx_ref, val_ref, rem_ref, *,
+                         select_k: int, rows: int):
     """A *group* of growth phases per grid step: score + top-k select.
 
     The block stacks ``TG`` phases of ``rows`` fresh-candidate rows each.
@@ -119,10 +119,17 @@ def _score_select_kernel(fringe_ref, prev_ref, bias_ref, nbrs_ref,
                            merged)
     idx_ref[...] = jnp.stack(sel_i, axis=1).astype(jnp.int32)
     val_ref[...] = jnp.stack(sel_v, axis=1).astype(jnp.float32)
+    # refill trigger: real candidates left per phase AFTER selection
+    # (selected slots are +inf, pads/empties sit at SELECT_PAD). The
+    # device-resident loop reads this to decide which phases need a
+    # pool refill next superstep without a host round-trip.
+    rem_ref[...] = (merged < jnp.float32(SELECT_PAD)).sum(
+        axis=1).astype(jnp.int32)[:, None]
 
 
 def hype_score_select_kernel(nbrs, fringe, bias, prev, *, select_k: int,
-                             tile_g: int = 8, interpret: bool = False):
+                             tile_g: int = 8, interpret: bool = False,
+                             with_remaining: bool = False):
     """Fused scoring + per-phase top-``select_k`` selection.
 
     nbrs:   (G*R, L) int32, -1 padded — G stacked phase tiles of R rows.
@@ -136,7 +143,10 @@ def hype_score_select_kernel(nbrs, fringe, bias, prev, *, select_k: int,
     pads. Returns ``(scores, sel_idx, sel_val)``: scores (G*R,) f32
     (fresh rows, bias included); sel_idx (G, select_k) int32 into the
     phase's [fresh rows | pool slots] concatenation; sel_val
-    (G, select_k) f32 (>= SELECT_PAD means "nothing there").
+    (G, select_k) f32 (>= SELECT_PAD means "nothing there"). With
+    ``with_remaining`` a fourth output rides along: remaining (G,) int32,
+    the count of real candidate slots left per phase after selection —
+    the refill-trigger flag source for the device-resident loop.
     """
     G, s = fringe.shape
     B, L = nbrs.shape
@@ -147,7 +157,7 @@ def hype_score_select_kernel(nbrs, fringe, bias, prev, *, select_k: int,
     assert 1 <= select_k <= R + P
     tile_g = min(tile_g, G)
     assert G % tile_g == 0, "pad the phase count to a tile_g multiple"
-    scores, idx, val = pl.pallas_call(
+    scores, idx, val, rem = pl.pallas_call(
         functools.partial(_score_select_kernel, select_k=select_k,
                           rows=R),
         grid=(G // tile_g,),
@@ -161,14 +171,18 @@ def hype_score_select_kernel(nbrs, fringe, bias, prev, *, select_k: int,
             pl.BlockSpec((tile_g * R, 1), lambda g: (g, 0)),
             pl.BlockSpec((tile_g, select_k), lambda g: (g, 0)),
             pl.BlockSpec((tile_g, select_k), lambda g: (g, 0)),
+            pl.BlockSpec((tile_g, 1), lambda g: (g, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((G, select_k), jnp.int32),
             jax.ShapeDtypeStruct((G, select_k), jnp.float32),
+            jax.ShapeDtypeStruct((G, 1), jnp.int32),
         ],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(fringe, prev, bias[:, None], nbrs)
+    if with_remaining:
+        return scores[:, 0], idx, val, rem[:, 0]
     return scores[:, 0], idx, val

@@ -57,7 +57,8 @@ def hype_score_select_shard(nbrs_local, fringe, bias, prev, *,
 
 
 def hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
-                      tile_g: int = 8, interpret=None):
+                      tile_g: int = 8, interpret=None,
+                      with_remaining: bool = False):
     """Fused score + per-phase top-``select_k`` selection (auto-interpret).
 
     nbrs: (G, R, L) int32 stacked phase tiles; fringe: (G, s) int32;
@@ -65,19 +66,26 @@ def hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
     pool scores. The phase count is padded to a ``tile_g`` multiple for
     the kernel grid. Returns ``(scores (G, R), sel_idx (G, select_k),
     sel_val (G, select_k))``; sel_idx < R points at fresh rows, >= R at
-    pool slot ``idx - R``. See ``kernel.hype_score_select_kernel``.
+    pool slot ``idx - R``. With ``with_remaining`` a fourth array rides
+    along: remaining (G,) int32 — real candidate slots left per phase
+    after selection, the refill-trigger flag the device-resident loop
+    reads instead of asking the host. See
+    ``kernel.hype_score_select_kernel``.
     """
     if interpret is None:    # resolved pre-jit; see hype_scores
         interpret = pallas_interpret()
     return _hype_score_select(nbrs, fringe, bias, prev,
                               select_k=select_k, tile_g=tile_g,
-                              interpret=interpret)
+                              interpret=interpret,
+                              with_remaining=with_remaining)
 
 
 @functools.partial(jax.jit, static_argnames=("select_k", "tile_g",
-                                             "interpret"))
+                                             "interpret",
+                                             "with_remaining"))
 def _hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
-                       tile_g: int, interpret: bool):
+                       tile_g: int, interpret: bool,
+                       with_remaining: bool = False):
     G, R, L = nbrs.shape
     tg = min(tile_g, G)
     pad = (-G) % tg
@@ -88,8 +96,12 @@ def _hype_score_select(nbrs, fringe, bias, prev, *, select_k: int,
         bias = jnp.pad(bias, ((0, pad), (0, 0)),
                        constant_values=jnp.inf)
         prev = jnp.pad(prev, ((0, pad), (0, 0)), constant_values=jnp.inf)
-    scores, idx, val = hype_score_select_kernel(
+    out = hype_score_select_kernel(
         nbrs.reshape((G + pad) * R, L), fringe,
         bias.reshape((G + pad) * R), prev, select_k=select_k, tile_g=tg,
-        interpret=interpret)
-    return scores.reshape(G + pad, R)[:G], idx[:G], val[:G]
+        interpret=interpret, with_remaining=with_remaining)
+    scores, idx, val = out[:3]
+    trimmed = (scores.reshape(G + pad, R)[:G], idx[:G], val[:G])
+    if with_remaining:
+        return trimmed + (out[3][:G],)
+    return trimmed

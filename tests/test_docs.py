@@ -35,11 +35,11 @@ def test_design_engine_table_matches_registry():
         if m.startswith("hype") and m not in ("hype_weighted",):
             assert f"`{m}`" in sec1, f"engine {m} missing from DESIGN §1"
     assert "three engines" not in text
-    # seven ladder rows: five growth rungs (hype_jax is the side-rung),
-    # the multilevel composition of the refinement subsystem (§4e) and
-    # the streaming/online engine (§4h)
+    # eight ladder rows: five growth rungs (hype_jax is the side-rung),
+    # the multilevel composition of the refinement subsystem (§4e), the
+    # streaming/online engine (§4h) and the device-resident loop (§4i)
     table_rows = re.findall(r"^\| `hype", sec1, re.MULTILINE)
-    assert len(table_rows) == 7
+    assert len(table_rows) == 8
 
 
 def test_readme_documents_the_commands():

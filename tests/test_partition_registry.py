@@ -53,8 +53,8 @@ def test_registered_knobs_match_engine_signatures():
     """Every knob the registry documents must exist on the engine it is
     forwarded to — a renamed dataclass field or keyword drifts here."""
     from repro.core.hype import HypeParams
-    from repro.core.hype_batched import (BatchedParams, ShardedParams,
-                                         SuperstepParams)
+    from repro.core.hype_batched import (BatchedParams, DeviceParams,
+                                         ShardedParams, SuperstepParams)
     from repro.core.hype_stream import StreamParams
     from repro.core.minmax import minmax_partition
     from repro.core.multilevel import hype_multilevel_partition
@@ -68,6 +68,8 @@ def test_registered_knobs_match_engine_signatures():
                            for f in dataclasses.fields(SuperstepParams)},
         "hype_sharded": {f.name
                          for f in dataclasses.fields(ShardedParams)},
+        "hype_device": {f.name
+                        for f in dataclasses.fields(DeviceParams)},
         "hype_stream": {f.name
                         for f in dataclasses.fields(StreamParams)},
         "hype_multilevel": set(
@@ -100,7 +102,8 @@ def test_registered_knobs_match_engine_signatures():
             assert knob in method_knobs(method), (method, knob)
     # the device-memory budget knob (DESIGN.md §4g) is registered on the
     # device-resident engines only — host engines have no device image
-    for method in ("hype_superstep", "hype_sharded", "hype_stream"):
+    for method in ("hype_superstep", "hype_sharded", "hype_stream",
+                   "hype_device"):
         assert "mem_budget" in method_knobs(method), method
     assert "mem_budget" not in method_knobs("hype_batched")
     # the streaming engine's own knobs (DESIGN.md §4h): micro-batching,
@@ -111,6 +114,11 @@ def test_registered_knobs_match_engine_signatures():
     for knob in ("snapshot_every", "snapshot_dir", "resume",
                  "fault_plan", "max_retries", "keep_last"):
         assert knob in method_knobs("hype_stream"), knob
+    # the §4i device-loop engine's own knobs: chunked while_loop cadence,
+    # the optional fp16 score cache, and the ring-capacity overrides
+    for knob in ("chunk_supersteps", "cache_dtype", "store_cap",
+                 "act_cap", "snapshot_every", "resume", "fault_plan"):
+        assert knob in method_knobs("hype_device"), knob
 
 
 def test_partition_knobs_match_signatures():
