@@ -23,11 +23,10 @@ import numpy as np
 
 from repro.core import metrics
 from repro.core.hype import HypeParams, hype_partition
-from repro.core.hype_batched import (BatchedParams, DeviceParams,
-                                     ShardedParams, SuperstepParams,
-                                     hype_batched_partition,
-                                     hype_device_partition,
-                                     hype_sharded_partition,
+from repro.engines.batched import BatchedParams, hype_batched_partition
+from repro.engines.device import DeviceParams, hype_device_partition
+from repro.engines.sharded import ShardedParams, hype_sharded_partition
+from repro.engines.superstep import (SuperstepParams,
                                      hype_superstep_partition)
 from repro.core.hype_stream import (StreamParams, apply_updates,
                                     hype_stream_partition)

@@ -53,7 +53,7 @@ CLS_SHIFT = 25          # device key = (cls << CLS_SHIFT) | seq
 CLS_CLAMP = 18          # store-take size clamp, see _round stage A
 DEAD_NEVER = 1 << 30    # dead_slot value for "not killed this round"
 
-# Host store key layout (mirrors hype_batched._PH_SHIFT/_CLS_SHIFT;
+# Host store key layout (mirrors engines.pipeline._PH_SHIFT/_CLS_SHIFT;
 # duplicated here so the module imports without the engine).
 _HOST_PH_SHIFT = 50
 _HOST_CLS_SHIFT = 44
@@ -790,6 +790,6 @@ def device_loop_program(cfg: DeviceLoopConfig):
 
     Returns ``run(consts, carry, chunk_cap, poison_at) -> carry`` with
     ``carry`` donated. See the module docstring for the state layout;
-    ``core.hype_batched._run_device_loop`` is the host driver.
+    ``repro.engines.device._run_device_loop`` is the host driver.
     """
     return _device_loop_program(cfg)

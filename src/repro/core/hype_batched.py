@@ -1,2634 +1,99 @@
-"""Batched-candidate HYPE: the throughput-oriented engine (DESIGN.md §4).
+"""Deprecated shim — the fast engines moved to ``repro.engines``.
 
-The paper's engine (``hype.py``) moves ONE vertex per growth step and
-scores r=2 candidates at a time — latency-bound, CPU-idiomatic. This
-engine turns the inner loop into tile work:
+This module used to hold the whole batched/superstep/sharded/device
+engine family. Every name it ever exported still resolves here (with a
+``DeprecationWarning``) so pinned imports keep working, but new code
+should import from the per-engine modules:
 
-  per growth step
-    1. (when the candidate pool runs low) draw a bulk batch of candidate
-       vertices from the *smallest* active hyperedges — size-bucketed
-       queues instead of a heap, one vectorized pin scan per draw,
-    2. gather their unassigned-neighbor lists as dense (b, L) tiles
-       (``scoring.neighbor_tile_adj``; assigned pins dropped, hubs
-       capped),
-    3. score every cache-miss candidate through the Pallas
-       ``hype_scores`` kernel (fringe membership subtracted on the VPU),
-    4. keep scored candidates in a pool sorted by score — the paper's
-       s-sized fringe is its top-s — and admit the top-``t`` per step.
+``repro.engines.{batched,superstep,sharded,device}`` (Params + entry
+point per engine) and ``repro.engines.runtime`` (``BatchedStats``, the
+shared pipeline driver).
 
-``t`` is the quality/speed knob: steps per partition drop from O(target)
-to O(target / t); ``t=1`` recovers the sequential admission order (same
-greedy rule, wider candidate pool). Scores are lazily cached per phase
-exactly like the paper's optimization (c), so the kernel only sees
-first-time candidates.
-
-This is the first real consumer of ``kernels/hype_score`` — on CPU the
-kernel runs in interpret mode (still one fused batched evaluation); on
-TPU the same call compiles to the VPU tile loop the kernel was built for.
-
-The module holds the top three rungs of the engine ladder (DESIGN.md §1):
-``hype_batched_partition`` (host tiles), ``hype_superstep_partition``
-(device-resident image, §4b) and ``hype_sharded_partition`` (phase
-groups sharded over a device mesh, §4c). The two device engines share
-the double-buffered superstep pipeline of §4d (``_run_pipeline``):
-dispatch/harvest-split device calls with on-device admission, so host
-orchestration overlaps device compute; ``pipeline_depth=1`` reproduces
-the lock-step schedule bit for bit.
+The private-state aliases map to their public successors (e.g.
+``_SuperstepState`` -> ``repro.engines.superstep.SuperstepState``).
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-from typing import Optional
-
-import numpy as np
-
-from .hypergraph import Hypergraph
-from . import device_loop
-from . import membudget
-from . import resilience
-from . import scoring
-
-# (1,) int32 replay markers for the device programs' sticky poison flag
-# (scoring._poison_guard): 0 = normal superstep, 1 = host-driven replay
-# of a quarantined superstep. Module constants so repeated dispatches
-# hand jit the same host buffers.
-_RESET0 = np.zeros(1, dtype=np.int32)
-_RESET1 = np.ones(1, dtype=np.int32)
-
-
-@dataclasses.dataclass
-class BatchedParams:
-    b: int = 256           # rows per kernel tile (the paper's r=2)
-    s: int = 16            # max fringe size (kernel compares vs s slots)
-    t: int = 8             # admissions per step; 1 = sequential order
-    pool_cap: int = 64     # scored candidates held between steps
-    refill_lo: int = 64    # refill the pool when it drops below this
-    cap_pins: int = 3072   # pins scanned per candidate before truncation
-    kernel_min: int = 16   # min batch worth a device round-trip; smaller
-    #                        dribbles score on host (same formula and hub
-    #                        truncation convention as the kernel tiles)
-    refine_passes: int = 0  # post-pass boundary-refinement passes
-    #                         (core/refine.py, DESIGN.md §4e); 0 = off,
-    #                         output bit-identical to the bare engine
-    seed: int = 0
-    # resilience knobs (core/resilience.py, DESIGN.md §4f):
-    snapshot_every: int = 0     # checkpoint cadence, counted in
-    #                             supersteps (device engines) or
-    #                             completed phases (batched); 0 = never.
-    #                             The cadence is part of the schedule: a
-    #                             resumed run is bit-identical to an
-    #                             uninterrupted run with the SAME cadence
-    #                             (snapshots drain the pipeline).
-    snapshot_dir: Optional[str] = None   # where snapshots are published
-    keep_last: int = 3          # snapshots the GC retains per directory
-    resume: Optional[str] = None    # snapshot file or directory to
-    #                                 resume from; a missing or empty
-    #                                 directory starts fresh (what the
-    #                                 degradation ladder wants)
-    fault_plan: Optional[object] = None  # resilience.FaultPlan instance,
-    #                                      spec string, or None = read
-    #                                      the REPRO_FAULT_PLAN env var
-    max_retries: int = 2        # transient-fault retry budget per call
-    retry_backoff_s: float = 0.01   # linear backoff between retries
-
-
-@dataclasses.dataclass
-class BatchedStats:
-    kernel_calls: int = 0
-    kernel_rows: int = 0       # candidate rows scored by the Pallas kernel
-    host_rows: int = 0         # rows scored by the numpy fallback
-    cache_hits: int = 0
-    edges_scanned: int = 0     # pins scanned during candidate selection
-    random_restarts: int = 0
-    steps: int = 0
-    # superstep-engine counters (zero for the classic batched path):
-    supersteps: int = 0             # fused device calls
-    device_image_bytes: int = 0     # one-time CSR + assignment + cache
-    #                                 upload at partition() start
-    host_to_device_bytes: int = 0   # per-call id/bias buffers — the whole
-    #                                 steady-state H2D traffic
-    cache_invalidations: int = 0    # cached scores decremented by admission
-    # sharded-engine counters (zero for the single-device engines):
-    collectives: int = 0            # all_gather ops (one per superstep)
-    collective_bytes: int = 0       # bytes materialized by the gathers:
-    #                                 devices x global payload per superstep
-    admission_conflicts: int = 0    # proposed admissions lost to the
-    #                                 lowest-phase-wins conflict rule
-    # pipeline counters (superstep/sharded engines):
-    host_s: float = 0.0             # wall-clock spent in host packing +
-    #                                 harvest mirroring (overlappable)
-    device_s: float = 0.0           # wall-clock blocked waiting on device
-    #                                 results at harvest time
-    pipeline_stalls: int = 0        # rounds where the host could pack
-    #                                 nothing and the device went idle
-    stale_redraws: int = 0          # pool slots skipped on device because
-    #                                 an interleaved superstep of the
-    #                                 pipeline had already assigned them
-    # device-loop counters (hype_device, DESIGN.md §4i):
-    loop_chunks: int = 0            # host-visible while_loop segments
-    loop_rounds: int = 0            # pack+dispatch rounds run on device
-    loop_pack_only: int = 0         # rounds that had nothing to score
-    loop_store_peak: int = 0        # peak live rows across phase stores
-    loop_state_bytes: int = 0       # device-resident carry (loop state)
-    refill_signals: int = 0         # kernel refill-trigger flags raised
-    #                                 (phases whose candidate slots ran
-    #                                 out during selection)
-    # resilience counters (core/resilience.py, DESIGN.md §4f):
-    faults_injected: int = 0        # FaultPlan specs that fired this run
-    retries: int = 0                # transient-fault retries + poisoned-
-    #                                 superstep replays (never counted as
-    #                                 extra kernel_calls / supersteps)
-    fallbacks: int = 0              # ladder rungs exhausted before this
-    #                                 engine ran (partition_resilient)
-    snapshots: int = 0              # checkpoints published
-    snapshot_s: float = 0.0         # wall-clock publishing checkpoints
-    restore_s: float = 0.0          # wall-clock restoring the resume ckpt
-    resumed_at: int = -1            # superstep/phase the run resumed
-    #                                 from; -1 = fresh start
-    # memory-budget counters (core/membudget.py, DESIGN.md §4g):
-    mem_retries: int = 0            # DeviceOOM-driven same-engine retries
-    #                                 (real allocator failures + injected
-    #                                 non-fatal oom faults)
-    plan_rung: int = -1             # memory-plan rung the run executed at;
-    #                                 -1 = engine never planned (host path)
-    peak_bytes_planned: int = 0     # the plan's modeled peak device bytes
-    peak_bytes_observed: int = 0    # backend peak_bytes_in_use when the
-    #                                 allocator tracks it; the planned
-    #                                 model value otherwise
-    page_uploads: int = 0           # paged-adjacency chunk uploads
-    page_hits: int = 0              # chunk requests served LRU-resident
-    page_evictions: int = 0         # chunks evicted to stay under budget
-    page_bytes: int = 0             # total bytes uploaded by the pager
-    # refinement post-pass (None unless refine_passes > 0 ran):
-    refine: Optional[object] = None     # core.refine.RefineStats
-
-
-class _BatchedState:
-    """Mutable state for the k growth phases (host side, all numpy)."""
-
-    def __init__(self, hg: Hypergraph, k: int, p: BatchedParams):
-        # opt into the persistent XLA compile cache (REPRO_COMPILE_CACHE)
-        # before any engine traces a kernel; idempotent no-op when unset
-        from repro.kernels._compat import enable_compile_cache
-        enable_compile_cache()
-        self.hg = hg
-        self.k = k
-        self.p = p
-        n, m = hg.n, hg.m
-        self.assignment = np.full(n, -1, dtype=np.int32)
-        self.in_fringe = np.zeros(n, dtype=bool)
-        self.in_pool = np.zeros(n, dtype=bool)     # fringe ∪ held candidates
-        self.cur_fringe = np.empty(0, dtype=np.int64)
-        self.cache = np.full(n, -1.0)
-        self.edge_sizes = np.asarray(hg.edge_sizes, dtype=np.int64)
-        self.edge_epoch = np.full(m, -1, dtype=np.int32)   # activation epoch
-        self.edge_dead = self.edge_sizes == 0              # no live pins left
-        # size-bucketed active-edge queues (replaces the paper's min-heap):
-        # buckets[size] is a FIFO of edge-id arrays; scanning pops from the
-        # front and re-queues still-live edges at the front, so smallest
-        # edges keep being drawn first, like the heap's requeue.
-        self.buckets: dict = {}
-        self.rng = np.random.default_rng(p.seed)
-        self.rand_order = self.rng.permutation(n)
-        self.rand_ptr = 0
-        self.stats = BatchedStats()
-        self._fringe_buf = np.full(p.s, -1, dtype=np.int32)
-        # One-time unique-neighbor CSR (memoized on hg): turns every tile
-        # build into a pure gather. None for pathological hub expansions —
-        # scoring then falls back to per-batch dedup with cap_pins.
-        self.adj = hg.vertex_adjacency()
-        # deterministic fault schedule: the param (shared instance across
-        # a degradation ladder) or a FRESH parse of REPRO_FAULT_PLAN per
-        # engine run, so every run of a chaos suite sees the full plan
-        self.fault_plan = resilience.resolve_fault_plan(p.fault_plan)
-
-    # ------------------------------------------------------------------ #
-    def _guarded_kernel(self, fn, ordinal: int, kinds=("dispatch",),
-                        donated=()):
-        """Run a device call under fault injection + bounded retry.
-
-        Injected faults fire *before* the call (the dispatch site), so a
-        transient retry re-issues the identical pure computation — which
-        is what keeps recovery bit-identical to a fault-free run. A
-        fatal spec, an exhausted retry budget, or a real failure after
-        any ``donated`` buffer was consumed (the call cannot be
-        re-issued) raises ``UnrecoverableFault`` for the ladder.
-
-        Memory faults are different: a real allocator failure
-        (``membudget.is_oom_error``) or a non-fatal injected ``oom``
-        raises ``DeviceOOM`` immediately — retrying the identical call
-        cannot help an allocation that does not fit, and the memory-rung
-        retry loop (``_run_pipeline_budgeted``, DESIGN.md §4g) rebuilds
-        the whole engine state at a smaller plan anyway, donated or not.
-        """
-        plan = self.fault_plan
-        attempts = 0
-        while True:
-            try:
-                if plan is not None:
-                    sp = plan.fire(kinds, ordinal)
-                    if sp is not None:
-                        self.stats.faults_injected += 1
-                        raise resilience.FaultInjected(
-                            sp.kind, ordinal, sp.fatal)
-                return fn()
-            except resilience.UnrecoverableFault:
-                raise
-            except membudget.DeviceOOM:
-                raise
-            except resilience.FaultInjected as exc:
-                if exc.fatal:
-                    raise resilience.UnrecoverableFault(str(exc)) from exc
-                if exc.kind == "oom":
-                    raise membudget.DeviceOOM(
-                        str(exc),
-                        rung=getattr(self, "mem_rung", None)) from exc
-                err = exc
-            except Exception as exc:
-                if membudget.is_oom_error(exc):
-                    raise membudget.DeviceOOM(
-                        f"device allocation failed: {exc!r}",
-                        rung=getattr(self, "mem_rung", None)) from exc
-                if any(a.is_deleted() for a in donated):
-                    raise resilience.UnrecoverableFault(
-                        f"device call failed after buffer donation: "
-                        f"{exc!r}") from exc
-                err = exc
-            attempts += 1
-            if attempts > int(self.p.max_retries):
-                raise resilience.UnrecoverableFault(
-                    f"retry budget ({self.p.max_retries}) exhausted: "
-                    f"{err!r}") from err
-            self.stats.retries += 1
-            time.sleep(float(self.p.retry_backoff_s) * attempts)
-
-    # ------------------------------------------------------------------ #
-    def random_unassigned(self, count: int = 1,
-                          in_pool: Optional[np.ndarray] = None
-                          ) -> np.ndarray:
-        """Next ``count`` unassigned non-pool vertices of the random stream.
-
-        Vectorized skip-pointer scan over the shuffled order; the pointer
-        only advances past consumed positions so no vertex is skipped.
-        ``in_pool`` selects which pool-membership mask to respect (the
-        sharded engine keeps one per device group); default is the
-        engine-wide mask.
-        """
-        if in_pool is None:
-            in_pool = self.in_pool
-        n = self.hg.n
-        out: list = []
-        got = 0
-        while self.rand_ptr < n and got < count:
-            chunk = self.rand_order[self.rand_ptr:
-                                    self.rand_ptr + max(1024, count)]
-            ok = np.flatnonzero((self.assignment[chunk] < 0)
-                                & ~in_pool[chunk])
-            if ok.size >= count - got:
-                ok = ok[:count - got]
-                self.rand_ptr += int(ok[-1]) + 1
-            else:
-                self.rand_ptr += chunk.size
-            take = chunk[ok].astype(np.int64)
-            got += take.size
-            if take.size:
-                out.append(take)
-        if got < count:     # stream exhausted; the stragglers sit earlier
-            rem = np.flatnonzero((self.assignment < 0) & ~in_pool)
-            if out:
-                rem = np.setdiff1d(rem, np.concatenate(out),
-                                   assume_unique=True)
-            if rem.size:
-                out.append(rem[:count - got].astype(np.int64))
-        return (np.concatenate(out) if out
-                else np.empty(0, dtype=np.int64))
-
-    def set_fringe(self, new_fringe: np.ndarray) -> None:
-        """Sync the s-sized fringe view (paper's F) used for scoring."""
-        self.in_fringe[self.cur_fringe] = False
-        self.in_fringe[new_fringe] = True
-        self.cur_fringe = new_fringe
-        self._fringe_buf[:] = -1
-        self._fringe_buf[:new_fringe.size] = new_fringe
-
-    # ------------------------------------------------------------------ #
-    def activate(self, vs: np.ndarray, phase: int) -> None:
-        """Mark the edges incident to newly admitted vertices active."""
-        edges, _ = scoring.gather_csr_rows(
-            self.hg.v2e_indptr, self.hg.v2e_indices, vs)
-        if edges.size == 0:
-            return
-        edges = np.unique(edges.astype(np.int64))
-        fresh = edges[(self.edge_epoch[edges] != phase)
-                      & ~self.edge_dead[edges]]
-        if fresh.size == 0:
-            return
-        self.edge_epoch[fresh] = phase
-        sizes = self.edge_sizes[fresh]
-        for sz in np.unique(sizes):
-            self.buckets.setdefault(int(sz), collections.deque()).append(
-                fresh[sizes == sz])
-
-    # ------------------------------------------------------------------ #
-    def draw_candidates(self, need: int) -> np.ndarray:
-        """Up to ``need`` distinct universe vertices from smallest edges.
-
-        One vectorized pass: pull edges smallest-size-first under a pin
-        budget, scan all their pins at once, retire dead edges (no
-        unassigned pin left — forever), requeue the still-live ones at the
-        bucket fronts so they are rescanned first next time (the heap's
-        requeue, without the heap). Serves the classic batched engine;
-        the superstep engines draw all phases at once from the flat
-        bucket store instead (``pack_superstep``).
-        """
-        buckets = self.buckets
-        in_pool = self.in_pool
-        if need <= 0:
-            return np.empty(0, dtype=np.int64)
-        budget = max(4 * need, 512)
-        batches: list = []
-        keys: list = []     # (source bucket key, count) pairs, for requeues
-        pulled = 0
-        for sz in sorted(buckets.keys()):
-            q = buckets[sz]
-            while q and pulled < budget:
-                arr = q.popleft()
-                n_take = (budget - pulled + sz - 1) // max(sz, 1)
-                if arr.size > n_take:
-                    q.appendleft(arr[n_take:])
-                    arr = arr[:n_take]
-                batches.append(arr)
-                keys.append((sz, arr.size))
-                pulled += arr.size * max(sz, 1)
-            if not q:
-                del buckets[sz]
-            if pulled >= budget:
-                break
-        if not batches:
-            return np.empty(0, dtype=np.int64)
-        edges = np.concatenate(batches)
-        pins, prow = scoring.gather_csr_rows(
-            self.hg.e2v_indptr, self.hg.e2v_indices, edges)
-        pins = pins.astype(np.int64)
-        self.stats.edges_scanned += pins.size
-        unassigned = self.assignment[pins] < 0
-        live = np.bincount(prow[unassigned], minlength=edges.size) > 0
-        if not live.all():
-            self.edge_dead[edges[~live]] = True     # dead forever
-        live_edges = edges[live]
-        if live_edges.size:
-            # requeue under the key each edge was drawn from, so the
-            # caller's key scheme (exact sizes for the classic engine,
-            # power-of-two classes for the superstep engine) is preserved
-            lkey = np.repeat([k for k, _ in keys],
-                             [c for _, c in keys])[live]
-            for s in np.unique(lkey):
-                buckets.setdefault(
-                    int(s), collections.deque()).appendleft(
-                        live_edges[lkey == s])
-        fresh = unassigned & ~in_pool[pins]
-        cand = pins[fresh]
-        if cand.size:
-            _, first = np.unique(cand, return_index=True)
-            cand = cand[np.sort(first)][:need]
-        return cand
-
-    # ------------------------------------------------------------------ #
-    def score_misses(self, cand: np.ndarray) -> None:
-        """Score cache-miss candidates in one batched pass, fill the cache.
-
-        Large batches (every phase opening, where the bulk of the scoring
-        lives) go through the Pallas ``hype_scores`` kernel as one (b, L)
-        tile; dribbles below ``kernel_min`` rows are scored by the exact
-        same formula on host, because a device round-trip per 2-3 rows is
-        precisely the latency-bound pattern this engine exists to avoid.
-        """
-        if cand.size == 0:
-            return
-        miss = cand[self.cache[cand] < 0.0]
-        self.stats.cache_hits += cand.size - miss.size
-        if miss.size == 0:
-            return
-        if miss.size >= self.p.kernel_min:
-            import jax.numpy as jnp
-            from repro.kernels.hype_score.ops import hype_scores
-
-            plan = self.fault_plan
-            fringe_dev = jnp.asarray(self._fringe_buf)
-            for lo in range(0, miss.size, self.p.b):
-                chunk = miss[lo:lo + self.p.b]
-                # two B buckets (64 / b) keep retraces rare while small
-                # top-up batches avoid paying for a full-width tile
-                pad_b = 64 if chunk.size <= 64 else self.p.b
-                if self.adj is not None:
-                    tile, truncated = scoring.neighbor_tile_adj(
-                        self.adj, chunk, self.assignment, pad_b=pad_b)
-                else:
-                    tile, truncated = scoring.neighbor_tile(
-                        self.hg, chunk, self.assignment,
-                        cap_pins=self.p.cap_pins, pad_b=pad_b)
-                ordinal = self.stats.kernel_calls + 1
-                out = np.asarray(self._guarded_kernel(
-                    lambda: hype_scores(jnp.asarray(tile), fringe_dev),
-                    ordinal)).astype(np.float64)
-                if plan is not None:
-                    sp = plan.fire(("nan",), ordinal)
-                    if sp is not None:    # poison the whole score tile
-                        self.stats.faults_injected += 1
-                        if sp.fatal:
-                            raise resilience.UnrecoverableFault(
-                                f"injected fatal nan tile at kernel "
-                                f"call {ordinal}")
-                        out = out.copy()
-                        out[:chunk.size] = np.nan
-                sc = out[:chunk.size]
-                bad = ~np.isfinite(sc)
-                if bad.any():   # quarantine: rescore poisoned rows on
-                    #             host, bit-identical to a clean kernel
-                    sc[bad] = self._rescore_rows(chunk[bad])
-                    self.stats.host_rows += int(bad.sum())
-                sc[truncated] += scoring.TRUNC_PENALTY
-                self.cache[chunk] = sc
-                self.stats.kernel_calls += 1
-                self.stats.kernel_rows += int(chunk.size)
-        else:
-            if self.adj is not None:
-                sc = scoring.batched_dext_adj(
-                    self.adj, miss, self.in_fringe, self.assignment)
-            else:
-                sc = scoring.batched_dext_numpy(
-                    self.hg, miss, self.in_fringe, self.assignment,
-                    cap_pins=self.p.cap_pins,
-                    max_width=scoring.L_BUCKETS[-1])
-            self.stats.host_rows += int(miss.size)
-            self.cache[miss] = sc
-
-    def _rescore_rows(self, ids: np.ndarray) -> np.ndarray:
-        """Host re-score of NaN-quarantined kernel rows (DESIGN.md §4f).
-
-        Rebuilds the same clipped neighbor tile the kernel saw and
-        emulates its count (valid entries minus fringe members), so the
-        recovered scores are bit-identical to an unpoisoned kernel call:
-        the kernel's integer counts are float32-exact and the truncation
-        penalty is applied by the caller either way.
-        """
-        if self.adj is not None:
-            tile, _ = scoring.neighbor_tile_adj(
-                self.adj, ids, self.assignment)
-        else:
-            tile, _ = scoring.neighbor_tile(
-                self.hg, ids, self.assignment, cap_pins=self.p.cap_pins)
-        tile = tile[:ids.size]
-        valid = tile >= 0
-        ent = np.where(valid, tile, 0)
-        return (valid & ~self.in_fringe[ent]).sum(axis=1).astype(
-            np.float64)
-
-
-def _grow_partition(st: _BatchedState, phase: int, target: int,
-                    warm: bool = False) -> None:
-    """Grow core set ``phase`` to ``target`` vertices.
-
-    The step loop keeps a *pool* of up to ``pool_cap`` scored candidates
-    sorted by cached score. Refills happen in bulk (one kernel tile per
-    ``b`` rows) whenever the pool runs low; between refills a step is just
-    "admit the t best, queue their edges" — the latency-bound per-vertex
-    machinery of the sequential engines is gone entirely. The paper's
-    s-sized fringe survives as the top-s of the pool: it is what the
-    scoring kernel subtracts, exactly like F in Eq. 1.
-
-    ``warm`` continues a phase that already has members (a cross-engine
-    warm start from a snapshot, DESIGN.md §4f): existing members are
-    activated instead of seeding, and growth resumes from their count.
-    """
-    p = st.p
-    st.cache[:] = -1.0
-    st.buckets = {}
-    pool = np.empty(0, dtype=np.int64)       # kept sorted by score asc
-    pending: list = []                       # admitted, edges not yet queued
-
-    acc = 0
-    if warm:
-        members = np.flatnonzero(st.assignment == phase)
-        acc = int(members.size)
-        if acc >= target:
-            return
-        if acc:
-            st.activate(members.astype(np.int64), phase)
-    if acc == 0:
-        seeds = st.random_unassigned(1)
-        if seeds.size == 0:
-            return
-        st.assignment[seeds] = phase
-        st.activate(seeds, phase)
-        acc = 1
-
-    while acc < target:
-        st.stats.steps += 1
-        # ------- refill: bulk-draw and kernel-score new candidates -------
-        if pool.size < max(p.t, p.refill_lo):
-            if pending:
-                st.activate(np.concatenate(pending), phase)
-                pending = []
-            cand = st.draw_candidates(p.pool_cap - pool.size)
-            if cand.size:
-                st.score_misses(cand)
-                st.in_pool[cand] = True
-                pool = np.concatenate([pool, cand])
-                pool = pool[np.argsort(st.cache[pool], kind="stable")]
-                st.set_fringe(pool[:p.s])
-        if pool.size == 0:                    # random restart (batched: on
-            # shattered remainders each isolated vertex would otherwise
-            # cost a full step, so seed up to t fresh growth points)
-            vs = st.random_unassigned(p.t)
-            if vs.size == 0:
-                return
-            st.stats.random_restarts += 1
-            pool = vs
-            st.in_pool[vs] = True
-            st.cache[vs] = 0.0
-            st.set_fringe(pool[:p.s])
-        # ------- core update: admit the t best pool vertices -------
-        nt = min(p.t, target - acc, pool.size)
-        admit, pool = pool[:nt], pool[nt:]
-        st.assignment[admit] = phase
-        st.in_pool[admit] = False
-        pending.append(admit)
-        st.set_fringe(pool[:p.s])
-        acc += int(admit.size)
-
-    # release fringe + pool back to the universe (§III-B1 step 4)
-    st.set_fringe(np.empty(0, dtype=np.int64))
-    st.in_pool[pool] = False
-
-
-# --------------------------------------------------------------------- #
-# Superstep engine: device-resident, multi-phase, cross-phase cache.
-# --------------------------------------------------------------------- #
-
-@dataclasses.dataclass
-class SuperstepParams(BatchedParams):
-    """Knobs for the superstep engine (DESIGN.md §4).
-
-    Inherits the batched knobs; ``t`` (admissions per phase per
-    superstep), ``s``, ``pool_cap`` and ``seed`` keep their meaning.
-    ``b``/``kernel_min``/``refill_lo`` are unused — refills are sized by
-    ``rows`` and every score goes through the fused device call.
-    """
-    # fresh candidate rows per phase per superstep; None = max(8, t) so
-    # refills keep up with the admission drain at any t
-    rows: Optional[int] = None
-    # in-flight supersteps of the double-buffered pipeline (DESIGN.md
-    # §4d). 1 = lock-step (bit-identical to the pre-pipeline engine);
-    # 2 = the default overlap: while the device runs superstep N the
-    # host mirrors superstep N-1's admissions and packs superstep N+1.
-    pipeline_depth: int = 2
-    # device-memory budget (core/membudget.py, DESIGN.md §4g): bytes,
-    # a "512MB"/"2GiB" string, or None = the REPRO_DEVICE_MEM_BUDGET
-    # env var, falling back to the backend's reported allocator limit.
-    # The engine plans its tile sizes against the budget before upload
-    # and walks the memory-rung ladder on (real or injected) OOM.
-    mem_budget: Optional[object] = None
-
-
-# Flat bucket-store key layout: one sorted int64 per queued (phase,
-# class, edge) activation — phase in the top bits, the power-of-two
-# size-class exponent below it, and a sequence number in the low bits.
-# Keeping the store sorted by this key makes "draw smallest classes
-# first, FIFO within a class, requeues at the front" a pure prefix scan
-# per phase: back-appends allocate increasing sequence numbers, front
-# requeues allocate decreasing ones.
-_PH_SHIFT = 50
-_CLS_SHIFT = 44
-_SEQ_START = np.int64(1) << 43
-
-
-@dataclasses.dataclass
-class _CallArgs:
-    """The host-built buffers of one superstep's device call.
-
-    Kept on the in-flight handle so a quarantined superstep can be
-    replayed *exactly* (same pure program, same inputs, current image
-    state). ``bias`` is always the CLEAN bias — an injected NaN tile
-    poisons a copy at dispatch time only.
-    """
-    delta: np.ndarray
-    vals: np.ndarray
-    dirty: np.ndarray
-    dcnt: np.ndarray
-    fresh: np.ndarray
-    bias: np.ndarray
-    pool_arr: np.ndarray
-    fringe: np.ndarray
-    targets: np.ndarray
-    select_k: int
-    # spill rung only: the held pool's scores from the host cache
-    # mirror, captured at dispatch AFTER the dirty decrements were
-    # applied host-side — a replay reuses them verbatim, so the
-    # decrements are never double-applied (DESIGN.md §4g)
-    prev: Optional[np.ndarray] = None
-
-
-@dataclasses.dataclass
-class _Superstep:
-    """One in-flight superstep: result futures + replay material.
-
-    ``winners``/``n_stale``/``poison`` (and ``ncf`` for the sharded
-    engine) are device futures the driver blocks on at harvest;
-    ``donated`` pins the consumed image arrays until that block (a
-    donated buffer's last reference must not drop while the execution
-    consuming it is still in flight); ``args`` is the clean input set
-    for poisoned-superstep replays.
-    """
-    winners: object
-    n_stale: object
-    poison: object
-    fresh_ids: np.ndarray
-    donated: tuple
-    args: _CallArgs
-    ncf: object = None
-    # spill rung only: the fresh scores the host cache mirror adopts at
-    # harvest (after the poison check — a quarantined superstep's
-    # scores are garbage and are replaced by the replay's)
-    scores: object = None
-
-
-class _SuperstepState(_BatchedState):
-    """Adds the device-resident graph image and per-phase growth state.
-
-    The host keeps only ids and flags (assignment mirror, pool id lists,
-    the flat active-edge bucket store, a has-been-scored bitmask); every
-    *score* lives in the device cache and is maintained exactly by the
-    decrement rule in ``scoring._pipeline_program`` — no per-phase wipe.
-    Admissions are selected, capped and applied *on device*
-    (``dispatch``); the host mirrors them at ``harvest`` time, possibly
-    several supersteps later, which is what lets the pipeline driver
-    overlap host orchestration with device compute.
-    """
-
-    def __init__(self, hg: Hypergraph, k: int, p: SuperstepParams,
-                 mesh=None, mem_rung: int = 0):
-        super().__init__(hg, k, p)
-        self.dev_cache = None       # device score cache (None when spilled)
-        self.host_cache = None      # host float32 mirror (spill rung only)
-        self.paged_adj = None       # membudget.PagedAdjacency (paged rung)
-        self.mem_plan = None
-        self.g_chunk = 1
-        self.mem_rung = int(mem_rung)
-        if k >= 1 << (63 - _PH_SHIFT):      # bucket-store key width
-            self.dev = None
-            return
-        if self.adj is None:        # hub-expansion guard tripped on host
-            self.dev = None
-            return
-        deg = np.diff(self.adj[0])
-        self.deg = deg
-        # One gather-width per run: every distinct shape retraces the
-        # whole jitted superstep program (~0.5-1s in interpret mode), and
-        # padding a gather is far cheaper than a retrace. The tile width
-        # is the bucket of the 99.5th-percentile degree — the handful of
-        # rows wider than that are truncated and carry the hub penalty
-        # (they'd compare as "huge neighborhood" anyway).
-        self.tile_l = scoring._bucket_width(int(min(
-            np.percentile(deg, 99.5) if deg.size else 1,
-            scoring.L_BUCKETS[-1])))
-        # memory plan (core/membudget.py, DESIGN.md §4g): size every
-        # device-resident tensor BEFORE upload against the resolved
-        # budget; ``mem_rung`` > 0 means an earlier attempt OOMed and
-        # the retry loop wants the next-smaller configuration. An
-        # unconstrained budget at rung 0 reproduces today's tile
-        # choices bit for bit. MemoryLadderExhausted propagates to the
-        # retry loop, which hands the engine-degradation ladder over.
-        rows = p.rows if p.rows else max(8, p.t)
-        self.mem_budget = membudget.resolve_budget(
-            getattr(p, "mem_budget", None))
-        spec = membudget.MemSpec(
-            n=hg.n, adj_pins=int(self.adj[1].size), k=k, rows=int(rows),
-            pool_cap=int(p.pool_cap), t=int(p.t),
-            tile_l=int(self.tile_l),
-            pipeline_depth=max(1, int(p.pipeline_depth)))
-        plan = membudget.plan_memory(spec, self.mem_budget,
-                                     self._mem_features,
-                                     rung_start=self.mem_rung)
-        self.mem_plan = plan
-        self.mem_rung = plan.rung
-        self.tile_l = plan.tile_l
-        self.g_chunk = plan.g_chunk
-        self.stats.plan_rung = plan.rung
-        self.stats.peak_bytes_planned = int(plan.planned_bytes)
-        fplan = self.fault_plan
-        if fplan is not None:
-            sp = fplan.fire(("oom",), 0)
-            if sp is not None:
-                # simulated allocation failure at the image-upload site
-                self.stats.faults_injected += 1
-                if sp.fatal:
-                    raise resilience.UnrecoverableFault(
-                        "injected fatal OOM during device image upload")
-                raise membudget.DeviceOOM(
-                    "injected OOM during device image upload",
-                    rung=self.mem_rung)
-        import jax
-        import jax.numpy as jnp
-
-        n, m = hg.n, hg.m
-        try:
-            if plan.paged:
-                # no resident CSR: the pager uploads id-range chunks on
-                # demand under its own LRU byte budget. ``dev`` keeps a
-                # non-None sentinel so the driver takes the device path.
-                self.paged_adj = membudget.PagedAdjacency(
-                    self.adj, plan.page_bytes, self.stats)
-                self.dev = (None, None)
-            else:
-                self.dev = hg.device_adjacency(mesh=mesh)
-                if self.dev is None:
-                    return
-            self.dev_assign = jnp.full((n,), -1, jnp.int32)
-            if plan.spill_cache:
-                self.host_cache = np.full(n, -1.0, dtype=np.float32)
-            else:
-                self.dev_cache = jnp.full((n,), -1.0, jnp.float32)
-            self.dev_acc = jnp.zeros((k,), jnp.int32)
-            # sticky NaN-quarantine flag (scoring._poison_guard), donated
-            # through every superstep like the rest of the mutable image
-            self.dev_poison = jnp.zeros((1,), jnp.int32)
-        except Exception as exc:
-            if membudget.is_oom_error(exc):
-                raise membudget.DeviceOOM(
-                    f"device image upload failed: {exc!r}",
-                    rung=self.mem_rung) from exc
-            raise
-        if mesh is not None:       # replicate the mutable image too
-            from jax.sharding import NamedSharding, PartitionSpec
-            rep = NamedSharding(mesh, PartitionSpec())
-            self.dev_assign = jax.device_put(self.dev_assign, rep)
-            self.dev_cache = jax.device_put(self.dev_cache, rep)
-            self.dev_acc = jax.device_put(self.dev_acc, rep)
-            self.dev_poison = jax.device_put(self.dev_poison, rep)
-        self.cache_scored = np.zeros(n, dtype=bool)
-        self.pools = [np.empty(0, dtype=np.int64) for _ in range(k)]
-        # flat (phase, class, edge) bucket store — two parallel arrays
-        # sorted by the composite key above, replacing the per-phase
-        # dict-of-deques
-        self.bq_key = np.empty(0, dtype=np.int64)
-        self.bq_edge = np.empty(0, dtype=np.int64)
-        self._bq_pending: list = []     # rows awaiting the lazy merge
-        self._seq_back = np.int64(_SEQ_START)
-        self._seq_front = np.int64(_SEQ_START) - 1
-        self.edge_queued = np.zeros((k, m), dtype=bool)
-        self.delta_ids: list = []
-        self.delta_vals: list = []
-        self.pending_dirty: list = []   # queued winner decrements
-        self._excl_scratch = np.zeros(n, dtype=bool)
-        # The dirty-pair pad is pre-sized from the expected per-superstep
-        # dirty rate and only ratchets up (monotone -> at most a couple
-        # of traces).
-        mean_deg = self.adj[1].size / max(hg.n, 1)
-        expect = min(hg.n, max(256, int(2 * k * p.t * mean_deg)))
-        self._dirty_ratchet = 1 << int(np.ceil(np.log2(expect + 1)))
-        csr_bytes = (0 if self.paged_adj is not None
-                     else self.dev[0].nbytes + self.dev[1].nbytes)
-        cache_bytes = (0 if self.dev_cache is None
-                       else self.dev_cache.nbytes)
-        self.stats.device_image_bytes = int(
-            csr_bytes + cache_bytes + self.dev_assign.nbytes
-            + self.dev_acc.nbytes)
-
-    # ------------------------------------------------------------------ #
-    # injected faults this engine's dispatch site can see (the sharded
-    # engine adds "collective" — its dispatch owns the all_gather);
-    # "oom@N" lets chaos suites simulate mid-run allocation failures
-    _fault_kinds = ("dispatch", "oom")
-    # memory-rung reductions this engine has program variants for
-    # (membudget.rung_ladder); the sharded engine only supports the
-    # width/depth knobs — its CSR is replicated per device
-    _mem_features = membudget.SUPERSTEP_FEATURES
-
-    @property
-    def interpret(self) -> bool:
-        """Pallas interpret mode, re-resolved per call.
-
-        A property, not an ``__init__`` attribute, so flipping
-        ``REPRO_PALLAS_INTERPRET`` steers even a live engine — the
-        NaN-quarantine tests flip it without rebuilding state, and
-        ``kernels/_compat.pallas_interpret`` already reads the env per
-        call; this was the one residual cache of its value.
-        """
-        from repro.kernels._compat import pallas_interpret
-        return pallas_interpret()
-
-    def _to_device(self, arr: np.ndarray):
-        """Upload a host array as this engine's replicated image layout."""
-        import jax.numpy as jnp
-        return jnp.asarray(arr)
-
-    # ------------------------------------------------------------------ #
-    def _pmask(self, g: int) -> np.ndarray:
-        """Pool-membership mask governing phase ``g``'s draws.
-
-        Engine-wide for the single-device engine; the sharded engine
-        overrides this with the per-device-group mask.
-        """
-        return self.in_pool
-
-    def _restart_mask(self) -> np.ndarray:
-        """Mask a restart injection must avoid: every engine pool.
-
-        Injections are applied to the device image with an unconditional
-        scatter, so they must never name a vertex an in-flight superstep
-        could still admit — i.e. anything in ANY pool. For the
-        single-device engine that is exactly ``in_pool``; the sharded
-        engine unions its per-group masks.
-        """
-        return self.in_pool
-
-    def assign_now(self, vs: np.ndarray, phase: int) -> None:
-        """Assign ``vs`` to ``phase``; queue the device delta + dirtying."""
-        vs = np.asarray(vs, dtype=np.int64)
-        self.assignment[vs] = phase
-        self.in_pool[vs] = False
-        self.delta_ids.append(vs)
-        self.delta_vals.append(np.full(vs.size, phase, dtype=np.int32))
-
-    def activate_phase(self, vs: np.ndarray, phase: int) -> None:
-        """Queue the edges incident to newly admitted vertices of a phase."""
-        self.activate_many(np.asarray(vs, dtype=np.int64),
-                           np.full(len(vs), phase, dtype=np.int64))
-
-    def activate_many(self, vs: np.ndarray, phases: np.ndarray) -> None:
-        """Queue incident edges for a whole superstep's admissions at once.
-
-        ``vs``/``phases`` are parallel arrays; one CSR gather + one
-        lexsort appends every fresh (phase, edge) activation to the back
-        of the flat sorted bucket store — no per-phase python pass.
-        """
-        edges, owner = scoring.gather_csr_rows(
-            self.hg.v2e_indptr, self.hg.v2e_indices, vs)
-        if edges.size == 0:
-            return
-        edges = edges.astype(np.int64)
-        ph = phases[owner]
-        key = np.unique(ph * np.int64(self.hg.m) + edges)
-        ph, edges = key // self.hg.m, key % self.hg.m
-        live = ~self.edge_queued[ph, edges] & ~self.edge_dead[edges]
-        ph, edges = ph[live], edges[live]
-        if edges.size == 0:
-            return
-        self.edge_queued[ph, edges] = True
-        # power-of-two size classes instead of exact sizes: smallest-first
-        # drawing is a heuristic, and ~12 classes keep the number of
-        # (phase, class) segments small.
-        sizes = self.edge_sizes[edges]
-        cls = np.where(
-            sizes <= 1, np.int64(0),
-            np.ceil(np.log2(np.maximum(sizes, 2))).astype(np.int64))
-        order = np.lexsort((cls, ph))
-        ph, edges, cls = ph[order], edges[order], cls[order]
-        seq = np.arange(self._seq_back, self._seq_back + edges.size,
-                        dtype=np.int64)
-        self._seq_back += edges.size
-        self._store_insert(
-            (ph << _PH_SHIFT) | (cls << _CLS_SHIFT) | seq, edges)
-
-    # ------------------------------------------------------ bucket store
-    def _store_insert(self, key: np.ndarray, edges: np.ndarray) -> None:
-        """Queue rows for the store; merged lazily at the next draw.
-
-        Batching the merges (one sorted-merge per pack instead of one
-        per activation) keeps store maintenance O(store) *per superstep*
-        rather than per call — visibility is identical because draws
-        only happen at pack time, after ``_store_flush``.
-        """
-        if key.size:
-            self._bq_pending.append((key, edges))
-
-    def _store_flush(self) -> None:
-        if not self._bq_pending:
-            return
-        key = np.concatenate([kk for kk, _ in self._bq_pending])
-        edges = np.concatenate([ee for _, ee in self._bq_pending])
-        self._bq_pending = []
-        order = np.argsort(key, kind="stable")
-        key, edges = key[order], edges[order]
-        if self.bq_key.size == 0:
-            self.bq_key, self.bq_edge = key, edges
-            return
-        pos = np.searchsorted(self.bq_key, key)
-        self.bq_key = np.insert(self.bq_key, pos, key)
-        self.bq_edge = np.insert(self.bq_edge, pos, edges)
-
-    def _store_take(self, budget: np.ndarray):
-        """Greedy smallest-class-first prefix take for every phase.
-
-        ``budget`` is the per-phase pin budget; each queued edge
-        contributes its power-of-two class value (the same accounting
-        the dict-of-deques draw used). Only each phase's front slice
-        (at most ``budget`` rows — every edge costs >= 1 unit) is ever
-        decoded, so the take is O(sum budgets + k log store), not
-        O(store). Returns the taken rows' ``(edges, ph, cls_log)``
-        columns, phase-major (the store is key-sorted), and drops them
-        from the store.
-        """
-        self._store_flush()
-        key = self.bq_key
-        if key.size == 0 or not budget.any():
-            empty = np.empty(0, dtype=np.int64)
-            return empty, empty, empty
-        k = self.k
-        bounds = np.searchsorted(
-            key, np.arange(k + 1, dtype=np.int64) << _PH_SHIFT)
-        start = bounds[:k]
-        cap = np.minimum(bounds[1:] - start, budget)
-        tot = int(cap.sum())
-        if tot == 0:
-            empty = np.empty(0, dtype=np.int64)
-            return empty, empty, empty
-        head = np.cumsum(cap) - cap
-        local = np.arange(tot, dtype=np.int64) - np.repeat(head, cap)
-        rows = np.repeat(start, cap) + local
-        ph_r = np.repeat(np.arange(k, dtype=np.int64), cap)
-        ckey = key[rows]
-        cls_log = (ckey >> _CLS_SHIFT) & np.int64(63)
-        csize = np.int64(1) << cls_log
-        cum = np.cumsum(csize)
-        excl = cum - csize
-        base = np.zeros(k, dtype=np.int64)
-        has = cap > 0
-        base[has] = excl[head[has]]
-        take = (excl - base[ph_r]) < budget[ph_r]
-        tk = rows[take]
-        edges_t, ph_t, cls_t = self.bq_edge[tk], ph_r[take], cls_log[take]
-        if tk.size:     # drop taken rows NOW — restarts may insert
-            keep = np.ones(key.size, dtype=bool)
-            keep[tk] = False
-            self.bq_key = key[keep]
-            self.bq_edge = self.bq_edge[keep]
-        return edges_t, ph_t, cls_t
-
-    def _store_requeue(self, rq_ph: list, rq_cls: list,
-                       rq_edge: list) -> None:
-        """Requeue still-live taken rows at their queue fronts."""
-        if not rq_ph:
-            return
-        ph = np.concatenate(rq_ph)
-        cls = np.concatenate(rq_cls)
-        edges = np.concatenate(rq_edge)
-        seq = np.arange(self._seq_front - edges.size + 1,
-                        self._seq_front + 1, dtype=np.int64)
-        self._seq_front -= edges.size
-        key = (ph << _PH_SHIFT) | (cls << _CLS_SHIFT) | seq
-        order = np.argsort(key, kind="stable")
-        self._store_insert(key[order], edges[order])
-
-    def take_delta(self, cap: int):
-        """Drain up to ``cap`` queued (id, phase) assignment pairs.
-
-        FIFO across calls: an overflowing drain leaves the tail queued
-        (int64 ids / int32 phases preserved) for the next superstep.
-        """
-        if not self.delta_ids:
-            return (np.empty(0, dtype=np.int64),
-                    np.empty(0, dtype=np.int32))
-        ids = np.concatenate(self.delta_ids).astype(np.int64, copy=False)
-        vals = np.concatenate(self.delta_vals).astype(np.int32,
-                                                      copy=False)
-        if ids.size <= cap:
-            self.delta_ids, self.delta_vals = [], []
-            return ids, vals
-        self.delta_ids = [ids[cap:]]
-        self.delta_vals = [vals[cap:]]
-        return ids[:cap], vals[:cap]
-
-    def _pack_delta_dirty(self, delta_cap, extra_dirty=()):
-        """Drain queued assignments into the padded device buffers.
-
-        Pre-aggregates the dirtied-neighbor multiset of the drained
-        delta — one CSR gather + bincount, shipped as (unique id, count)
-        pairs padded to a power-of-two bucket (bounded retraces,
-        O(unique) device scatter). ``extra_dirty`` merges additional raw
-        neighbor-id arrays into the multiset (the sharded engine's
-        queued decrement tails). Returns ``(delta, vals, dirty, dcnt)``;
-        shared by both device engines so their cache-exactness
-        bookkeeping cannot drift apart.
-        """
-        d_ids, d_vals = self.take_delta(delta_cap)
-        delta = np.full(delta_cap, -1, dtype=np.int32)
-        vals = np.zeros(delta_cap, dtype=np.int32)
-        delta[:d_ids.size] = d_ids
-        vals[:d_ids.size] = d_vals
-        nbrs, _ = scoring.gather_csr_rows(self.adj[0], self.adj[1], d_ids)
-        parts = list(extra_dirty)
-        if nbrs.size:
-            parts.append(nbrs.astype(np.int64))
-        if parts:
-            counts = np.bincount(np.concatenate(parts))
-            uniq = np.flatnonzero(counts)
-            self.stats.cache_invalidations += int(uniq.size)
-        else:
-            uniq = np.empty(0, dtype=np.int64)
-            counts = np.empty(0, dtype=np.int64)
-        cap = max(self._dirty_ratchet,
-                  1 << int(np.ceil(np.log2(max(uniq.size, 1)))))
-        self._dirty_ratchet = cap
-        dirty = np.full(cap, -1, dtype=np.int32)
-        dcnt = np.zeros(cap, dtype=np.float32)
-        dirty[:uniq.size] = uniq
-        dcnt[:uniq.size] = counts[uniq]
-        return delta, vals, dirty, dcnt
-
-    # ---------------------------------------------------- pipeline hooks
-    def pack_superstep(self, active, R: int, P: int, t: int,
-                       targets: np.ndarray, acc: np.ndarray):
-        """Host half of one superstep: draw, dedup, tile-pack, restart.
-
-        One flat store scan + ONE pins gather covers every active
-        phase's candidate draw (stage A, assignment-independent); a thin
-        rotation-ordered pass then applies the order-sensitive pieces —
-        edge liveness, candidate acceptance against the live pool masks,
-        and random restarts (stage B). Mutates pools/masks/acc for the
-        injections and returns ``(packed, injected)`` where ``packed``
-        is ``(fresh, bias, pool_arr, fresh_ids)`` or None when no phase
-        had anything to score.
-        """
-        kG = self.k
-        rot = self.stats.supersteps % active.size
-        order = np.concatenate([active[rot:], active[:rot]])
-        # stage 0: drop ids that went stale (admitted meanwhile) from
-        # the held pools, then size each phase's draw
-        need = np.zeros(kG, dtype=np.int64)
-        budget = np.zeros(kG, dtype=np.int64)
-        for g in order:
-            gi = int(g)
-            ids = self.pools[gi]
-            if ids.size:
-                keep = self.assignment[ids] < 0
-                if not keep.all():
-                    self._pmask(gi)[ids[~keep]] = False
-                    ids = ids[keep]
-                    self.pools[gi] = ids
-            need[gi] = min(R, P - ids.size)
-            if need[gi] > 0:
-                budget[gi] = max(4 * need[gi], 512)
-        # stage A: one prefix take over the sorted store + one CSR
-        # gather for every taken edge of every phase
-        edges_t, ph_t, cls_t = self._store_take(budget)
-        pins, prow = scoring.gather_csr_rows(
-            self.hg.e2v_indptr, self.hg.e2v_indices, edges_t)
-        pins = pins.astype(np.int64)
-        self.stats.edges_scanned += int(pins.size)
-        edge_lo = np.searchsorted(ph_t, np.arange(kG + 1, dtype=np.int64))
-        pin_lo = np.searchsorted(prow, edge_lo)
-        # per-phase first-occurrence dedup of the pin streams. The
-        # acceptance filters below are per-pin properties, so deduping
-        # before filtering equals the old filter-then-dedup, row for row.
-        if pins.size:
-            pph = ph_t[prow]
-            _, first = np.unique(pph * np.int64(self.hg.n) + pins,
-                                 return_index=True)
-            first = np.sort(first)
-            cand_all = pins[first]
-            cand_lo = np.searchsorted(pph[first],
-                                      np.arange(kG + 1, dtype=np.int64))
-        else:
-            cand_all = pins
-            cand_lo = np.zeros(kG + 1, dtype=np.int64)
-        # stage B: rotation-ordered liveness / acceptance / restarts
-        fresh = np.full((kG, R), -1, dtype=np.int32)
-        bias = np.full((kG, R), np.inf, dtype=np.float32)
-        pool_arr = np.full((kG, P), -1, dtype=np.int32)
-        fresh_parts: list = []
-        rq_ph: list = []
-        rq_cls: list = []
-        rq_edge: list = []
-        injected = 0
-        packed_any = False
-        rmask = None    # injection-safety mask, computed at most once
-        #                 per pack (the sharded union is O(devices * n))
-        for g in order:
-            gi = int(g)
-            e0, e1 = int(edge_lo[gi]), int(edge_lo[gi + 1])
-            if e1 > e0:     # edge liveness at this phase's turn
-                p0, p1 = int(pin_lo[gi]), int(pin_lo[gi + 1])
-                unas = self.assignment[pins[p0:p1]] < 0
-                live = np.bincount(prow[p0:p1][unas] - e0,
-                                   minlength=e1 - e0) > 0
-                eg = edges_t[e0:e1]
-                if not live.all():
-                    self.edge_dead[eg[~live]] = True    # dead forever
-                if live.any():
-                    rq_ph.append(ph_t[e0:e1][live])
-                    rq_cls.append(cls_t[e0:e1][live])
-                    rq_edge.append(eg[live])
-            pmask = self._pmask(gi)
-            cg = cand_all[int(cand_lo[gi]):int(cand_lo[gi + 1])]
-            drawn = cg
-            if cg.size:
-                okc = (self.assignment[cg] < 0) & ~pmask[cg]
-                drawn = cg[okc][:need[gi]]
-            ids = self.pools[gi]
-            miss = np.empty(0, dtype=np.int64)
-            if drawn.size:
-                pmask[drawn] = True
-                if rmask is not None and rmask is not pmask:
-                    rmask[drawn] = True     # keep the union mask live
-                scored = self.cache_scored[drawn]
-                hits, miss = drawn[scored], drawn[~scored]
-                if hits.size:       # cross-phase reuse: already cached
-                    ids = np.concatenate([ids, hits])
-            if ids.size == 0 and miss.size == 0:
-                # shattered remainder: seed fresh growth points directly
-                if rmask is None:
-                    rmask = self._restart_mask()
-                vs = self.random_unassigned(
-                    min(t, int(targets[gi] - acc[gi])), in_pool=rmask)
-                if vs.size:
-                    self.stats.random_restarts += 1
-                    self.assign_now(vs, gi)
-                    self.activate_phase(vs, gi)
-                    acc[gi] += vs.size
-                    injected += int(vs.size)
-                continue
-            fresh[gi, :miss.size] = miss
-            bias[gi, :miss.size] = np.where(
-                self.deg[miss] > self.tile_l, scoring.TRUNC_PENALTY, 0.0)
-            pool_arr[gi, :ids.size] = ids
-            # every pool_arr slot is a score served straight from the
-            # device cache (held-over or cross-phase hit) instead of a
-            # kernel rescore — the reuse the exact-decrement design buys
-            self.stats.cache_hits += int(ids.size)
-            self.pools[gi] = np.concatenate([ids, miss])
-            fresh_parts.append(miss)
-            self.stats.kernel_rows += int(miss.size)
-            packed_any = True
-        self._store_requeue(rq_ph, rq_cls, rq_edge)
-        if not packed_any:
-            return None, injected
-        fresh_ids = (np.concatenate(fresh_parts) if fresh_parts
-                     else np.empty(0, dtype=np.int64))
-        return (fresh, bias, pool_arr, fresh_ids), injected
-
-    def _image_buffers(self) -> tuple:
-        """The live donated image arrays of this engine's current mode.
-
-        The spill rung keeps no device cache and the paged rung no
-        resident CSR, so the donated set is mode-dependent — every
-        dispatch/replay handle pins exactly these.
-        """
-        bufs = [self.dev_assign, self.dev_acc, self.dev_poison]
-        if self.dev_cache is not None:
-            bufs.insert(1, self.dev_cache)
-        return tuple(bufs)
-
-    def _call_program(self, args: _CallArgs, reset: np.ndarray):
-        """Issue the fused superstep program; rotate the donated image.
-
-        Returns ``(winners, n_stale, ncf, scores)`` futures (``ncf`` is
-        None for the single-device engine; ``scores`` is None except on
-        the spill rung, where the host owns the score cache and the
-        fresh scores ride back with the winners). The memory plan picks
-        the program variant (DESIGN.md §4g) — all of them bit-exact to
-        the default on this engine. The sharded engine overrides this —
-        it is the ONLY device-call difference between the two engines.
-        """
-        if self.paged_adj is not None:
-            tile_raw = self.paged_adj.gather(
-                args.fresh.reshape(-1), self.tile_l)
-            (self.dev_assign, self.dev_cache, self.dev_acc,
-             self.dev_poison, winners, n_stale) = \
-                scoring.paged_superstep_device(
-                    self.dev_assign, self.dev_cache, self.dev_acc,
-                    self.dev_poison, args.delta, args.vals, args.dirty,
-                    args.dcnt, tile_raw, args.fresh, args.bias,
-                    args.pool_arr, args.fringe, args.targets, reset,
-                    select_k=args.select_k, interpret=self.interpret)
-            return winners, n_stale, None, None
-        if self.host_cache is not None:
-            (self.dev_assign, self.dev_acc, self.dev_poison, winners,
-             n_stale, scores) = scoring.spill_superstep_device(
-                self.dev[0], self.dev[1], self.dev_assign, self.dev_acc,
-                self.dev_poison, args.delta, args.vals, args.fresh,
-                args.bias, args.pool_arr, args.prev, args.fringe,
-                args.targets, reset, tile_l=self.tile_l,
-                select_k=args.select_k, interpret=self.interpret)
-            return winners, n_stale, None, scores
-        if self.g_chunk > 1:
-            (self.dev_assign, self.dev_cache, self.dev_acc,
-             self.dev_poison, winners, n_stale) = \
-                scoring.chunked_superstep_device(
-                    self.dev[0], self.dev[1], self.dev_assign,
-                    self.dev_cache, self.dev_acc, self.dev_poison,
-                    args.delta, args.vals, args.dirty, args.dcnt,
-                    args.fresh, args.bias, args.pool_arr, args.fringe,
-                    args.targets, reset, tile_l=self.tile_l,
-                    select_k=args.select_k, interpret=self.interpret,
-                    g_chunk=self.g_chunk)
-            return winners, n_stale, None, None
-        (self.dev_assign, self.dev_cache, self.dev_acc, self.dev_poison,
-         winners, n_stale) = scoring.pipeline_superstep_device(
-            self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
-            self.dev_acc, self.dev_poison, args.delta, args.vals,
-            args.dirty, args.dcnt, args.fresh, args.bias, args.pool_arr,
-            args.fringe, args.targets, reset, tile_l=self.tile_l,
-            select_k=args.select_k, interpret=self.interpret)
-        return winners, n_stale, None, None
-
-    def _call_guarded(self, args: _CallArgs, reset: np.ndarray):
-        """``_call_program`` under fault injection + bounded retry."""
-        return self._guarded_kernel(
-            lambda: self._call_program(args, reset),
-            int(self.stats.supersteps), self._fault_kinds,
-            donated=self._image_buffers())
-
-    def _count_dispatch(self, fresh: np.ndarray, select_k: int) -> None:
-        """Per-dispatch counter hook (the sharded engine adds
-        collective accounting). Replays never come through here — the
-        kernel_calls == supersteps invariant survives recovery."""
-
-    def _count_harvest(self, handle: _Superstep) -> None:
-        """Per-harvest counter hook (sharded: admission conflicts)."""
-
-    def dispatch(self, fresh, bias, pool_arr, fringe, fresh_ids,
-                 targets_i32, delta_cap: int, select_k: int):
-        """Launch one superstep on the device (async); returns a handle.
-
-        JAX's async dispatch returns immediately — the returned handle's
-        arrays are futures the driver blocks on only at ``harvest``, so
-        the host keeps packing while the device computes. The previous
-        (donated) image arrays ride the handle: deleting a donated
-        buffer synchronizes with the execution consuming it, so their
-        last reference must not drop before the harvest-time block.
-
-        Fault-injection sites (DESIGN.md §4f): a ``dispatch`` (or, for
-        the sharded engine, ``collective``) spec raises here and is
-        retried/escalated by ``_call_guarded``; a ``nan`` spec poisons a
-        COPY of the bias buffer so the device program's quarantine
-        guard trips — the handle keeps the clean args for the replay.
-        """
-        tails = self.pending_dirty
-        self.pending_dirty = []
-        delta, vals, dirty, dcnt = self._pack_delta_dirty(
-            delta_cap, extra_dirty=tails)
-        prev = None
-        if self.host_cache is not None:
-            # spill rung: the host owns the score cache. Apply the dirty
-            # decrements to the float32 mirror NOW (the same IEEE adds
-            # the device program would have scattered) and ship the held
-            # pool's scores in; the device still masks stale slots
-            # itself against the post-injection assignment.
-            u = dirty >= 0
-            ids = dirty[u].astype(np.int64)
-            self.host_cache[ids] -= dcnt[u]
-            prev = self.host_cache[np.where(pool_arr >= 0, pool_arr,
-                                            0)].astype(np.float32)
-        self.stats.host_to_device_bytes += (
-            fresh.nbytes + bias.nbytes + pool_arr.nbytes + fringe.nbytes
-            + delta.nbytes + vals.nbytes + dirty.nbytes + dcnt.nbytes
-            + targets_i32.nbytes)
-        self.stats.supersteps += 1
-        self.stats.kernel_calls += 1
-        self._count_dispatch(fresh, select_k)
-        args = _CallArgs(delta, vals, dirty, dcnt, fresh, bias,
-                         pool_arr, fringe, targets_i32, select_k,
-                         prev=prev)
-        send = args
-        plan = self.fault_plan
-        if plan is not None:
-            sp = plan.fire(("nan",), int(self.stats.supersteps))
-            if sp is not None:
-                self.stats.faults_injected += 1
-                if sp.fatal:
-                    raise resilience.UnrecoverableFault(
-                        f"injected fatal nan tile at superstep "
-                        f"{self.stats.supersteps}")
-                bias_bad = bias.copy()
-                bias_bad[fresh >= 0] = np.nan
-                send = dataclasses.replace(args, bias=bias_bad)
-        donated = self._image_buffers()
-        winners, n_stale, ncf, scores = self._call_guarded(send, _RESET0)
-        return _Superstep(winners, n_stale, self.dev_poison, fresh_ids,
-                          donated, args, ncf, scores)
-
-    def replay(self, h: _Superstep) -> _Superstep:
-        """Re-issue a quarantined superstep from its clean args.
-
-        The poisoned superstep (and every later in-flight one — the
-        poison flag is sticky) reverted all of its device mutations, so
-        the current image equals the state just before it ran: calling
-        the same pure program with the handle's clean args and
-        ``reset=1`` recovers exactly what a fault-free run computed.
-        Counts as a retry only — never as a new superstep/kernel call.
-        A superstep still poisoned after a clean replay means the
-        non-finite scores are real (not injected): unrecoverable here,
-        the ladder's host engines score around poisoned rows instead.
-        """
-        self.stats.retries += 1
-        donated = self._image_buffers()
-        winners, n_stale, ncf, scores = self._call_program(h.args,
-                                                           _RESET1)
-        nh = _Superstep(winners, n_stale, self.dev_poison, h.fresh_ids,
-                        donated, h.args, ncf, scores)
-        if int(np.asarray(nh.poison)[0]) > 0:
-            raise resilience.UnrecoverableFault(
-                "superstep still poisoned after a clean replay: the "
-                "non-finite scores did not come from an injected fault")
-        return nh
-
-    def harvest(self, handle, acc: np.ndarray, targets: np.ndarray,
-                exclude=()) -> int:
-        """Block on one in-flight superstep and mirror its admissions.
-
-        The only blocking transfer of the steady state: everything else
-        the driver does (packing superstep N+1) happens while the device
-        still computes superstep N. Admission mirroring is fully
-        vectorized — no per-slot python loop. ``exclude`` carries the
-        fresh-id arrays of the supersteps still in flight: their scores
-        were computed *after* this superstep's winners were applied, so
-        the queued winner decrements must skip them (double-decrement
-        otherwise).
-
-        A quarantined handle (non-finite scores poisoned the superstep,
-        which reverted itself on device) is replayed from its clean
-        args before mirroring — direct dispatch/harvest callers survive
-        an injected NaN tile without the pipeline driver's help; the
-        driver additionally replays the whole in-flight window to keep
-        device-effect order (see ``_harvest_next``).
-        """
-        import time as _time
-
-        if int(np.asarray(handle.poison)[0]) > 0:
-            handle = self.replay(handle)
-        winners_dev, stale_dev = handle.winners, handle.n_stale
-        fresh_ids = handle.fresh_ids
-        t0 = _time.perf_counter()
-        try:
-            winners = np.asarray(winners_dev)
-            n_stale = int(stale_dev)
-            if self.host_cache is not None and handle.scores is not None:
-                # spill rung: adopt the fresh scores into the host
-                # mirror — the same pad-dropping scatter the device
-                # cache write performs, after the poison check above
-                flat = handle.args.fresh.reshape(-1)
-                sc = np.asarray(handle.scores).reshape(-1)
-                real = flat >= 0
-                self.host_cache[flat[real].astype(np.int64)] = sc[real]
-        except membudget.DeviceOOM:
-            raise
-        except Exception as exc:
-            # a real allocator failure can surface at the blocking
-            # transfer, not just at dispatch — same recovery path
-            if membudget.is_oom_error(exc):
-                raise membudget.DeviceOOM(
-                    f"superstep harvest failed: {exc!r}",
-                    rung=self.mem_rung) from exc
-            raise
-        self.stats.device_s += _time.perf_counter() - t0
-        t0 = _time.perf_counter()
-        self.stats.stale_redraws += n_stale
-        if fresh_ids.size:
-            self.cache_scored[fresh_ids] = True
-        kG, t = winners.shape
-        flat = winners.reshape(-1).astype(np.int64)
-        mask = flat >= 0
-        vs = flat[mask]
-        progress = int(vs.size)
-        if vs.size:
-            ph = np.repeat(np.arange(kG, dtype=np.int64), t)[mask]
-            self.assignment[vs] = ph.astype(np.int32)
-            self._release_members(vs, ph)
-            acc += np.bincount(ph, minlength=kG)
-            self.activate_many(vs, ph)
-            self._queue_decrements(vs, exclude)
-            for g in np.unique(ph):
-                if acc[g] >= targets[g]:    # phase done: release pool
-                    gi = int(g)
-                    self._pmask(gi)[self.pools[gi]] = False
-                    self.pools[gi] = np.empty(0, dtype=np.int64)
-        self._count_harvest(handle)
-        self.stats.host_s += _time.perf_counter() - t0
-        return progress
-
-    # ----------------------------------------------- snapshot / restore
-    def capture_payload(self, acc: np.ndarray, cur_depth: int) -> dict:
-        """Complete engine state at a drained superstep boundary.
-
-        Called with the pipeline empty (the driver drains in-flight
-        supersteps first), so the only live state is host bookkeeping
-        plus the settled device image. Everything the continuation
-        reads is captured; static derivatives (adjacency, tile width,
-        random order) are rebuilt from the config at restore.
-        """
-        self._store_flush()
-        return {
-            "assignment": self.assignment.copy(),
-            "acc": acc.copy(),
-            "cur_depth": int(cur_depth),
-            "in_pool": self.in_pool.copy(),
-            "cache_scored": self.cache_scored.copy(),
-            "pools": [ids.copy() for ids in self.pools],
-            "bq_key": self.bq_key.copy(),
-            "bq_edge": self.bq_edge.copy(),
-            "seq_back": int(self._seq_back),
-            "seq_front": int(self._seq_front),
-            "edge_queued": self.edge_queued.copy(),
-            "edge_dead": self.edge_dead.copy(),
-            "delta_ids": [a.copy() for a in self.delta_ids],
-            "delta_vals": [a.copy() for a in self.delta_vals],
-            "pending_dirty": [a.copy() for a in self.pending_dirty],
-            "rand_ptr": int(self.rand_ptr),
-            "rng_state": self.rng.bit_generator.state,
-            "dirty_ratchet": int(self._dirty_ratchet),
-            "stats": dataclasses.replace(self.stats),
-            "dev_assign": np.asarray(self.dev_assign),
-            # on the spill rung the authoritative cache IS the host
-            # mirror; either way the payload carries plain numpy
-            "dev_cache": (self.host_cache.copy()
-                          if self.host_cache is not None
-                          else np.asarray(self.dev_cache)),
-            "dev_acc": np.asarray(self.dev_acc),
-        }
-
-    def restore_exact(self, pay: dict):
-        """Resume bit-identically from a same-engine/config payload.
-
-        Returns ``(acc, cur_depth)`` for the driver. The device image
-        is re-uploaded from the snapshot's downloaded copies; the
-        poison flag restarts clean (snapshots are only taken at drained,
-        replayed-if-needed boundaries).
-        """
-        self.assignment = pay["assignment"].copy()
-        self.in_pool = pay["in_pool"].copy()
-        self.cache_scored = pay["cache_scored"].copy()
-        self.pools = [ids.copy() for ids in pay["pools"]]
-        self.bq_key = pay["bq_key"].copy()
-        self.bq_edge = pay["bq_edge"].copy()
-        self._bq_pending = []
-        self._seq_back = np.int64(pay["seq_back"])
-        self._seq_front = np.int64(pay["seq_front"])
-        self.edge_queued = pay["edge_queued"].copy()
-        self.edge_dead = pay["edge_dead"].copy()
-        self.delta_ids = [a.copy() for a in pay["delta_ids"]]
-        self.delta_vals = [a.copy() for a in pay["delta_vals"]]
-        self.pending_dirty = [a.copy() for a in pay["pending_dirty"]]
-        self.rand_ptr = int(pay["rand_ptr"])
-        self.rng.bit_generator.state = pay["rng_state"]
-        self._dirty_ratchet = int(pay["dirty_ratchet"])
-        self.stats = dataclasses.replace(pay["stats"])
-        self.dev_assign = self._to_device(pay["dev_assign"])
-        if self.host_cache is not None:
-            self.host_cache = pay["dev_cache"].astype(np.float32,
-                                                      copy=True)
-        else:
-            self.dev_cache = self._to_device(pay["dev_cache"])
-        self.dev_acc = self._to_device(pay["dev_acc"])
-        self.dev_poison = self._to_device(np.zeros(1, dtype=np.int32))
-        return pay["acc"].copy(), int(pay["cur_depth"])
-
-    def restore_warm(self, warm: np.ndarray) -> np.ndarray:
-        """Cross-engine warm start: adopt a (partial) assignment.
-
-        Mirrors the assignment into the device image and activates the
-        incident edges of every adopted member, so growth continues
-        from the snapshot instead of from scratch. Exactness is not
-        claimed (the donor engine's transient state is gone) — this is
-        the degradation ladder's path. Returns the per-phase totals.
-        """
-        done = np.flatnonzero(warm >= 0)
-        acc = np.zeros(self.k, dtype=np.int64)
-        if done.size:
-            ph = warm[done].astype(np.int64)
-            self.assignment[done] = warm[done]
-            acc[:int(ph.max()) + 1] = np.bincount(ph)
-            self.dev_assign = self._to_device(
-                self.assignment.astype(np.int32, copy=True))
-            self.dev_acc = self._to_device(
-                acc.astype(np.int32, copy=True))
-            self.activate_many(done.astype(np.int64), ph)
-        return acc
-
-    def _release_members(self, vs: np.ndarray, ph: np.ndarray) -> None:
-        """Clear pool membership for freshly mirrored winners."""
-        self.in_pool[vs] = False
-
-    def _filter_rescored(self, nbrs: np.ndarray, exclude) -> np.ndarray:
-        """Drop ids fresh-rescored by a still-in-flight superstep.
-
-        Their cache entries are written *after* the winners applied, so
-        they already reflect the admissions — decrementing them again
-        would double-count. O(|nbrs| + |exclude|) via a reusable
-        boolean scratch.
-        """
-        parts = [e for e in exclude if e.size]
-        if not parts or nbrs.size == 0:
-            return nbrs
-        ex = np.concatenate(parts)
-        scratch = self._excl_scratch
-        scratch[ex] = True
-        out = nbrs[~scratch[nbrs]]
-        scratch[ex] = False
-        return out
-
-    def _queue_decrements(self, vs: np.ndarray, exclude=()) -> None:
-        """Queue the winners' neighbor decrements for the next dispatch.
-
-        The full multiset — one CSR gather, pre-aggregated into
-        (unique id, count) pairs by ``_pack_delta_dirty`` — exactly the
-        lock-step engine's decrement schedule at depth 1; ids rescored
-        by an in-flight superstep are excluded (see
-        ``_filter_rescored``).
-        """
-        nbrs, _ = scoring.gather_csr_rows(self.adj[0], self.adj[1], vs)
-        if nbrs.size == 0:
-            return
-        nbrs = self._filter_rescored(nbrs.astype(np.int64), exclude)
-        if nbrs.size:
-            self.pending_dirty.append(nbrs)
-
-
-def _harvest_next(st: _SuperstepState, inflight: collections.deque,
-                  acc: np.ndarray, targets: np.ndarray) -> int:
-    """Harvest the oldest in-flight superstep, replaying a poisoned one.
-
-    When the popped superstep was quarantined (non-finite scores — an
-    injected NaN tile, normally), every in-flight superstep dispatched
-    after it self-aborted on the sticky poison flag: replay the whole
-    window in FIFO order from the handles' clean args so device-effect
-    order — and therefore bit-identical recovery — is preserved.
-    """
-    h = inflight.popleft()
-    if int(np.asarray(h.poison)[0]) > 0:
-        h = st.replay(h)
-        redo = list(inflight)
-        inflight.clear()
-        for old in redo:
-            inflight.append(st.replay(old))
-    return st.harvest(h, acc, targets, [e.fresh_ids for e in inflight])
-
-
-def _teardown_pipeline(st: _SuperstepState,
-                       inflight: collections.deque) -> None:
-    """Settle the donated-buffer chains of an aborted run (§4f).
-
-    Blocks on every in-flight superstep's outputs so each donated
-    execution completes (deleting a donated buffer synchronizes with
-    the execution consuming it), then drops the handles and the queued
-    host transients. Nothing device-side survives except the state's
-    own current image arrays — no zombie refs, and the process is free
-    to start a fresh engine run.
-    """
-    for h in list(inflight):
-        try:
-            np.asarray(h.winners)
-            np.asarray(h.poison)
-        except Exception:       # the abort may have broken the call
-            pass
-    inflight.clear()
-    st.delta_ids, st.delta_vals = [], []
-    st.pending_dirty = []
-
-
-def _run_pipeline(hg: Hypergraph, k: int, p: SuperstepParams,
-                  num_devices: Optional[int] = None, mem_rung: int = 0,
-                  mem_warm: Optional[np.ndarray] = None,
-                  mem_retries: int = 0):
-    """Grow all ``k`` partitions concurrently; returns (assignment, state).
-
-    The shared double-buffered superstep driver of the device engines
-    (DESIGN.md §4d). Each *superstep* is one fused device call that
-    scores the stacked fresh-candidate tiles of every growing phase and
-    admits each phase's top-``t`` on device (paper §VI k-way growth).
-    Up to ``p.pipeline_depth`` supersteps stay in flight: while the
-    device computes superstep N, the host mirrors superstep N-1's
-    admissions and speculatively draws/packs superstep N+1; proposals
-    that went stale in between are skipped on device by the
-    deterministic redraw rule, so results are seeded-deterministic at
-    any depth and ``pipeline_depth=1`` reproduces the lock-step engine
-    bit for bit.
-
-    Resilience (DESIGN.md §4f): every ``p.snapshot_every`` supersteps
-    the driver drains the pipeline and publishes a checkpoint; with
-    ``p.resume`` pointing at a same-engine/same-config snapshot the run
-    restores it and continues bit-identically to an uninterrupted run
-    with the same cadence (a cross-engine snapshot warm-starts from its
-    assignment instead). Any exception tears the pipeline down safely.
-    """
-    import time as _time
-
+import importlib
+import warnings
+
+# old name -> (module under repro.engines, new name)
+_MOVED = {
+    "BatchedStats": ("runtime", "BatchedStats"),
+    "_RESET0": ("runtime", "_RESET0"),
+    "_RESET1": ("runtime", "_RESET1"),
+    "_harvest_next": ("runtime", "_harvest_next"),
+    "_teardown_pipeline": ("runtime", "_teardown_pipeline"),
+    "_maybe_refine": ("runtime", "maybe_refine"),
+    "_CallArgs": ("pipeline", "_CallArgs"),
+    "_Superstep": ("pipeline", "_Superstep"),
+    "_PH_SHIFT": ("pipeline", "_PH_SHIFT"),
+    "_CLS_SHIFT": ("pipeline", "_CLS_SHIFT"),
+    "_SEQ_START": ("pipeline", "_SEQ_START"),
+    "BatchedParams": ("batched", "BatchedParams"),
+    "_BatchedState": ("batched", "BatchedState"),
+    "_grow_partition": ("batched", "_grow_partition"),
+    "hype_batched_partition": ("batched", "hype_batched_partition"),
+    "SuperstepParams": ("superstep", "SuperstepParams"),
+    "_SuperstepState": ("superstep", "SuperstepState"),
+    "hype_superstep_partition": ("superstep", "hype_superstep_partition"),
+    "ShardedParams": ("sharded", "ShardedParams"),
+    "_ShardedState": ("sharded", "ShardedState"),
+    "hype_sharded_partition": ("sharded", "hype_sharded_partition"),
+    "DeviceParams": ("device", "DeviceParams"),
+    "_device_probe_faults": ("device", "_device_probe_faults"),
+    "_device_probe_nan": ("device", "_device_probe_nan"),
+    "_device_export": ("device", "_device_export"),
+    "_device_attempt": ("device", "_device_attempt"),
+    "_run_device_loop": ("device", "_run_device_loop"),
+    "hype_device_partition": ("device", "hype_device_partition"),
+}
+
+
+def _compat_run_pipeline(hg, k, p, num_devices=None, mem_rung=0,
+                         mem_warm=None, mem_retries=0):
+    """Old driver entry: dispatches on ``num_devices`` like the monolith."""
+    from repro.engines import runtime, sharded, superstep
     if num_devices is None:
-        kG = k
-        engine = "hype_superstep"
-        st = _SuperstepState(hg, k, p, mem_rung=mem_rung)
-    else:
-        kL = -(-k // num_devices)
-        kG = kL * num_devices
-        engine = "hype_sharded"
-        st = _ShardedState(hg, kG, p, num_devices, mem_rung=mem_rung)
-    if st.dev is None:
-        return None, None                       # caller falls back
-    st.stats.mem_retries = int(mem_retries)
-    n = hg.n
-    base, rem = divmod(n, k)
-    targets = np.zeros(kG, dtype=np.int64)
-    targets[:k] = base + (np.arange(k) < rem)
-    targets_i32 = targets.astype(np.int32)
-    acc = np.zeros(kG, dtype=np.int64)
-    R, P, t = p.rows, p.pool_cap, p.t
-    delta_cap = max(2 * kG * t, kG)
-    # the memory plan may clamp the pipeline to lock-step (rung >= the
-    # depth reduction): the clamp is part of the schedule, and at an
-    # unconstrained budget the plan echoes the param unchanged
-    depth = max(1, min(int(p.pipeline_depth),
-                       int(st.mem_plan.pipeline_depth)))
-    fringe = np.full((kG, 1), -1, dtype=np.int32)   # fringe-free scoring
-    snap_every = max(0, int(p.snapshot_every or 0))
-    # everything that decides the superstep schedule: an exact restore
-    # requires all of it to match (snapshot cadence included — draining
-    # the pipeline at snapshots IS part of the schedule at depth > 1).
-    # Of the memory plan (§4g) only the EFFECTIVE tile width and the
-    # depth clamp enter: the chunk/spill/paged rungs are bit-exact per
-    # superstep, so a snapshot restores exactly across them, while a
-    # tile_l or depth change is a schedule change and must warm-start
-    config = {"k": k, "devices": 0 if num_devices is None else
-              num_devices, "t": t, "rows": R, "pool_cap": P, "s": p.s,
-              "seed": p.seed, "pipeline_depth": depth,
-              "snapshot_every": snap_every,
-              "tile_l": int(st.tile_l)}
-
-    cur_depth = depth
-    seeded = False
-    ckpt = resilience.load_latest(p.resume) if p.resume else None
-    if ckpt is not None:
-        t0 = _time.perf_counter()
-        resilience.check_checkpoint(ckpt, hg, k)
-        if ckpt.engine == engine and ckpt.config == config:
-            acc, cur_depth = st.restore_exact(ckpt.payload)
-            seeded = True       # the snapshot already carries the seeds
-        else:
-            acc = st.restore_warm(resilience.warm_assignment(ckpt))
-        st.stats.resumed_at = int(ckpt.superstep)
-        st.stats.restore_s += _time.perf_counter() - t0
-    elif mem_warm is not None:
-        # memory-rung retry (DESIGN.md §4g): adopt the failed attempt's
-        # host assignment mirror so already-grown members survive the
-        # re-tiling — the seeding below only fills still-empty phases
-        acc = st.restore_warm(np.asarray(mem_warm, dtype=np.int32))
-
-    if not seeded:
-        # seed every empty phase with one random vertex (paper §III-B1
-        # step 1); a warm start only seeds phases the snapshot left empty
-        seeds = st.random_unassigned(
-            int(((acc == 0) & (targets > 0)).sum()))
-        gi = 0
-        for g in range(kG):
-            if targets[g] == 0 or acc[g] > 0 or gi >= seeds.size:
-                continue
-            v = seeds[gi:gi + 1]
-            gi += 1
-            st.assign_now(v, g)
-            st.activate_phase(v, g)
-            acc[g] += 1
-
-    last_snap = int(st.stats.supersteps)
-    inflight: collections.deque = collections.deque()
-    try:
-        while True:
-            progress = 0
-            if (snap_every
-                    and st.stats.supersteps - last_snap >= snap_every):
-                while inflight:     # drain: snapshots see settled state
-                    progress += _harvest_next(st, inflight, acc, targets)
-                t0 = _time.perf_counter()
-                st.stats.snapshots += 1
-                resilience.save_snapshot(
-                    p.snapshot_dir,
-                    resilience.PartitionCheckpoint(
-                        engine, int(st.stats.supersteps),
-                        hg.fingerprint(), dict(config),
-                        st.capture_payload(acc, cur_depth)),
-                    keep_last=int(p.keep_last))
-                st.stats.snapshot_s += _time.perf_counter() - t0
-                last_snap = int(st.stats.supersteps)
-            active = np.flatnonzero(acc < targets)
-            if active.size == 0:
-                break
-            while len(inflight) >= cur_depth:   # tail heuristic shrank
-                progress += _harvest_next(st, inflight, acc, targets)
-            t0 = _time.perf_counter()
-            packed, injected = st.pack_superstep(active, R, P, t,
-                                                 targets, acc)
-            progress += injected
-            if packed is not None:
-                fresh, bias, pool_arr, fresh_ids = packed
-                handle = st.dispatch(fresh, bias, pool_arr, fringe,
-                                     fresh_ids, targets_i32, delta_cap,
-                                     t)
-            st.stats.host_s += _time.perf_counter() - t0
-            if packed is not None:
-                inflight.append(handle)
-            elif inflight:
-                st.stats.pipeline_stalls += 1   # device idles this round
-            if inflight and (len(inflight) >= cur_depth
-                             or packed is None):
-                harvested = _harvest_next(st, inflight, acc, targets)
-                progress += harvested
-                # adaptive depth: while a superstep admits less than
-                # half its capacity the draw view — not the device — is
-                # the bottleneck, and speculative packs only waste
-                # fixed-cost device calls; drop to lock-step until
-                # admissions recover. Deterministic: based solely on
-                # mirrored results.
-                cur_depth = 1 if 2 * harvested < active.size * t else depth
-            if progress == 0 and not inflight:
-                break   # starved: remaining vertices sit in other pools
-        while inflight:     # drain the pipeline before the safety net
-            _harvest_next(st, inflight, acc, targets)
-    except membudget.DeviceOOM as exc:
-        # memory fault mid-run: settle the pipeline, then enrich the
-        # exception with everything the re-tiling retry loop needs —
-        # the rung this attempt ran at and the host assignment mirror
-        # (the admissions harvested so far) for the warm start
-        _teardown_pipeline(st, inflight)
-        if exc.rung is None:
-            exc.rung = int(st.mem_plan.rung)
-        exc.partial = st.assignment.copy()
-        raise
-    except BaseException:
-        # abort path (injected unrecoverable fault, KeyboardInterrupt,
-        # real device failure): settle every donated chain before
-        # propagating so no zombie buffer outlives the run
-        _teardown_pipeline(st, inflight)
-        raise
-
-    # safety net: balance-fill any stragglers into underfull phases
-    rem_v = np.flatnonzero(st.assignment < 0)
-    if rem_v.size:
-        deficit = np.maximum(targets - acc, 0)
-        fill = np.repeat(np.arange(kG), deficit)[:rem_v.size]
-        st.assignment[rem_v[:fill.size]] = fill.astype(np.int32)
-    st.in_pool[:] = False
-    if num_devices is not None:
-        st.group_pool[:] = False
-    # the device image syncs at superstep boundaries only; the final
-    # injections' delta dies with the state (the host assignment is
-    # authoritative). Tests needing device/host parity flush explicitly
-    # through dispatch/harvest.
-    st.delta_ids, st.delta_vals = [], []
-    obs = membudget.observed_peak_bytes()
-    st.stats.peak_bytes_observed = (int(obs) if obs else
-                                    int(st.stats.peak_bytes_planned))
-    return st.assignment, st
-
-
-def _run_pipeline_budgeted(hg: Hypergraph, k: int, p: SuperstepParams,
-                           num_devices: Optional[int] = None):
-    """``_run_pipeline`` under the memory-rung retry loop (§4g).
-
-    A ``DeviceOOM`` — a real allocator failure at the upload, dispatch
-    or harvest site, or an injected non-fatal ``oom`` fault — retries
-    the SAME engine at the next-smaller memory plan, warm-started from
-    the failed attempt's host assignment mirror, before the
-    engine-degradation ladder (``partition_resilient``) is ever
-    consulted. Only an exhausted rung ladder escalates, as
-    ``UnrecoverableFault``. The fault plan is resolved once up front so
-    a one-shot injected ``oom`` spec stays consumed across retries
-    (re-parsing ``REPRO_FAULT_PLAN`` per attempt would re-fire it
-    forever).
-    """
-    fplan = resilience.resolve_fault_plan(p.fault_plan)
-    if fplan is not None:
-        p = dataclasses.replace(p, fault_plan=fplan)
-    rung, warm, retries = 0, None, 0
-    while True:
-        try:
-            return _run_pipeline(hg, k, p, num_devices, mem_rung=rung,
-                                 mem_warm=warm, mem_retries=retries)
-        except membudget.DeviceOOM as exc:
-            retries += 1
-            rung = (rung if exc.rung is None else int(exc.rung)) + 1
-            if exc.partial is not None and (exc.partial >= 0).any():
-                warm = exc.partial
-        except membudget.MemoryLadderExhausted as exc:
-            raise resilience.UnrecoverableFault(
-                f"device memory rungs exhausted: {exc}") from exc
-
-
-# --------------------------------------------------------------------- #
-# Mesh-sharded superstep engine: phase groups sharded over a device mesh.
-# --------------------------------------------------------------------- #
-
-@dataclasses.dataclass
-class ShardedParams(SuperstepParams):
-    """Knobs for the mesh-sharded superstep engine (DESIGN.md §4c).
-
-    Inherits every superstep knob. ``devices`` sets the 1-D mesh size the
-    k phase groups are sharded over; ``None`` uses every local JAX device
-    (capped at ``k``). On CPU, simulate a mesh with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
-    """
-    devices: Optional[int] = None
-
-
-class _ShardedState(_SuperstepState):
-    """Superstep state plus the mesh and per-device-group pool masks.
-
-    The CSR image, assignment, score cache and admission totals are
-    *replicated* on every mesh device; the phase groups are sharded.
-    Pool membership is tracked per device group (``group_pool``) —
-    groups draw candidates independently, so two groups may pool (and
-    propose) the same vertex; the device program's lowest-phase-wins
-    rule resolves it, and the host mirrors winners without re-queuing
-    them as deltas. Shares the pipeline driver with the single-device
-    engine: only ``dispatch`` (the shard_map program + collective
-    counters) and the pool-mask hooks differ.
-    """
-
-    def __init__(self, hg: Hypergraph, k_padded: int, p: ShardedParams,
-                 num_devices: int, mem_rung: int = 0):
-        self.D = num_devices
-        self.kL = k_padded // num_devices
-        mesh = scoring._sharded_mesh(num_devices)
-        super().__init__(hg, k_padded, p, mesh=mesh, mem_rung=mem_rung)
-        if self.dev is None:
-            return
-        self.mesh = mesh
-        self.group_pool = np.zeros((num_devices, hg.n), dtype=bool)
-        # the image lives once per device
-        self.stats.device_image_bytes *= num_devices
-
-    def group_of(self, g: int) -> int:
-        return g // self.kL
-
-    def _pmask(self, g: int) -> np.ndarray:
-        return self.group_pool[g // self.kL]
-
-    def _restart_mask(self) -> np.ndarray:
-        # groups pool independently, so an injection-safe vertex must
-        # sit in NO group's pool (it could be an in-flight slot there)
-        return self.group_pool.any(axis=0)
-
-    def _release_members(self, vs: np.ndarray, ph: np.ndarray) -> None:
-        self.group_pool[ph // self.kL, vs] = False
-
-    def _queue_decrements(self, vs: np.ndarray, exclude=()) -> None:
-        """Sharded: the device program already decremented each winner's
-        first ``tile_l`` neighbors; only the clipped tails of the (rare)
-        wider winners ride the next dispatch's dirty pairs — with the
-        same in-flight rescore exclusion as the single-device engine."""
-        self.stats.cache_invalidations += int(
-            np.minimum(self.deg[vs], self.tile_l).sum())
-        wide = vs[self.deg[vs] > self.tile_l]
-        if wide.size == 0:
-            return
-        indptr, indices = self.adj
-        nbrs, owner = scoring.gather_csr_rows(indptr, indices, wide)
-        lens = (indptr[wide + 1] - indptr[wide]).astype(np.int64)
-        start = np.cumsum(lens) - lens
-        off = np.arange(nbrs.size, dtype=np.int64) - start[owner]
-        tail = self._filter_rescored(
-            nbrs[off >= self.tile_l].astype(np.int64), exclude)
-        if tail.size:
-            self.pending_dirty.append(tail)
-
-    def _to_device(self, arr: np.ndarray):
-        import jax
-        import jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec
-        return jax.device_put(jnp.asarray(arr),
-                              NamedSharding(self.mesh, PartitionSpec()))
-
-    # the sharded dispatch site owns the per-superstep all_gather, so a
-    # failed collective is injected (and retried) there too
-    _fault_kinds = ("dispatch", "collective", "oom")
-    # no chunked/spill/paged program variants exist for the replicated
-    # shard_map image — only width and depth shrink (DESIGN.md §4g)
-    _mem_features = membudget.SHARDED_FEATURES
-
-    def _call_program(self, args: _CallArgs, reset: np.ndarray):
-        """One mesh-sharded superstep (async).
-
-        Host->device traffic is the same id/bias buffers as the
-        single-device engine; the host-side dirty pairs carry the
-        injections' neighbor multisets *and* the decrement tails of
-        earlier wider-than-tile winners (the device clips its own
-        decrement gather at ``tile_l``), so the replicated cache stays
-        exact.
-        """
-        (self.dev_assign, self.dev_cache, self.dev_acc, self.dev_poison,
-         winners, ncf, n_stale) = scoring.sharded_superstep_device(
-            self.dev[0], self.dev[1], self.dev_assign, self.dev_cache,
-            self.dev_acc, self.dev_poison, args.delta, args.vals,
-            args.dirty, args.dcnt, args.fresh, args.bias, args.pool_arr,
-            args.fringe, args.targets, reset, num_devices=self.D,
-            group_l=self.kL, tile_l=self.tile_l,
-            select_k=args.select_k, interpret=self.interpret)
-        return winners, n_stale, ncf, None
-
-    def _count_dispatch(self, fresh: np.ndarray, select_k: int) -> None:
-        kG, R = fresh.shape
-        # one all_gather per superstep: every device materializes the
-        # global (kG, R + t) int32 payload of fresh scores + admissions
-        self.stats.collectives += 1
-        self.stats.collective_bytes += self.D * kG * (R + select_k) * 4
-
-    def _count_harvest(self, handle: _Superstep) -> None:
-        # the conflict count rides the harvested superstep's results, so
-        # reading it here never adds a block
-        self.stats.admission_conflicts += int(handle.ncf)
-
-    def capture_payload(self, acc: np.ndarray, cur_depth: int) -> dict:
-        pay = super().capture_payload(acc, cur_depth)
-        pay["group_pool"] = self.group_pool.copy()
-        return pay
-
-    def restore_exact(self, pay: dict):
-        out = super().restore_exact(pay)
-        self.group_pool = pay["group_pool"].copy()
-        return out
-
-
-def _maybe_refine(hg: Hypergraph, k: int, params: BatchedParams,
-                  assignment: np.ndarray, stats: BatchedStats
-                  ) -> np.ndarray:
-    """Run the k-way refinement post-pass when ``refine_passes`` > 0.
-
-    Shared by every engine of the family (DESIGN.md §4e): boundary
-    vertices are screened on device by the ``kway_gains`` kernel and
-    moved under exact-gain, balance-capped admission, so the engine's
-    ``max - min <= 1`` contract survives. ``refine_passes = 0`` returns
-    the assignment object untouched — the engines stay bit-identical to
-    their pre-refinement outputs (golden-hash-enforced).
-    """
-    passes = getattr(params, "refine_passes", 0)
-    if passes <= 0 or k <= 1:
-        return assignment
-    from .refine import refine_kway
-
-    refined, rstats = refine_kway(hg, assignment, k, passes)
-    stats.refine = rstats
-    return refined
-
-
-def hype_sharded_partition(hg: Hypergraph, k: int,
-                           params: Optional[ShardedParams] = None,
-                           return_stats: bool = False):
-    """Partition ``hg`` with the mesh-sharded superstep engine.
-
-    Same contract as ``hype_superstep_partition`` (complete int32
-    assignment, ``max - min <= 1`` vertex balance, all k phases grown
-    concurrently) but the phase groups are sharded over a 1-D JAX device
-    mesh with ``shard_map``: the CSR graph image, assignment vector and
-    score cache are replicated per device, each device runs the fused
-    ``hype_score_select`` superstep for its own contiguous phase group,
-    and a single ``all_gather`` per superstep exchanges fresh scores and
-    proposed admissions so every replica stays globally consistent —
-    including the exact-decrement score-cache invalidations. Cross-device
-    admission conflicts (two groups proposing the same vertex in one
-    superstep) are resolved deterministically: the lowest phase id wins
-    and losers redraw from their pools next superstep.
-
-    ``params.devices`` picks the mesh size (default: all local devices,
-    capped at ``k``); on CPU simulate devices with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``. With one
-    device the engine degenerates to (slightly reordered) single-device
-    superstep growth. Supersteps run on the shared double-buffered
-    pipeline (``params.pipeline_depth``, DESIGN.md §4d). Falls back to
-    ``hype_superstep_partition``'s own fallback chain when the
-    adjacency guard trips.
-    """
-    if params is None:
-        params = ShardedParams()
-    if params.rows is None:
-        params = dataclasses.replace(params, rows=max(8, params.t))
-    if k < 1:
-        raise ValueError("k must be >= 1")
-    if params.t < 1 or params.rows < 1 or params.pool_cap < 1:
-        raise ValueError("rows, pool_cap, t must all be >= 1")
-    if params.pipeline_depth < 1:
-        raise ValueError("pipeline_depth must be >= 1")
-    if params.snapshot_every > 0 and not params.snapshot_dir:
-        raise ValueError("snapshot_every requires snapshot_dir")
-    if params.devices is not None and params.devices < 1:
-        raise ValueError("devices must be >= 1")
-    if k == 1:
-        out = np.zeros(hg.n, dtype=np.int32)
-        return (out, BatchedStats()) if return_stats else out
-    import jax
-    avail = len(jax.devices())
-    num = params.devices if params.devices is not None else avail
-    num = max(1, min(num, avail, k))
-    assignment, st = _run_pipeline_budgeted(hg, k, params, num)
-    if assignment is None:
-        return hype_superstep_partition(hg, k, params, return_stats)
-    assert (assignment >= 0).all()
-    assignment = _maybe_refine(hg, k, params, assignment, st.stats)
-    if return_stats:
-        return assignment, st.stats
-    return assignment
-
-
-def hype_superstep_partition(hg: Hypergraph, k: int,
-                             params: Optional[SuperstepParams] = None,
-                             return_stats: bool = False):
-    """Partition ``hg`` with the device-resident superstep engine.
-
-    Same contract as ``hype_batched_partition`` (complete int32
-    assignment, max - min <= 1 vertex balance) but all ``k`` partitions
-    grow *concurrently*: every superstep stacks the fresh candidates of
-    all growing phases into one fused ``hype_score_select`` device call
-    against a graph image (CSR + assignment + score cache) that was
-    uploaded once. Scores survive across refills and phases — admissions
-    *decrement* their neighbors' cached scores instead of wiping the
-    cache. ``params.pipeline_depth`` supersteps run double-buffered
-    (DESIGN.md §4d): while the device computes superstep N the host
-    mirrors N-1's admissions and packs N+1; ``pipeline_depth=1`` is the
-    lock-step schedule, bit for bit. Falls back to
-    ``hype_batched_partition`` when the adjacency guard trips
-    (pathological hub expansion).
-    """
-    if params is None:
-        params = SuperstepParams()
-    if params.rows is None:
-        params = dataclasses.replace(params, rows=max(8, params.t))
-    if k < 1:
-        raise ValueError("k must be >= 1")
-    if params.t < 1 or params.rows < 1 or params.pool_cap < 1:
-        raise ValueError("rows, pool_cap, t must all be >= 1")
-    if params.pipeline_depth < 1:
-        raise ValueError("pipeline_depth must be >= 1")
-    if params.snapshot_every > 0 and not params.snapshot_dir:
-        raise ValueError("snapshot_every requires snapshot_dir")
-    if k == 1:
-        out = np.zeros(hg.n, dtype=np.int32)
-        return (out, BatchedStats()) if return_stats else out
-    assignment, st = _run_pipeline_budgeted(hg, k, params)
-    if assignment is None:
-        return hype_batched_partition(hg, k, params, return_stats)
-    assert (assignment >= 0).all()
-    assignment = _maybe_refine(hg, k, params, assignment, st.stats)
-    if return_stats:
-        return assignment, st.stats
-    return assignment
-
-
-# --------------------------------------------------------------------- #
-# Fully device-resident loop engine (DESIGN.md §4i).
-# --------------------------------------------------------------------- #
-
-@dataclasses.dataclass
-class DeviceParams(SuperstepParams):
-    """Knobs for the fully device-resident loop engine (DESIGN.md §4i).
-
-    ``pipeline_depth`` is ignored: the device loop runs the lock-step
-    pd1 cadence by construction — that is exactly what makes it
-    golden-hash bit-identical to ``hype_superstep`` at depth 1.
-    """
-    # supersteps per host-visible while_loop segment; the host syncs a
-    # handful of scalars (flags / progress / acc) once per chunk and the
-    # snapshot cadence shortens chunks to land on its boundaries
-    chunk_supersteps: int = 64
-    # device score-cache storage: "float32" is bit-identical to the host
-    # engines; "float16" halves the cache bytes — scores are small exact
-    # integers plus the 1e12 hub penalty, so fp16 rounding only perturbs
-    # ties above 2048 external neighbors (bounded-error tested)
-    cache_dtype: str = "float32"
-    # capacity overrides for the fixed device rings (None = planned from
-    # graph statistics; the driver doubles a flagged cap and re-runs —
-    # schedules are capacity-independent, so the rerun is bit-identical)
-    store_cap: Optional[int] = None
-    act_cap: Optional[int] = None
-
-
-def _device_probe_faults(st: _SuperstepState, lo: int, hi: int):
-    """Fire injected dispatch/oom specs for superstep ordinals [lo, hi].
-
-    The host engines fire these one superstep at a time inside
-    ``_guarded_kernel``; the device loop runs a whole chunk per host
-    call, so the driver probes the chunk's ordinal range up front —
-    same plan, same ordinals, same escalation rules.
-    """
-    plan = st.fault_plan
-    if plan is None:
-        return
-    for o in range(lo, hi + 1):
-        sp = plan.fire(("dispatch", "oom"), o)
-        if sp is None:
-            continue
-        st.stats.faults_injected += 1
-        if sp.fatal:
-            raise resilience.UnrecoverableFault(
-                f"injected fatal {sp.kind} fault at superstep {o}")
-        if sp.kind == "oom":
-            raise membudget.DeviceOOM(
-                f"injected OOM at superstep {o}", rung=st.mem_rung)
-        # transient dispatch fault: the injection fires *before* the
-        # call, so the retry re-issues the identical pure chunk —
-        # mirror _guarded_kernel's accounting and continue
-        st.stats.retries += 1
-        time.sleep(float(st.p.retry_backoff_s))
-
-
-def _device_probe_nan(st: _SuperstepState, lo: int, hi: int):
-    """Find the first injected nan spec in [lo, hi]; returns ordinal|-1.
-
-    The device program poisons the flagged superstep's bias tile on
-    device (``poison_at``) and replays it in place with the clean bias
-    — the same quarantine/replay recovery as the host pipeline.
-    """
-    plan = st.fault_plan
-    if plan is None:
-        return -1
-    for o in range(lo, hi + 1):
-        sp = plan.fire(("nan",), o)
-        if sp is None:
-            continue
-        st.stats.faults_injected += 1
-        if sp.fatal:
-            raise resilience.UnrecoverableFault(
-                f"injected fatal nan tile at superstep {o}")
-        return o
-    return -1
-
-
-def _device_export(st: _SuperstepState, k: int, acc: np.ndarray,
-                   caps: dict, cache_f16: bool):
-    """Build the initial device carry from the seeded host state.
-
-    Returns ``(carry_np, caps)`` — plain numpy; the attempt loop
-    uploads. ``caps["sp"]`` may grow if the host store does not fit.
-    """
-    hg, n, m = st.hg, st.hg.n, st.hg.m
-    P = int(st.p.pool_cap)
-    st._store_flush()
-    enc = device_loop.host_store_to_device(
-        st.bq_key, st.bq_edge, k, caps["sp"])
-    while enc is None:
-        caps = dict(caps, sp=caps["sp"] * 2)
-        enc = device_loop.host_store_to_device(
-            st.bq_key, st.bq_edge, k, caps["sp"])
-    skey, sedge, sback, sfront = enc
-    pool = np.full((k, P), -1, dtype=np.int32)
-    pool_n = np.zeros(k, dtype=np.int32)
-    for g, ids in enumerate(st.pools):
-        pool[g, :ids.size] = ids
-        pool_n[g] = ids.size
-    # queued decrements: the undrained delta's neighbor multiset (the
-    # host drains it at the next dispatch) plus any queued winner tails
-    pend = np.zeros(n, dtype=np.int32)
-    d_ids, _ = st.take_delta(1 << 60)
-    if d_ids.size:
-        nbrs, _ = scoring.gather_csr_rows(st.adj[0], st.adj[1], d_ids)
-        np.add.at(pend, nbrs, 1)
-    for a in st.pending_dirty:
-        np.add.at(pend, np.asarray(a, dtype=np.int64), 1)
-    st.pending_dirty = []
-    cache = np.asarray(st.dev_cache, dtype=np.float32).copy()
-    if cache_f16:
-        cache = np.clip(cache, -65504.0, 65504.0).astype(np.float16)
-    carry = dict(
-        assign=st.assignment.astype(np.int32, copy=True),
-        cache=cache,
-        acc=acc.astype(np.int32, copy=True),
-        in_pool=st.in_pool.copy(),
-        cache_scored=st.cache_scored.copy(),
-        edge_queued=st.edge_queued.copy(),
-        edge_dead=st.edge_dead.copy(),
-        skey=skey, sedge=sedge, sback=sback, sfront=sfront,
-        pool=pool, pool_n=pool_n, pend=pend,
-        rand_ptr=np.int32(st.rand_ptr),
-        supersteps=np.int32(st.stats.supersteps),
-        progress=np.int32(1),
-        flags=np.int32(0),
-        ss_in_chunk=np.int32(0),
-        stats=np.zeros(device_loop.NSTATS, dtype=np.int32),
-    )
-    return carry, caps
-
-
-def _device_attempt(hg: Hypergraph, k: int, p: DeviceParams,
-                    caps_over: dict):
-    """One capacity attempt of the device loop.
-
-    Returns ``("ok", assignment, st)``, ``("fallback", reason, None)``
-    or ``("overflow", flags, caps)``. DeviceOOM propagates (enriched
-    with rung + partial) for the caller's ladder.
-    """
-    import time as _time
-
-    chunk_max = max(1, int(getattr(p, "chunk_supersteps", 64)))
-    cache_dtype = str(getattr(p, "cache_dtype", "float32"))
-    cache_f16 = cache_dtype == "float16"
-    st = _SuperstepState(hg, k, dataclasses.replace(p, pipeline_depth=1),
-                         mem_rung=0)
-    if st.dev is None:
-        return ("fallback", "no device adjacency", None)
-    if st.mem_plan.rung != 0:
-        # the budget wants a reduced configuration; the §4g rungs are
-        # host-pipeline programs — hand the whole run to that engine
-        return ("fallback", "memory plan below rung 0", None)
-    n, m = hg.n, hg.m
-    base, rem = divmod(n, k)
-    targets = np.zeros(k, dtype=np.int64)
-    targets[:] = base + (np.arange(k) < rem)
-    acc = np.zeros(k, dtype=np.int64)
-    R, P, t = int(p.rows), int(p.pool_cap), int(p.t)
-    vdeg = np.diff(hg.v2e_indptr).astype(np.int64)
-    mean_vdeg = float(vdeg.mean()) if n else 1.0
-    mean_adeg = float(st.deg.mean()) if n else 1.0
-    sizes = st.edge_sizes
-    max_edge = int(sizes.max()) if m else 1
-    caps = device_loop.plan_caps(
-        n=n, m=m, kG=k, rows=R, t=t, mean_vdeg=mean_vdeg,
-        mean_adeg=mean_adeg, max_edge=max_edge,
-        store_cap=getattr(p, "store_cap", None),
-        act_cap=getattr(p, "act_cap", None))
-    caps.update(caps_over)
-    if not device_loop.supported(n=n, m=m, kG=k, bud=caps["bud"]):
-        return ("fallback", "int32 encoding gates", None)
-
-    snap_every = max(0, int(p.snapshot_every or 0))
-    config = {"k": k, "devices": 0, "t": t, "rows": R, "pool_cap": P,
-              "s": p.s, "seed": p.seed, "pipeline_depth": 1,
-              "snapshot_every": snap_every, "tile_l": int(st.tile_l),
-              "chunk_supersteps": chunk_max, "cache_dtype": cache_dtype}
-    engine = "hype_device"
-    resumed_carry = None
-    ckpt = resilience.load_latest(p.resume) if p.resume else None
-    if ckpt is not None:
-        t0 = _time.perf_counter()
-        resilience.check_checkpoint(ckpt, hg, k)
-        if ckpt.engine == engine and ckpt.config == config:
-            pay = ckpt.payload
-            resumed_carry = {kk: vv.copy()
-                             for kk, vv in pay["carry"].items()}
-            caps = dict(pay["caps"])
-            caps.update(caps_over)
-            st.stats = dataclasses.replace(pay["stats"])
-            acc = np.asarray(resumed_carry["acc"], dtype=np.int64)
-        else:
-            acc = st.restore_warm(resilience.warm_assignment(ckpt))
-        st.stats.resumed_at = int(ckpt.superstep)
-        st.stats.restore_s += _time.perf_counter() - t0
-
-    if resumed_carry is None:
-        # seed every empty phase with one random vertex — exactly the
-        # pipeline driver's loop, so the device schedule starts from
-        # the same state and random stream position
-        seeds = st.random_unassigned(
-            int(((acc == 0) & (targets > 0)).sum()))
-        gi = 0
-        for g in range(k):
-            if targets[g] == 0 or acc[g] > 0 or gi >= seeds.size:
-                continue
-            v = seeds[gi:gi + 1]
-            gi += 1
-            st.assign_now(v, g)
-            st.activate_phase(v, g)
-            acc[g] += 1
-        carry_np, caps = _device_export(st, k, acc, caps, cache_f16)
-    else:
-        carry_np = resumed_carry
-        carry_np["flags"] = np.int32(0)
-        carry_np["progress"] = np.int32(1)
-
-    cfg = device_loop.DeviceLoopConfig(
-        n=n, m=m, kG=k, rows=R, pool_cap=P, t=t, tile_l=int(st.tile_l),
-        bud=caps["bud"], pp=caps["pp"], sp=caps["sp"], act=caps["act"],
-        rawt=caps["rawt"], rawd=caps["rawd"], cw=caps["cw"],
-        cache_f16=cache_f16, interpret=bool(st.interpret))
-
-    import jax
-    import jax.numpy as jnp
-
-    cls_edge = np.where(
-        sizes <= 1, np.int64(0),
-        np.ceil(np.log2(np.maximum(sizes, 2))).astype(np.int64))
-    consts = dict(
-        adj_indptr=jnp.asarray(st.adj[0].astype(np.int32)),
-        adj_indices=jnp.asarray(st.adj[1].astype(np.int32)),
-        v2e_indptr=jnp.asarray(hg.v2e_indptr.astype(np.int32)),
-        v2e_indices=jnp.asarray(hg.v2e_indices.astype(np.int32)),
-        e2v_indptr=jnp.asarray(hg.e2v_indptr.astype(np.int32)),
-        e2v_indices=jnp.asarray(hg.e2v_indices.astype(np.int32)),
-        cls_edge=jnp.asarray(cls_edge.astype(np.int32)),
-        deg=jnp.asarray(st.deg.astype(np.int32)),
-        vdeg=jnp.asarray(vdeg.astype(np.int32)),
-        targets=jnp.asarray(targets.astype(np.int32)),
-        rand_order=jnp.asarray(st.rand_order.astype(np.int32)),
-        fringe=jnp.full((k, 1), -1, jnp.int32),
-    )
-    try:
-        run = device_loop.device_loop_program(cfg)
-        carry = {kk: jnp.asarray(vv) for kk, vv in carry_np.items()}
-    except Exception as exc:
-        if membudget.is_oom_error(exc):
-            raise membudget.DeviceOOM(
-                f"device loop image upload failed: {exc!r}",
-                rung=st.mem_rung) from exc
-        raise
-    st.stats.loop_state_bytes = device_loop.carry_bytes(carry_np)
-    st.stats.device_image_bytes = int(
-        sum(int(v.nbytes) for v in consts.values())) + \
-        st.stats.loop_state_bytes
-
-    def _snapshot_payload(carry_dev):
-        return {"carry": {kk: np.asarray(vv)
-                          for kk, vv in carry_dev.items()},
-                "caps": dict(caps),
-                "stats": dataclasses.replace(st.stats)}
-
-    last_snap = int(carry_np["supersteps"])
-    last_known = st.assignment.copy()
-    t_wall0 = _time.perf_counter()
-    host_accum = 0.0
-    try:
-        while True:
-            t_host = _time.perf_counter()
-            ss_now = int(np.asarray(carry["supersteps"]))
-            acc_h = np.asarray(carry["acc"]).astype(np.int64)
-            if snap_every and ss_now - last_snap >= snap_every:
-                t0 = _time.perf_counter()
-                st.stats.snapshots += 1
-                resilience.save_snapshot(
-                    p.snapshot_dir,
-                    resilience.PartitionCheckpoint(
-                        engine, ss_now, hg.fingerprint(), dict(config),
-                        _snapshot_payload(carry)),
-                    keep_last=int(p.keep_last))
-                st.stats.snapshot_s += _time.perf_counter() - t0
-                last_snap = ss_now
-                last_known = np.asarray(carry["assign"]).copy()
-            if (acc_h >= targets).all():
-                break
-            if int(np.asarray(carry["progress"])) == 0:
-                break   # starved: stragglers sit in other pools
-            cap = chunk_max
-            if snap_every:
-                cap = min(cap, snap_every - (ss_now - last_snap))
-            cap = max(1, cap)
-            _device_probe_faults(st, ss_now + 1, ss_now + cap)
-            poison_at = _device_probe_nan(st, ss_now + 1, ss_now + cap)
-            if poison_at > 0:
-                cap = poison_at - ss_now    # poisoned step ends chunk
-            host_accum += _time.perf_counter() - t_host
-            t_dev = _time.perf_counter()
-            try:
-                carry = run(consts, carry, jnp.int32(cap),
-                            jnp.int32(poison_at))
-                flags = int(np.asarray(carry["flags"]))   # blocks
-            except Exception as exc:
-                if membudget.is_oom_error(exc):
-                    raise membudget.DeviceOOM(
-                        f"device loop chunk failed: {exc!r}",
-                        rung=st.mem_rung) from exc
-                raise
-            st.stats.device_s += _time.perf_counter() - t_dev
-            st.stats.loop_chunks += 1
-            if flags:
-                if flags & device_loop.FLAG_POISON:
-                    raise resilience.UnrecoverableFault(
-                        "superstep still poisoned after a clean "
-                        "replay: the kernel emits non-finite scores "
-                        "for finite inputs")
-                return ("overflow", flags, caps)
-    except membudget.DeviceOOM as exc:
-        if exc.rung is None:
-            exc.rung = int(st.mem_plan.rung)
-        exc.partial = last_known
-        raise
-    st.stats.host_s += host_accum
-
-    # final download + host mirror
-    st.assignment = np.asarray(carry["assign"]).astype(np.int32,
-                                                       copy=True)
-    acc = np.asarray(carry["acc"]).astype(np.int64)
-    dstats = np.asarray(carry["stats"]).astype(np.int64)
-    st.stats.supersteps = int(np.asarray(carry["supersteps"]))
-    st.stats.kernel_calls += st.stats.supersteps
-    st.stats.loop_rounds += int(dstats[device_loop.S_ROUNDS])
-    st.stats.loop_pack_only += int(dstats[device_loop.S_PACK_ONLY])
-    st.stats.loop_store_peak = max(
-        st.stats.loop_store_peak,
-        int(dstats[device_loop.S_STORE_PEAK]))
-    st.stats.refill_signals += int(dstats[device_loop.S_REFILL])
-    st.stats.kernel_rows += int(dstats[device_loop.S_KERNEL_ROWS])
-    st.stats.edges_scanned += int(dstats[device_loop.S_EDGES_SCANNED])
-    st.stats.cache_invalidations += int(dstats[device_loop.S_CACHE_INV])
-    st.stats.cache_hits += int(dstats[device_loop.S_CACHE_HITS])
-    st.stats.random_restarts += int(dstats[device_loop.S_RESTARTS])
-    st.stats.stale_redraws += int(dstats[device_loop.S_STALE])
-    st.stats.retries += int(dstats[device_loop.S_RETRIES])
-    # safety net: balance-fill any stragglers into underfull phases
-    rem_v = np.flatnonzero(st.assignment < 0)
-    if rem_v.size:
-        deficit = np.maximum(targets - acc, 0)
-        fill = np.repeat(np.arange(k), deficit)[:rem_v.size]
-        st.assignment[rem_v[:fill.size]] = fill.astype(np.int32)
-    st.in_pool[:] = False
-    obs = membudget.observed_peak_bytes()
-    st.stats.peak_bytes_observed = (int(obs) if obs else
-                                    int(st.stats.peak_bytes_planned))
-    del t_wall0
-    return ("ok", st.assignment, st)
-
-
-def _run_device_loop(hg: Hypergraph, k: int, p: DeviceParams):
-    """Run the §4i device loop with the capacity-doubling rerun ladder.
-
-    Returns ``(assignment, st)`` or ``(None, None)`` for the caller's
-    engine fallback. A rerun with doubled caps replays bit-identically
-    (the superstep schedule is capacity-independent); FLAG_SEQ —
-    per-phase sequence-space exhaustion — has no doubling answer and
-    falls back.
-    """
-    caps_over: dict = {}
-    for _ in range(5):
-        kind, a, b = _device_attempt(hg, k, p, caps_over)
-        if kind == "ok":
-            return a, b
-        if kind == "fallback":
-            return None, None
-        flags, caps = a, b
-        if flags & device_loop.FLAG_SEQ:
-            return None, None
-        if flags & device_loop.FLAG_STORE:
-            caps_over["sp"] = 2 * caps["sp"]
-        if flags & device_loop.FLAG_ACT:
-            caps_over["act"] = 2 * caps["act"]
-        if flags & device_loop.FLAG_RAWT:
-            caps_over["rawt"] = 2 * caps["rawt"]
-        if flags & device_loop.FLAG_RAWD:
-            caps_over["rawd"] = 2 * caps["rawd"]
-    return None, None
-
-
-def hype_device_partition(hg: Hypergraph, k: int,
-                          params: Optional[DeviceParams] = None,
-                          return_stats: bool = False):
-    """Partition ``hg`` with the fully device-resident loop (§4i).
-
-    The entire k-way growth loop — pool maintenance, store draws,
-    scoring, admission, exact cache decrements, restarts — runs as one
-    ``lax.while_loop`` program on device; the host uploads the graph
-    image once and downloads a few scalars per chunk of supersteps.
-    Bit-identical to ``hype_superstep_partition`` at
-    ``pipeline_depth=1`` with matching knobs. Falls back to
-    ``hype_superstep_partition`` when the int32 encoding gates or the
-    memory plan reject the graph, and down the §4g rung ladder (via the
-    host pipeline) on device OOM.
-    """
-    if params is None:
-        params = DeviceParams()
-    if params.rows is None:
-        params = dataclasses.replace(params, rows=max(8, params.t))
-    if k < 1:
-        raise ValueError("k must be >= 1")
-    if params.t < 1 or params.rows < 1 or params.pool_cap < 1:
-        raise ValueError("rows, pool_cap, t must all be >= 1")
-    if int(getattr(params, "chunk_supersteps", 64)) < 1:
-        raise ValueError("chunk_supersteps must be >= 1")
-    if getattr(params, "cache_dtype", "float32") not in (
-            "float32", "float16"):
-        raise ValueError("cache_dtype must be float32 or float16")
-    if params.snapshot_every > 0 and not params.snapshot_dir:
-        raise ValueError("snapshot_every requires snapshot_dir")
-    if k == 1:
-        out = np.zeros(hg.n, dtype=np.int32)
-        return (out, BatchedStats()) if return_stats else out
-    fplan = resilience.resolve_fault_plan(params.fault_plan)
-    if fplan is not None:
-        params = dataclasses.replace(params, fault_plan=fplan)
-    try:
-        assignment, st = _run_device_loop(hg, k, params)
-    except membudget.DeviceOOM as exc:
-        # §4g: the device loop has no reduced-memory program variants —
-        # fall down the host pipeline's rung ladder, warm-started from
-        # the chunk boundary the failed attempt last synced. The ladder
-        # keeps this engine's lock-step cadence (pipeline_depth=1): an
-        # upload-time OOM then reruns fresh and lands on the same
-        # golden schedule the device loop would have produced
-        params = dataclasses.replace(params, pipeline_depth=1)
-        rung = 1 if exc.rung is None else int(exc.rung) + 1
-        warm = (exc.partial if exc.partial is not None
-                and (np.asarray(exc.partial) >= 0).any() else None)
-        retries = 1
-        while True:
-            try:
-                assignment, pst = _run_pipeline(
-                    hg, k, params, mem_rung=rung, mem_warm=warm,
-                    mem_retries=retries)
-                break
-            except membudget.DeviceOOM as exc2:
-                retries += 1
-                rung = (rung if exc2.rung is None
-                        else int(exc2.rung)) + 1
-                if (exc2.partial is not None
-                        and (exc2.partial >= 0).any()):
-                    warm = exc2.partial
-            except membudget.MemoryLadderExhausted as exc2:
-                raise resilience.UnrecoverableFault(
-                    f"device memory rungs exhausted: {exc2}") from exc2
-        if assignment is None:
-            return hype_batched_partition(hg, k, params, return_stats)
-        pst.stats.fallbacks += 1
-        assert (assignment >= 0).all()
-        assignment = _maybe_refine(hg, k, params, assignment, pst.stats)
-        return (assignment, pst.stats) if return_stats else assignment
-    if assignment is None:
-        return hype_superstep_partition(hg, k, params, return_stats)
-    assert (assignment >= 0).all()
-    assignment = _maybe_refine(hg, k, params, assignment, st.stats)
-    if return_stats:
-        return assignment, st.stats
-    return assignment
-
-
-def hype_batched_partition(hg: Hypergraph, k: int,
-                           params: Optional[BatchedParams] = None,
-                           return_stats: bool = False):
-    """Partition ``hg`` into ``k`` parts with batched-candidate HYPE.
-
-    Same contract as ``hype_partition``: complete int32 assignment with
-    perfectly balanced partition sizes (max - min <= 1).
-
-    Resilience (DESIGN.md §4f): snapshots are phase-granular — between
-    ``_grow_partition`` calls all transient state (score cache, pools,
-    buckets) is empty, so a checkpoint is just the assignment plus edge
-    flags and the random stream; resuming a same-config snapshot
-    continues bit-identically, and a cross-engine snapshot (the
-    degradation ladder) warm-starts every phase from its members.
-    """
-    if params is None:
-        params = BatchedParams()
-    if k < 1:
-        raise ValueError("k must be >= 1")
-    if params.t < 1 or params.b < 1 or params.s < 1:
-        raise ValueError("b, s, t must all be >= 1")
-    if params.pool_cap < 1:
-        raise ValueError("pool_cap must be >= 1")
-    if params.snapshot_every > 0 and not params.snapshot_dir:
-        raise ValueError("snapshot_every requires snapshot_dir")
-    st = _BatchedState(hg, k, params)
-    n = hg.n
-    base, rem = divmod(n, k)
-    snap_every = max(0, int(params.snapshot_every or 0))
-    config = {"k": k, "t": params.t, "b": params.b, "s": params.s,
-              "pool_cap": params.pool_cap, "refill_lo": params.refill_lo,
-              "cap_pins": params.cap_pins,
-              "kernel_min": params.kernel_min, "seed": params.seed,
-              "snapshot_every": snap_every}
-    start = 0
-    warm = False
-    ckpt = (resilience.load_latest(params.resume) if params.resume
-            else None)
-    if ckpt is not None:
-        t0 = time.perf_counter()
-        resilience.check_checkpoint(ckpt, hg, k)
-        if ckpt.engine == "hype_batched" and ckpt.config == config:
-            pay = ckpt.payload
-            st.assignment = pay["assignment"].copy()
-            st.edge_dead = pay["edge_dead"].copy()
-            st.edge_epoch = pay["edge_epoch"].copy()
-            st.rand_ptr = int(pay["rand_ptr"])
-            st.rng.bit_generator.state = pay["rng_state"]
-            st.stats = dataclasses.replace(pay["stats"])
-            start = int(pay["next_phase"])
-        else:
-            wa = resilience.warm_assignment(ckpt)
-            got = wa >= 0
-            st.assignment[got] = wa[got]
-            warm = True
-        st.stats.resumed_at = int(ckpt.superstep)
-        st.stats.restore_s += time.perf_counter() - t0
-    last_snap = start
-    for i in range(start, k):
-        if i == k - 1:
-            rem_v = np.flatnonzero(st.assignment < 0)
-            st.assignment[rem_v] = i
-            st.in_fringe[:] = False
-            break
-        _grow_partition(st, i, base + (1 if i < rem else 0), warm=warm)
-        if snap_every and i + 1 - last_snap >= snap_every:
-            t0 = time.perf_counter()
-            st.stats.snapshots += 1
-            resilience.save_snapshot(
-                params.snapshot_dir,
-                resilience.PartitionCheckpoint(
-                    "hype_batched", i + 1, hg.fingerprint(),
-                    dict(config),
-                    {"assignment": st.assignment.copy(),
-                     "edge_dead": st.edge_dead.copy(),
-                     "edge_epoch": st.edge_epoch.copy(),
-                     "rand_ptr": int(st.rand_ptr),
-                     "rng_state": st.rng.bit_generator.state,
-                     "stats": dataclasses.replace(st.stats),
-                     "next_phase": i + 1}),
-                keep_last=int(params.keep_last))
-            st.stats.snapshot_s += time.perf_counter() - t0
-            last_snap = i + 1
-    assert (st.assignment >= 0).all()
-    assignment = _maybe_refine(hg, k, params, st.assignment, st.stats)
-    if return_stats:
-        return assignment, st.stats
-    return assignment
+        return superstep.run_pipeline(
+            hg, k, p, mem_rung=mem_rung, mem_warm=mem_warm,
+            mem_retries=mem_retries)
+    kG = -(-k // num_devices) * num_devices
+    return runtime.run_pipeline(
+        hg, k, p,
+        lambda p2, rung: sharded.ShardedState(
+            hg, kG, p2, num_devices, mem_rung=rung),
+        "hype_sharded", devices=num_devices, mem_rung=mem_rung,
+        mem_warm=mem_warm, mem_retries=mem_retries)
+
+
+def _compat_run_pipeline_budgeted(hg, k, p, num_devices=None):
+    from repro.engines import runtime, sharded, superstep
+    if num_devices is None:
+        return superstep.run_pipeline_budgeted(hg, k, p)
+    kG = -(-k // num_devices) * num_devices
+    return runtime.run_pipeline_budgeted(
+        hg, k, p,
+        lambda p2, rung: sharded.ShardedState(
+            hg, kG, p2, num_devices, mem_rung=rung),
+        "hype_sharded", devices=num_devices)
+
+
+_COMPAT = {"_run_pipeline": _compat_run_pipeline,
+           "_run_pipeline_budgeted": _compat_run_pipeline_budgeted}
+
+
+def __getattr__(name: str):
+    target = _MOVED.get(name)
+    if target is None and name not in _COMPAT:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    warnings.warn(
+        f"repro.core.hype_batched.{name} is deprecated; the fast engines "
+        f"live in repro.engines (see repro.engines.__doc__)",
+        DeprecationWarning, stacklevel=2)
+    if target is None:
+        return _COMPAT[name]
+    mod_name, new_name = target
+    return getattr(importlib.import_module(f"repro.engines.{mod_name}"),
+                   new_name)

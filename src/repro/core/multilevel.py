@@ -204,7 +204,8 @@ def hype_multilevel_partition(hg: Hypergraph, k: int, *, seed: int = 0,
     out_small = np.zeros(hg.n, dtype=np.int32)
     if k == 1 or hg.n == 0:
         return out_small
-    from .hype_batched import SuperstepParams, hype_superstep_partition
+    from repro.engines.superstep import (SuperstepParams,
+                                         hype_superstep_partition)
 
     levels = []
     cur, curw = hg, np.ones(hg.n)

@@ -17,6 +17,9 @@ programmatically.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+import importlib
 import time
 from typing import Dict, Optional, Tuple
 
@@ -24,18 +27,41 @@ import numpy as np
 
 from .hypergraph import Hypergraph
 from .hype import HypeParams, hype_partition
-from .hype_batched import (BatchedParams, DeviceParams, ShardedParams,
-                           SuperstepParams,
-                           hype_batched_partition,
-                           hype_device_partition,
-                           hype_sharded_partition,
-                           hype_superstep_partition)
 from . import resilience
 from .resilience import UnrecoverableFault
 from .minmax import hashing_partition, minmax_partition, random_partition
 from .shp import shp_partition
 from .multilevel import hype_multilevel_partition, multilevel_partition
 from . import metrics
+
+# The fast-engine family lives in ``repro.engines`` (one module per
+# engine); ``core`` never imports it at module level (layering,
+# tools/check_layering.py) — dispatch resolves the modules lazily.
+_FAST_ENGINES: Dict[str, Tuple[str, str, str]] = {
+    "hype_batched": ("repro.engines.batched", "BatchedParams",
+                     "hype_batched_partition"),
+    "hype_superstep": ("repro.engines.superstep", "SuperstepParams",
+                       "hype_superstep_partition"),
+    "hype_device": ("repro.engines.device", "DeviceParams",
+                    "hype_device_partition"),
+    "hype_sharded": ("repro.engines.sharded", "ShardedParams",
+                     "hype_sharded_partition"),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _engine(method: str):
+    """Resolve a fast engine's (ParamsClass, runner) pair lazily."""
+    mod_name, cls_name, run_name = _FAST_ENGINES[method]
+    mod = importlib.import_module(mod_name)
+    return getattr(mod, cls_name), getattr(mod, run_name)
+
+
+@functools.lru_cache(maxsize=None)
+def _params_class(spec: Tuple[str, str]):
+    """Load the params dataclass a METHOD_INFO ``params`` spec names."""
+    mod_name, cls_name = spec
+    return getattr(importlib.import_module(mod_name), cls_name)
 
 # method -> one-line description, vertex-balance slack, notable knobs.
 # The slack is the engine's documented guarantee on max(part size) -
@@ -44,24 +70,36 @@ from . import metrics
 # slack-100 constraint; hashing and the recursive-bisection multilevel
 # partitioner only promise proportional balance (a fraction of n/k),
 # recorded here as callables of (n, k) so the registry test can enforce
-# exactly what is documented. ``knobs`` lists the engine-specific
-# keyword arguments ``partition()`` forwards — the registry drift test
-# checks each against the engine's params signature, so a renamed or
-# removed knob fails there, not in production.
+# exactly what is documented. Engine-specific keyword knobs are
+# SINGLE-SOURCED from each engine's params dataclass: a ``params`` entry
+# names ``(module, class)`` and ``method_knobs()`` derives the knob
+# tuple from its fields (minus ``seed`` and any ``knob_exclude`` names
+# the method pins itself), so the registry cannot drift from the
+# dataclass — the two-way drift test in tests/test_partition_registry.py
+# enforces it. Methods without a params dataclass keep a hand-maintained
+# ``knobs`` tuple checked against the callable's signature. ``presets``
+# maps ``preset=fast|balanced|quality`` to the knob defaults
+# ``partition()`` folds under explicit keywords.
+_PRESETS_HOST = {"fast": {}, "balanced": {"refine_passes": 1},
+                 "quality": {"refine_passes": 4}}
+# the pipelined engines additionally pin the lock-step schedule at
+# ``quality``: depth 1 is the canonical golden cadence, and with the
+# refinement post-pass dominating runtime the overlap buys nothing
+_PRESETS_PIPE = {"fast": {}, "balanced": {"refine_passes": 1},
+                 "quality": {"refine_passes": 4, "pipeline_depth": 1}}
 METHOD_INFO: Dict[str, dict] = {
     "hype": {
         "desc": "paper-faithful numpy HYPE: heap + per-vertex growth "
                 "steps (fidelity reference, ablations)",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("s", "r", "use_cache", "dext_mode"),
+        "params": ("repro.core.hype", "HypeParams"),
     },
     "hype_batched": {
         "desc": "batched-candidate HYPE on the Pallas hype_scores "
                 "kernel (host tiles; bit-stable throughput default)",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("t", "b", "s", "pool_cap", "kernel_min",
-                  "refine_passes", "snapshot_every", "snapshot_dir",
-                  "keep_last", "resume", "fault_plan", "max_retries"),
+        "params": ("repro.engines.batched", "BatchedParams"),
+        "presets": _PRESETS_HOST,
     },
     "hype_jax": {
         "desc": "sequential HYPE as one jitted lax.while_loop program "
@@ -78,31 +116,24 @@ METHOD_INFO: Dict[str, dict] = {
                 "grow all k phases concurrently on a double-buffered "
                 "pipeline (large-k choice; pipeline_depth=1 locks step)",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("t", "rows", "pool_cap", "pipeline_depth",
-                  "refine_passes", "snapshot_every", "snapshot_dir",
-                  "keep_last", "resume", "fault_plan", "max_retries",
-                  "mem_budget"),
+        "params": ("repro.engines.superstep", "SuperstepParams"),
+        "presets": _PRESETS_PIPE,
     },
     "hype_device": {
         "desc": "fully device-resident HYPE: the whole growth loop as "
                 "one lax.while_loop megakernel with on-device pool "
                 "maintenance; host syncs once per chunk (DESIGN.md §4i)",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("t", "rows", "pool_cap", "chunk_supersteps",
-                  "cache_dtype", "store_cap", "act_cap",
-                  "refine_passes", "snapshot_every", "snapshot_dir",
-                  "keep_last", "resume", "fault_plan", "max_retries",
-                  "mem_budget"),
+        "params": ("repro.engines.device", "DeviceParams"),
+        "presets": _PRESETS_HOST,
     },
     "hype_sharded": {
         "desc": "mesh-sharded superstep HYPE: phase groups sharded over "
                 "a JAX device mesh, one all_gather per pipelined "
                 "superstep",
         "balance_slack": lambda n, k: 1,
-        "knobs": ("t", "rows", "pool_cap", "pipeline_depth", "devices",
-                  "refine_passes", "snapshot_every", "snapshot_dir",
-                  "keep_last", "resume", "fault_plan", "max_retries",
-                  "mem_budget"),
+        "params": ("repro.engines.sharded", "ShardedParams"),
+        "presets": _PRESETS_PIPE,
     },
     "hype_stream": {
         "desc": "single-pass streaming HYPE: micro-batched arrivals "
@@ -112,15 +143,14 @@ METHOD_INFO: Dict[str, dict] = {
         # hard ceil(n/k) capacity cap, no final rebalance: the last
         # arrivals can leave up to a k-wide size gap
         "balance_slack": lambda n, k: k,
-        "knobs": ("micro_batch", "sketch_bits", "update_radius", "s",
-                  "balance_alpha", "fringe_weight", "order",
-                  "snapshot_every", "snapshot_dir", "keep_last",
-                  "resume", "fault_plan", "max_retries", "mem_budget"),
+        "params": ("repro.core.hype_stream", "StreamParams"),
     },
     "hype_weighted": {
         "desc": "numpy HYPE with degree-weighted balancing (HypeParams"
                 "(balance='weighted'))",
         "balance_slack": lambda n, k: n,    # balances weight, not counts
+        "params": ("repro.core.hype", "HypeParams"),
+        "knob_exclude": ("balance",),       # pinned to "weighted"
     },
     "minmax_nb": {
         "desc": "streaming MinMax, vertex-balanced variant (HYPE paper "
@@ -178,11 +208,34 @@ def describe_methods() -> Dict[str, str]:
 def method_knobs(method: str) -> tuple:
     """Engine-specific keyword knobs ``partition()`` forwards.
 
-    Empty for methods whose only knob is ``seed``. The registry drift
-    test verifies every listed knob against the engine's params
-    signature, so this tuple is safe to render in docs and CLIs.
+    Methods with a ``params`` dataclass spec derive the tuple from the
+    dataclass fields (minus ``seed``, which ``partition()`` owns, and
+    any ``knob_exclude`` names the method pins itself), so the registry
+    cannot drift from the engine. Methods without one return their
+    hand-maintained ``knobs`` tuple; empty for methods whose only knob
+    is ``seed``. Either way the registry drift test verifies every
+    listed knob against the engine's signature, so this tuple is safe
+    to render in docs and CLIs.
     """
-    return tuple(METHOD_INFO[method].get("knobs", ()))
+    info = METHOD_INFO[method]
+    spec = info.get("params")
+    if spec is None:
+        return tuple(info.get("knobs", ()))
+    cls = _params_class(spec)
+    hidden = {"seed"} | set(info.get("knob_exclude", ()))
+    return tuple(f.name for f in dataclasses.fields(cls)
+                 if f.name not in hidden)
+
+
+def method_presets(method: str) -> Dict[str, dict]:
+    """The ``preset`` vocabulary ``partition()`` accepts for ``method``.
+
+    Maps preset name -> the knob defaults it folds in (explicit keywords
+    still win). Empty for methods without presets; ``"fast"`` is always
+    the empty dict, i.e. bit-identical to the engine's own defaults.
+    """
+    return {name: dict(knobs) for name, knobs
+            in METHOD_INFO[method].get("presets", {}).items()}
 
 
 def balance_slack(method: str, n: int, k: int) -> int:
@@ -220,8 +273,25 @@ def _resolve_validate(hg: Hypergraph, validate,
     return validate
 
 
+def _resolve_preset(method: str, preset: Optional[str],
+                    kw: dict) -> dict:
+    """Fold ``preset`` defaults under the explicit knobs in ``kw``."""
+    if preset is None:
+        return kw
+    presets = METHOD_INFO.get(method, {}).get("presets")
+    if not presets:
+        raise ValueError(
+            f"method {method!r} does not support presets")
+    if preset not in presets:
+        raise ValueError(
+            f"unknown preset {preset!r} for method {method!r}; "
+            f"choose from {tuple(presets)}")
+    return {**presets[preset], **kw}
+
+
 def partition(hg: Hypergraph, k: int, method: str = "hype", *,
-              seed: int = 0, validate="auto",
+              seed: int = 0, preset: Optional[str] = None,
+              validate="auto",
               auto_validate_max_n: int = 1_000_000, **kw) -> np.ndarray:
     """Partition ``hg`` into ``k`` parts; the single entry point.
 
@@ -241,6 +311,14 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
     seed : int
         Seeds every stochastic engine; equal seeds give identical
         assignments for the same method and knobs.
+    preset : str, optional
+        Named knob bundle for the fast engines (``method_presets``):
+        ``"fast"`` keeps the engine's own defaults (bit-identical to
+        passing no preset), ``"balanced"`` adds one refinement pass,
+        ``"quality"`` runs four refinement passes (the pipelined
+        engines also pin ``pipeline_depth=1``). Explicit knobs in
+        ``**kw`` override the preset. Raises ``ValueError`` for an
+        unknown preset or a method without presets.
     validate : "auto" | bool
         Run ``hg.validate()`` before dispatching so CSR corruption
         surfaces as a clear ``ValueError`` here rather than an opaque
@@ -266,25 +344,18 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
     """
     if _resolve_validate(hg, validate, auto_validate_max_n):
         hg.validate()
+    kw = _resolve_preset(method, preset, kw)
     if method == "hype":
         return hype_partition(hg, k, HypeParams(seed=seed, **kw))
-    if method == "hype_batched":
-        return hype_batched_partition(hg, k, BatchedParams(seed=seed, **kw))
+    if method in _FAST_ENGINES:
+        params_cls, runner = _engine(method)
+        return runner(hg, k, params_cls(seed=seed, **kw))
     if method == "hype_jax":
         from .hype_jax import hype_jax_partition
         return hype_jax_partition(hg, k, seed=seed, **kw)
     if method == "hype_parallel":
         from .hype_jax import hype_parallel_partition
         return hype_parallel_partition(hg, k, seed=seed, **kw)
-    if method == "hype_superstep":
-        return hype_superstep_partition(
-            hg, k, SuperstepParams(seed=seed, **kw))
-    if method == "hype_device":
-        return hype_device_partition(
-            hg, k, DeviceParams(seed=seed, **kw))
-    if method == "hype_sharded":
-        return hype_sharded_partition(
-            hg, k, ShardedParams(seed=seed, **kw))
     if method == "hype_stream":
         from .hype_stream import StreamParams, hype_stream_partition
         return hype_stream_partition(hg, k, StreamParams(seed=seed, **kw))
@@ -308,7 +379,8 @@ def partition(hg: Hypergraph, k: int, method: str = "hype", *,
 
 
 def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
-                         seed: int = 0, validate="auto",
+                         seed: int = 0, preset: Optional[str] = None,
+                         validate="auto",
                          **kw) -> Tuple[dict, np.ndarray]:
     """Partition and measure: returns ``(report, assignment)``.
 
@@ -320,7 +392,8 @@ def partition_and_report(hg: Hypergraph, k: int, method: str = "hype", *,
     to placement code and the report to dashboards).
     """
     t0 = time.perf_counter()
-    assignment = partition(hg, k, method, seed=seed, validate=validate, **kw)
+    assignment = partition(hg, k, method, seed=seed, preset=preset,
+                           validate=validate, **kw)
     dt = time.perf_counter() - t0
     rep = metrics.all_metrics(hg, assignment, k)
     rep.update(method=method, k=k, runtime_s=dt)
@@ -350,7 +423,7 @@ def _run_rung(hg: Hypergraph, k: int, method: str, seed: int,
     ``devices=4`` survives the hop from ``hype_sharded`` to
     ``hype_superstep`` without a TypeError.
     """
-    knobs = set(METHOD_INFO[method].get("knobs", ()))
+    knobs = set(method_knobs(method))
     sub = {key: val for key, val in kw.items() if key in knobs}
     if method == "hype":
         warm = None
@@ -361,14 +434,7 @@ def _run_rung(hg: Hypergraph, k: int, method: str, seed: int,
                 warm = resilience.warm_assignment(ckpt)
         return hype_partition(hg, k, HypeParams(seed=seed, **sub),
                               return_stats=True, warm_start=warm)
-    params_cls = {"hype_batched": BatchedParams,
-                  "hype_superstep": SuperstepParams,
-                  "hype_device": DeviceParams,
-                  "hype_sharded": ShardedParams}[method]
-    runner = {"hype_batched": hype_batched_partition,
-              "hype_superstep": hype_superstep_partition,
-              "hype_device": hype_device_partition,
-              "hype_sharded": hype_sharded_partition}[method]
+    params_cls, runner = _engine(method)
     sub.update(snapshot_every=snapshot_every, snapshot_dir=snapshot_dir,
                keep_last=keep_last, resume=resume, fault_plan=plan)
     return runner(hg, k, params_cls(seed=seed, **sub), return_stats=True)

@@ -1,7 +1,7 @@
 """Shared candidate-scoring machinery for the HYPE engines.
 
-The three engines (numpy ``hype.py``, jittable ``hype_jax.py``, batched
-``hype_batched.py``) all need the same primitive: the external-neighbors
+The engine family (numpy ``hype.py``, jittable ``hype_jax.py``, the
+``repro.engines`` fast engines) needs the same primitive: the external-neighbors
 score d_ext(v, F) = |N(v) ∩ V'| for a *batch* of candidate vertices, where
 V' is the remaining vertex universe (neither assigned nor in the fringe).
 This module holds the two batched implementations they share:
@@ -268,8 +268,9 @@ def batched_dext_numpy(hg, vs: np.ndarray, in_fringe: np.ndarray,
 
 
 # ------------------------------------------------------------- superstep
-# Device-resident superstep program: one jitted call performs the whole
-# per-superstep device work of the superstep engine (hype_batched.py) —
+# Shared traced helpers of the device-resident superstep programs (now
+# in ``repro.engines.superstep``/``.sharded``): one jitted program
+# performs the whole per-superstep device work of the superstep engine —
 # apply the host's injection delta (seeds / restarts), decrement-
 # invalidate the cached scores of the delta's neighbors, gather the
 # fresh candidate tiles from the device CSR, run the fused score+select
@@ -367,581 +368,39 @@ def _poison_guard(flat, scores_flat, poison, reset):
     return bad | ((poison[0] > 0) & (reset[0] == 0))
 
 
-@_functools.lru_cache(maxsize=None)
-def _pipeline_program():
-    import jax
-    import jax.numpy as jnp
-    from repro.kernels.hype_score.kernel import SELECT_PAD
-    from repro.kernels.hype_score.ops import hype_score_select
-
-    # poison is NOT donated: at pipeline depth > 1 each in-flight handle
-    # keeps a reference to its own poison output, which the next
-    # dispatch would otherwise consume before harvest can read it —
-    # and it is 4 bytes, so donation buys nothing.
-    @_functools.partial(
-        jax.jit, static_argnames=("tile_l", "select_k", "interpret"),
-        donate_argnums=(2, 3, 4))
-    def step(indptr, indices, assign, cache, acc, poison, delta_ids,
-             delta_vals, dirty_ids, dirty_counts, fresh, bias, pool,
-             fringe, targets, reset, *, tile_l, select_k, interpret):
-        n = assign.shape[0]
-        G, R = fresh.shape
-        assign0, cache0, acc0 = assign, cache, acc
-        # 1.-2. host injections (seeds / restarts — decrement-exact: the
-        #    dirty pairs carry their pre-aggregated neighbor multiset
-        #    plus earlier winners' queued decrements); the host only
-        #    injects vertices that cannot sit in any in-flight slot, so
-        #    the scatter is race-free at any pipeline depth.
-        assign, cache, acc = _apply_host_injections(
-            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
-            dirty_counts)
-        # 3. gather fresh candidate tiles from the device CSR
-        flat = fresh.reshape(-1)
-        tile = _gather_fresh_tiles(indptr, indices, assign, flat, tile_l)
-        # 4. held pool scores, stale slots masked (the redraw rule)
-        prev, n_stale = _stale_masked_prev(pool, assign, cache)
-        # 5. fused score + per-phase top-select
-        scores, sel_idx, sel_val = hype_score_select(
-            tile.reshape(G, R, tile_l), fringe, bias, prev,
-            select_k=select_k, interpret=interpret)
-        # 6. fresh scores enter the cache (pad rows dropped)
-        cache = cache.at[jnp.where(flat >= 0, flat, n)].set(
-            scores.reshape(-1), mode="drop")
-        # 7. map selected slots to vertex ids; admissible = a real score
-        #    on a still-unassigned id. The per-phase cap is the phase's
-        #    remaining target, computed against the *device* totals —
-        #    the host view may lag the pipeline, the device never does.
-        slots = jnp.concatenate([fresh, pool], axis=1)
-        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
-        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
-        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
-        cap = jnp.maximum(targets - acc, 0)
-        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
-        adm = ok & (rank <= cap[:, None])
-        winners = jnp.where(adm, cand, -1)
-        # 8. apply the winners on device (the host mirrors them at
-        #    harvest time, possibly supersteps later). Their score-cache
-        #    decrements stay HOST-side: the harvest pre-aggregates the
-        #    winners' neighbor multiset into the next dispatch's dirty
-        #    pairs — shipping (unique id, count) pairs is far cheaper
-        #    than a (G*t, tile_l) gather+scatter here, and at depth 1 it
-        #    reproduces the lock-step decrement schedule exactly.
-        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
-        assign = assign.at[jnp.where(adm, cand, n)].set(
-            phase_row, mode="drop")
-        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
-        # 9. NaN/inf quarantine: a poisoned superstep reverts every
-        #    mutation and admits nothing; the host replays it from the
-        #    handle's buffers (reset=1). A no-op select when clean, so
-        #    fault-free runs stay bit-identical.
-        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
-        assign = jnp.where(poisoned, assign0, assign)
-        cache = jnp.where(poisoned, cache0, cache)
-        acc = jnp.where(poisoned, acc0, acc)
-        winners = jnp.where(poisoned, -1, winners)
-        n_stale = jnp.where(poisoned, 0, n_stale)
-        poison = poisoned.astype(jnp.int32)[None]
-        return assign, cache, acc, poison, winners, n_stale
-
-    return step
+# The superstep/sharded device programs (pipeline_superstep_device and
+# the memory-rung/sharded variants) moved to the per-engine modules in
+# ``repro.engines`` next to the states that drive them; the module
+# ``__getattr__`` below keeps the old ``scoring.*`` names resolving
+# (with a DeprecationWarning). The traced helpers above stay here: they
+# are the shared scoring vocabulary (engines, device_loop, membudget).
+_MOVED_PROGRAMS = {
+    "_pipeline_program": "superstep",
+    "pipeline_superstep_device": "superstep",
+    "_chunked_program": "superstep",
+    "chunked_superstep_device": "superstep",
+    "_spill_program": "superstep",
+    "spill_superstep_device": "superstep",
+    "_paged_program": "superstep",
+    "paged_superstep_device": "superstep",
+    "_sharded_mesh": "sharded",
+    "_sharded_program": "sharded",
+    "sharded_superstep_device": "sharded",
+}
 
 
-def pipeline_superstep_device(indptr, indices, assign, cache, acc,
-                              poison, delta_ids, delta_vals, dirty_ids,
-                              dirty_counts, fresh, bias, pool, fringe,
-                              targets, reset, *, tile_l: int,
-                              select_k: int, interpret: bool):
-    """Run one device superstep; see ``_pipeline_program`` for the plan.
+def __getattr__(name):
+    mod = _MOVED_PROGRAMS.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    import warnings
+    warnings.warn(
+        f"repro.core.scoring.{name} moved to repro.engines.{mod}",
+        DeprecationWarning, stacklevel=2)
+    return getattr(importlib.import_module(f"repro.engines.{mod}"), name)
 
-    All array arguments are device-resident jax arrays except the small
-    per-superstep id buffers (delta, dirty, fresh, bias, pool, fringe,
-    targets, reset), which are the only host->device traffic.
-    ``assign``, ``cache``, ``acc`` and ``poison`` are DONATED — callers
-    must keep the returned arrays and never touch the inputs again.
-    ``poison`` is the sticky (1,) int32 quarantine flag threaded
-    through the run (see ``_poison_guard``); ``reset`` is the (1,)
-    int32 replay marker. ``tile_l`` is a static gather width (bucketed
-    by the caller so the program retraces only a handful of times);
-    ``select_k`` is the per-phase admission count.
-    Returns ``(assign', cache', acc', poison', winners, n_stale)``
-    where ``winners`` is (G, select_k) int32 admitted ids (-1 = none),
-    ``n_stale`` counts pool slots skipped because an interleaved
-    superstep of the pipeline had already assigned them, and
-    ``poison'[0] > 0`` means the superstep aborted (nothing applied)
-    and must be replayed by the host.
-    """
-    return _pipeline_program()(
-        indptr, indices, assign, cache, acc, poison, delta_ids,
-        delta_vals, dirty_ids, dirty_counts, fresh, bias, pool, fringe,
-        targets, reset, tile_l=tile_l, select_k=select_k,
-        interpret=interpret)
-
-
-# ------------------------------------------------- memory-rung variants
-# Program variants for the memory-budget rung ladder (core/membudget.py,
-# DESIGN.md §4g). Each shares the traced helpers above with
-# ``_pipeline_program`` — the default program is deliberately left
-# untouched (its depth-1 outputs are golden-hashed), and every variant
-# is bit-exact to it on the single-device engine:
-#
-#   * ``_chunked_program``   — scores the G phases in ``g_chunk``
-#     sequential slices (``lax.map``), dividing the peak (G·R, tile_l)
-#     gather-tile footprint by ``g_chunk``. Phases are independent
-#     until admission (selection runs against the pre-winner assignment
-#     snapshot), so chunked scoring computes the same scores in the
-#     same order.
-#   * ``_spill_program``     — no device score cache: the host keeps a
-#     float32 mirror, applies the dirty decrements itself (IEEE-
-#     identical float32 adds of integer counts) and ships the held-pool
-#     scores in; fresh scores return with the winners. Depth-1 only.
-#   * ``_paged_program``     — takes the *pre-gathered raw* neighbor
-#     tile (built chunk-by-chunk by ``membudget.PagedAdjacency``) and
-#     applies the assignment masking in-program, reproducing
-#     ``_gather_fresh_tiles``'s output exactly without a resident CSR.
-
-
-@_functools.lru_cache(maxsize=None)
-def _chunked_program():
-    import jax
-    import jax.numpy as jnp
-    from repro.kernels.hype_score.kernel import SELECT_PAD
-    from repro.kernels.hype_score.ops import hype_score_select
-
-    @_functools.partial(
-        jax.jit,
-        static_argnames=("tile_l", "select_k", "interpret", "g_chunk"),
-        donate_argnums=(2, 3, 4))
-    def step(indptr, indices, assign, cache, acc, poison, delta_ids,
-             delta_vals, dirty_ids, dirty_counts, fresh, bias, pool,
-             fringe, targets, reset, *, tile_l, select_k, interpret,
-             g_chunk):
-        n = assign.shape[0]
-        G, R = fresh.shape
-        assign0, cache0, acc0 = assign, cache, acc
-        assign, cache, acc = _apply_host_injections(
-            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
-            dirty_counts)
-        prev, n_stale = _stale_masked_prev(pool, assign, cache)
-        # phase-chunked gather + score: pad G to a g_chunk multiple
-        # (pad phases carry -1 candidates / +inf bias, so they select
-        # nothing), then lax.map the gather + fused kernel over the
-        # chunks — sequential execution divides the peak tile bytes by
-        # g_chunk while computing the exact scores of the full call.
-        Gc = -(-G // g_chunk)
-        pad = g_chunk * Gc - G
-
-        def padg(a, fill):
-            if pad == 0:
-                return a
-            return jnp.concatenate(
-                [a, jnp.full((pad,) + a.shape[1:], fill, a.dtype)])
-
-        fresh_p = padg(fresh, -1).reshape(g_chunk, Gc, R)
-        bias_p = padg(bias, jnp.inf).reshape(g_chunk, Gc, R)
-        prev_p = padg(prev, jnp.inf).reshape(g_chunk, Gc, prev.shape[1])
-        fringe_p = padg(fringe, -1).reshape(
-            g_chunk, Gc, fringe.shape[1])
-
-        def score_chunk(args):
-            fr_c, bi_c, pr_c, fg_c = args
-            flat_c = fr_c.reshape(-1)
-            tile_c = _gather_fresh_tiles(indptr, indices, assign,
-                                         flat_c, tile_l)
-            return hype_score_select(
-                tile_c.reshape(Gc, R, tile_l), fg_c, bi_c, pr_c,
-                select_k=select_k, interpret=interpret)
-
-        scores_c, sel_idx_c, sel_val_c = jax.lax.map(
-            score_chunk, (fresh_p, bias_p, prev_p, fringe_p))
-        scores = scores_c.reshape(g_chunk * Gc, R)[:G]
-        sel_idx = sel_idx_c.reshape(g_chunk * Gc, select_k)[:G]
-        sel_val = sel_val_c.reshape(g_chunk * Gc, select_k)[:G]
-        # steps 6-9 of _pipeline_program, verbatim
-        flat = fresh.reshape(-1)
-        cache = cache.at[jnp.where(flat >= 0, flat, n)].set(
-            scores.reshape(-1), mode="drop")
-        slots = jnp.concatenate([fresh, pool], axis=1)
-        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
-        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
-        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
-        cap = jnp.maximum(targets - acc, 0)
-        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
-        adm = ok & (rank <= cap[:, None])
-        winners = jnp.where(adm, cand, -1)
-        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
-        assign = assign.at[jnp.where(adm, cand, n)].set(
-            phase_row, mode="drop")
-        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
-        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
-        assign = jnp.where(poisoned, assign0, assign)
-        cache = jnp.where(poisoned, cache0, cache)
-        acc = jnp.where(poisoned, acc0, acc)
-        winners = jnp.where(poisoned, -1, winners)
-        n_stale = jnp.where(poisoned, 0, n_stale)
-        poison = poisoned.astype(jnp.int32)[None]
-        return assign, cache, acc, poison, winners, n_stale
-
-    return step
-
-
-def chunked_superstep_device(indptr, indices, assign, cache, acc,
-                             poison, delta_ids, delta_vals, dirty_ids,
-                             dirty_counts, fresh, bias, pool, fringe,
-                             targets, reset, *, tile_l: int,
-                             select_k: int, interpret: bool,
-                             g_chunk: int):
-    """``pipeline_superstep_device`` with phase-chunked scoring.
-
-    Identical contract and bit-identical outputs; ``g_chunk`` slices
-    the gather + fused-kernel stage so only 1/g_chunk of the phases'
-    tiles is materialized at a time (memory rung 1+, DESIGN.md §4g).
-    """
-    return _chunked_program()(
-        indptr, indices, assign, cache, acc, poison, delta_ids,
-        delta_vals, dirty_ids, dirty_counts, fresh, bias, pool, fringe,
-        targets, reset, tile_l=tile_l, select_k=select_k,
-        interpret=interpret, g_chunk=g_chunk)
-
-
-@_functools.lru_cache(maxsize=None)
-def _spill_program():
-    import jax
-    import jax.numpy as jnp
-    from repro.kernels.hype_score.kernel import SELECT_PAD
-    from repro.kernels.hype_score.ops import hype_score_select
-
-    @_functools.partial(
-        jax.jit, static_argnames=("tile_l", "select_k", "interpret"),
-        donate_argnums=(2, 3))
-    def step(indptr, indices, assign, acc, poison, delta_ids,
-             delta_vals, fresh, bias, pool, prev_host, fringe, targets,
-             reset, *, tile_l, select_k, interpret):
-        n = assign.shape[0]
-        G, R = fresh.shape
-        assign0, acc0 = assign, acc
-        # injections only — the dirty decrements were applied to the
-        # HOST cache mirror at pack time (identical float32 arithmetic)
-        inj = delta_ids >= 0
-        assign = assign.at[jnp.where(inj, delta_ids, n)].set(
-            delta_vals, mode="drop")
-        acc = acc.at[jnp.where(inj, delta_vals, acc.shape[0])].add(
-            1, mode="drop")
-        flat = fresh.reshape(-1)
-        tile = _gather_fresh_tiles(indptr, indices, assign, flat, tile_l)
-        # held pool scores arrive from the host mirror; staleness is
-        # still masked on device against the post-injection assignment
-        psafe = jnp.where(pool >= 0, pool, 0)
-        pool_ok = (pool >= 0) & (assign[psafe] < 0)
-        prev = jnp.where(pool_ok, prev_host, jnp.inf).astype(jnp.float32)
-        n_stale = ((pool >= 0) & ~pool_ok).sum().astype(jnp.int32)
-        scores, sel_idx, sel_val = hype_score_select(
-            tile.reshape(G, R, tile_l), fringe, bias, prev,
-            select_k=select_k, interpret=interpret)
-        slots = jnp.concatenate([fresh, pool], axis=1)
-        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
-        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
-        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
-        cap = jnp.maximum(targets - acc, 0)
-        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
-        adm = ok & (rank <= cap[:, None])
-        winners = jnp.where(adm, cand, -1)
-        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
-        assign = assign.at[jnp.where(adm, cand, n)].set(
-            phase_row, mode="drop")
-        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
-        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
-        assign = jnp.where(poisoned, assign0, assign)
-        acc = jnp.where(poisoned, acc0, acc)
-        winners = jnp.where(poisoned, -1, winners)
-        n_stale = jnp.where(poisoned, 0, n_stale)
-        poison = poisoned.astype(jnp.int32)[None]
-        # fresh scores return to the host, which owns the cache now;
-        # the host only writes them after the poison check
-        return assign, acc, poison, winners, n_stale, scores
-
-    return step
-
-
-def spill_superstep_device(indptr, indices, assign, acc, poison,
-                           delta_ids, delta_vals, fresh, bias, pool,
-                           prev_host, fringe, targets, reset, *,
-                           tile_l: int, select_k: int, interpret: bool):
-    """``pipeline_superstep_device`` with the score cache spilled to host.
-
-    The (n,) float32 cache lives on host (memory rung 4, depth-1 only):
-    the caller applies dirty decrements to its mirror, ships the held
-    pool's ``prev_host`` scores in, and writes the returned ``scores``
-    back at harvest. All arithmetic the device skipped is IEEE-exact
-    float32 on host, so results match the resident-cache program bit
-    for bit at depth 1. ``assign``/``acc`` are DONATED.
-    Returns ``(assign', acc', poison', winners, n_stale, scores)``.
-    """
-    return _spill_program()(
-        indptr, indices, assign, acc, poison, delta_ids, delta_vals,
-        fresh, bias, pool, prev_host, fringe, targets, reset,
-        tile_l=tile_l, select_k=select_k, interpret=interpret)
-
-
-@_functools.lru_cache(maxsize=None)
-def _paged_program():
-    import jax
-    import jax.numpy as jnp
-    from repro.kernels.hype_score.kernel import SELECT_PAD
-    from repro.kernels.hype_score.ops import hype_score_select
-
-    @_functools.partial(
-        jax.jit, static_argnames=("select_k", "interpret"),
-        donate_argnums=(0, 1, 2))
-    def step(assign, cache, acc, poison, delta_ids, delta_vals,
-             dirty_ids, dirty_counts, tile_raw, fresh, bias, pool,
-             fringe, targets, reset, *, select_k, interpret):
-        n = assign.shape[0]
-        G, R = fresh.shape
-        tile_l = tile_raw.shape[1]
-        assign0, cache0, acc0 = assign, cache, acc
-        assign, cache, acc = _apply_host_injections(
-            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
-            dirty_counts)
-        flat = fresh.reshape(-1)
-        # the raw tile was gathered from the paged CSR before this call;
-        # masking assigned neighbors here — against the post-injection
-        # assignment — reproduces _gather_fresh_tiles's output exactly
-        valid = tile_raw >= 0
-        unassigned = assign[jnp.where(valid, tile_raw, 0)] < 0
-        tile = jnp.where(valid & unassigned, tile_raw,
-                         -1).astype(jnp.int32)
-        prev, n_stale = _stale_masked_prev(pool, assign, cache)
-        scores, sel_idx, sel_val = hype_score_select(
-            tile.reshape(G, R, tile_l), fringe, bias, prev,
-            select_k=select_k, interpret=interpret)
-        cache = cache.at[jnp.where(flat >= 0, flat, n)].set(
-            scores.reshape(-1), mode="drop")
-        slots = jnp.concatenate([fresh, pool], axis=1)
-        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
-        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
-        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
-        cap = jnp.maximum(targets - acc, 0)
-        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
-        adm = ok & (rank <= cap[:, None])
-        winners = jnp.where(adm, cand, -1)
-        phase_row = jax.lax.broadcasted_iota(jnp.int32, adm.shape, 0)
-        assign = assign.at[jnp.where(adm, cand, n)].set(
-            phase_row, mode="drop")
-        acc = acc + adm.sum(axis=1, dtype=acc.dtype)
-        poisoned = _poison_guard(flat, scores.reshape(-1), poison, reset)
-        assign = jnp.where(poisoned, assign0, assign)
-        cache = jnp.where(poisoned, cache0, cache)
-        acc = jnp.where(poisoned, acc0, acc)
-        winners = jnp.where(poisoned, -1, winners)
-        n_stale = jnp.where(poisoned, 0, n_stale)
-        poison = poisoned.astype(jnp.int32)[None]
-        return assign, cache, acc, poison, winners, n_stale
-
-    return step
-
-
-def paged_superstep_device(assign, cache, acc, poison, delta_ids,
-                           delta_vals, dirty_ids, dirty_counts,
-                           tile_raw, fresh, bias, pool, fringe, targets,
-                           reset, *, select_k: int, interpret: bool):
-    """``pipeline_superstep_device`` without a resident CSR image.
-
-    ``tile_raw`` is the (G·R, tile_l) *unmasked* neighbor-id tile
-    assembled by ``membudget.PagedAdjacency.gather`` (memory rung 5);
-    the program applies the assignment masking itself, so the scores —
-    and therefore the whole run — are bit-identical to the
-    resident-image engine. The single-device program's only other CSR
-    use (winner decrements) already lives host-side, which is what
-    makes this rung possible at all. ``assign``/``cache``/``acc`` are
-    DONATED. Returns ``(assign', cache', acc', poison', winners,
-    n_stale)``.
-    """
-    return _paged_program()(
-        assign, cache, acc, poison, delta_ids, delta_vals, dirty_ids,
-        dirty_counts, tile_raw, fresh, bias, pool, fringe, targets,
-        reset, select_k=select_k, interpret=interpret)
-
-
-# ---------------------------------------------------------- sharded superstep
-# Mesh-sharded superstep program: the per-superstep device work of the
-# sharded engine, run under shard_map over a 1-D device mesh. The CSR
-# image, assignment and score cache are *replicated* on every device;
-# the k phase groups are sharded — each device gathers, scores and
-# selects only its own contiguous group of phases, then ONE all_gather
-# per superstep exchanges (fresh scores | admissions) so every replica
-# applies the same cache writes, conflict resolution and exact-decrement
-# invalidations. Replicas therefore stay bit-identical without ever
-# shipping the (n,)-sized state between devices.
-
-
-@_functools.lru_cache(maxsize=None)
-def _sharded_mesh(num_devices: int):
-    """1-D device mesh over the first ``num_devices`` local devices."""
-    import jax
-    import numpy as _np
-    from jax.sharding import Mesh
-
-    return Mesh(_np.asarray(jax.devices()[:num_devices]), ("shard",))
-
-
-@_functools.lru_cache(maxsize=None)
-def _sharded_program(num_devices: int, group_l: int, tile_l: int,
-                     select_k: int, interpret: bool):
-    import jax
-    import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
-    from repro.kernels.hype_score.kernel import SELECT_PAD
-    from repro.kernels.hype_score.ops import hype_score_select_shard
-
-    kL = group_l
-
-    def step(indptr, indices, assign, cache, acc, poison, delta_ids,
-             delta_vals, dirty_ids, dirty_counts, fresh, bias, pool,
-             fringe, targets, reset):
-        n = assign.shape[0]
-        G, R = fresh.shape
-        t = select_k
-        assign0, cache0, acc0 = assign, cache, acc
-        # 1. host injections + dirty decrements — replicated inputs,
-        #    applied identically on every replica (shared helper keeps
-        #    this program bit-aligned with the single-device one)
-        assign, cache, acc = _apply_host_injections(
-            assign, cache, acc, delta_ids, delta_vals, dirty_ids,
-            dirty_counts)
-        # 2. this device's phase-group shard; the admission cap is each
-        #    phase's remaining target per the *device* totals (the host
-        #    view may lag the pipeline, the replicas never do)
-        off = jax.lax.axis_index("shard") * kL
-        fresh_l = jax.lax.dynamic_slice_in_dim(fresh, off, kL, 0)
-        pool_l = jax.lax.dynamic_slice_in_dim(pool, off, kL, 0)
-        cap = jnp.maximum(targets - acc, 0)
-        cap_l = jax.lax.dynamic_slice_in_dim(cap, off, kL, 0)
-        # 3. gather ONLY the shard's fresh-candidate tiles from the
-        #    replicated CSR
-        flat = fresh_l.reshape(-1)
-        tile = _gather_fresh_tiles(indptr, indices, assign, flat, tile_l)
-        # 4. held pool scores from the replicated cache, stale slots
-        #    masked — computed on the *global* pool so the count is
-        #    replicated
-        prev, n_stale = _stale_masked_prev(pool, assign, cache)
-        # 5. fused score + top-select on the local phase group
-        scores_l, sel_idx, sel_val = hype_score_select_shard(
-            tile.reshape(kL, R, tile_l), fringe, bias, prev,
-            select_k=t, shard_offset=off, interpret=interpret)
-        # 6. map selected slots to vertex ids and apply the per-phase
-        #    admission cap (remaining target): slots are score-ascending,
-        #    so the cap keeps the best ``cap`` admissible ones.
-        slots = jnp.concatenate([fresh_l, pool_l], axis=1)
-        cand = jnp.take_along_axis(slots, sel_idx, axis=1)
-        ok = (sel_val < jnp.float32(SELECT_PAD)) & (cand >= 0)
-        ok &= assign[jnp.where(cand >= 0, cand, 0)] < 0
-        rank = jnp.cumsum(ok.astype(jnp.int32), axis=1)
-        adm = ok & (rank <= cap_l[:, None])
-        adm_ids = jnp.where(adm, cand, -1)              # (kL, t)
-        # 7. the superstep's single collective: all devices exchange
-        #    [fresh scores | proposed admissions] in one all_gather
-        payload = jnp.concatenate(
-            [jax.lax.bitcast_convert_type(scores_l, jnp.int32), adm_ids],
-            axis=1)                                     # (kL, R + t)
-        gathered = jax.lax.all_gather(payload, "shard", axis=0,
-                                      tiled=True)       # (G, R + t)
-        g_scores = jax.lax.bitcast_convert_type(gathered[:, :R],
-                                                jnp.float32)
-        g_adm = gathered[:, R:]                         # (G, t)
-        # 8. fresh scores enter every replica's cache (fresh ids are a
-        #    replicated input, so the write is identical everywhere)
-        flat_g = fresh.reshape(-1)
-        cache = cache.at[jnp.where(flat_g >= 0, flat_g, n)].set(
-            g_scores.reshape(-1), mode="drop")
-        # 9. deterministic conflict resolution: when several phases
-        #    propose the same vertex in one superstep, the LOWEST phase
-        #    id wins; losers keep the vertex out and redraw from their
-        #    pools next superstep. Sort (id, phase) pairs and keep each
-        #    id's first occurrence.
-        ids_f = g_adm.reshape(-1)                       # (G * t,)
-        phase_f = (jax.lax.iota(jnp.int32, G * t) // t)
-        ids_key = jnp.where(ids_f >= 0, ids_f, n)
-        order = jnp.lexsort((phase_f, ids_key))
-        sorted_ids = ids_f[order]
-        first = jnp.concatenate(
-            [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
-        win_sorted = first & (sorted_ids >= 0)
-        winner = jnp.zeros((G * t,), bool).at[order].set(win_sorted)
-        n_conflicts = ((ids_f >= 0) & ~winner).sum().astype(jnp.int32)
-        # 10. apply the winners to every replica's assignment + totals
-        assign = assign.at[jnp.where(winner, ids_f, n)].set(
-            phase_f, mode="drop")
-        acc = acc.at[phase_f].add(winner.astype(acc.dtype))
-        # 11. exact-decrement invalidation for the winners: every
-        #     neighbor of a newly assigned vertex has one fewer
-        #     unassigned neighbor. Gather width is the run's tile_l;
-        #     the (rare) winners with more neighbors than that get their
-        #     tail decrements queued by the host into the next
-        #     superstep's dirty buffer, keeping the cache exact.
-        wsafe = jnp.where(winner, ids_f, 0)
-        wstart = indptr[wsafe]
-        wdeg = jnp.minimum(indptr[wsafe + 1] - wstart, tile_l)
-        wcol = jax.lax.broadcasted_iota(jnp.int32, (G * t, tile_l), 1)
-        wvalid = (wcol < wdeg[:, None]) & winner[:, None]
-        wnbr = indices[jnp.where(wvalid, wstart[:, None] + wcol, 0)]
-        cache = cache.at[jnp.where(wvalid, wnbr, n)].add(
-            -1.0, mode="drop")
-        winners = jnp.where(winner, ids_f, -1).reshape(G, t)
-        # 12. NaN/inf quarantine on the *gathered* scores — replicated
-        #     input to the guard, so every replica takes the same revert
-        #     branch and the replicas stay bit-identical. No-op when
-        #     clean (fault-free runs unchanged).
-        poisoned = _poison_guard(flat_g, g_scores.reshape(-1), poison,
-                                 reset)
-        assign = jnp.where(poisoned, assign0, assign)
-        cache = jnp.where(poisoned, cache0, cache)
-        acc = jnp.where(poisoned, acc0, acc)
-        winners = jnp.where(poisoned, -1, winners)
-        n_conflicts = jnp.where(poisoned, 0, n_conflicts)
-        n_stale = jnp.where(poisoned, 0, n_stale)
-        poison = poisoned.astype(jnp.int32)[None]
-        return assign, cache, acc, poison, winners, n_conflicts, n_stale
-
-    mesh = _sharded_mesh(num_devices)
-    rep = P()     # every array is replicated; devices differ via axis_index
-    # poison undonated for the same reason as _pipeline_program: older
-    # in-flight handles must still be able to read their poison output.
-    return jax.jit(shard_map(
-        step, mesh=mesh,
-        in_specs=(rep,) * 16, out_specs=(rep,) * 7,
-        check_rep=False), donate_argnums=(2, 3, 4))
-
-
-def sharded_superstep_device(indptr, indices, assign, cache, acc,
-                             poison, delta_ids, delta_vals, dirty_ids,
-                             dirty_counts, fresh, bias, pool, fringe,
-                             targets, reset, *, num_devices: int,
-                             group_l: int, tile_l: int, select_k: int,
-                             interpret: bool):
-    """Run one mesh-sharded superstep; see ``_sharded_program``.
-
-    ``fresh``/``bias``/``pool``/``fringe``/``targets`` stack all
-    ``G = num_devices * group_l`` phases; each device processes the
-    contiguous group ``[axis_index * group_l, ...)`` and ONE all_gather
-    per call exchanges (fresh scores | proposed admissions), after which
-    every replica applies identical cache writes, lowest-phase-wins
-    conflict resolution and exact decrements. ``assign``/``cache``/
-    ``acc``/``poison`` are DONATED — keep the returned arrays, never
-    reuse the inputs. ``poison``/``reset`` are the (1,) int32 NaN
-    quarantine flag and replay marker (see ``_poison_guard``); a
-    poisoned superstep reverts every mutation on every replica and must
-    be replayed by the host. Admission caps are each phase's remaining
-    target computed against the device-resident ``acc`` totals, so they
-    stay exact at any pipeline depth. Returns ``(assign', cache',
-    acc', poison', winners (G, select_k) int32 ids (-1 = none),
-    n_conflicts, n_stale)``.
-    """
-    return _sharded_program(num_devices, group_l, tile_l, select_k,
-                            interpret)(
-        indptr, indices, assign, cache, acc, poison, delta_ids,
-        delta_vals, dirty_ids, dirty_counts, fresh, bias, pool, fringe,
-        targets, reset)
 
 
 # ------------------------------------------------------------ k-way refine

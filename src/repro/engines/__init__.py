@@ -1,0 +1,53 @@
+"""The HYPE fast-engine family (DESIGN.md §1).
+
+One module per engine, co-located with its device program and Params
+dataclass, on a shared runtime:
+
+  * ``runtime``   — ``EngineRuntime``, ``BatchedStats``, the pipeline
+    driver + memory-rung retry loop, snapshot/restore, ``maybe_refine``
+  * ``pipeline``  — ``PipelineState``, the shared host half of the
+    double-buffered superstep pipeline (abstract device call)
+  * ``batched``   — host tiles + Pallas scoring kernel (``hype_batched``)
+  * ``superstep`` — device-resident superstep engine (``hype_superstep``)
+  * ``sharded``   — mesh-sharded superstep engine (``hype_sharded``)
+  * ``device``    — fully device-resident loop engine (``hype_device``)
+
+Layering (enforced by ``tools/check_layering.py``): engine modules may
+import ``runtime``/``pipeline``, ``repro.core.*`` and ``repro.kernels.*``
+freely, and only *public* names from sibling engine modules (the Params
+inheritance chain and the fallback entry points); ``repro.core`` never
+imports this package at module level.
+
+The engine modules import lazily here — ``import repro.engines`` stays
+cheap; jax is only pulled in when an engine is actually used.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "BatchedStats": "runtime",
+    "EngineRuntime": "runtime",
+    "maybe_refine": "runtime",
+    "PipelineState": "pipeline",
+    "BatchedParams": "batched",
+    "BatchedState": "batched",
+    "hype_batched_partition": "batched",
+    "SuperstepParams": "superstep",
+    "SuperstepState": "superstep",
+    "hype_superstep_partition": "superstep",
+    "ShardedParams": "sharded",
+    "ShardedState": "sharded",
+    "hype_sharded_partition": "sharded",
+    "DeviceParams": "device",
+    "hype_device_partition": "device",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

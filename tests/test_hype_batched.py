@@ -1,27 +1,21 @@
-"""Batched-candidate engine: validity, cross-engine agreement, kernel use,
-shared-scoring equivalences, the fringe-release regression, and the
-device-resident superstep engine (validity, stats, exact cache)."""
+"""Batched-candidate engine suite: validity, cross-engine agreement,
+edge cases, and Pallas-kernel hot-path coverage (repro.engines.batched)."""
 import numpy as np
 import pytest
 
 from repro.core import metrics
 from repro.core.hype import HypeParams, hype_partition
-from repro.core.hype_batched import (BatchedParams, SuperstepParams,
-                                     _SuperstepState,
-                                     hype_batched_partition,
-                                     hype_superstep_partition)
-from repro.core.hype_jax import PaddedHypergraph, hype_jax_partition
+from repro.core.hype_jax import hype_jax_partition
 from repro.core.hypergraph import Hypergraph
 from repro.core.partition_api import METHODS, partition
-from repro.core import scoring
 from repro.data.synthetic import powerlaw_hypergraph
+from repro.engines.batched import BatchedParams, hype_batched_partition
 
 
 @pytest.fixture(scope="module")
 def hg():
     return powerlaw_hypergraph(600, 400, seed=11, max_edge=30,
                                max_degree=20)
-
 
 # ------------------------------------------------------------- validity
 
@@ -126,244 +120,3 @@ def test_kernel_on_hot_path(hg):
     assert st.host_rows == 0      # kernel_min=1 routes everything there
 
 
-# ------------------------------------------- shared scoring equivalence
-
-def test_tile_paths_agree():
-    """Adjacency fast path == per-batch dedup path, row for row."""
-    hg = powerlaw_hypergraph(300, 200, seed=4, max_edge=18, max_degree=12)
-    rng = np.random.default_rng(0)
-    assignment = np.where(rng.random(hg.n) < 0.3,
-                          rng.integers(0, 4, hg.n), -1).astype(np.int32)
-    cands = rng.choice(np.flatnonzero(assignment < 0), 40, replace=False)
-    adj = hg.vertex_adjacency()
-    t1, tr1 = scoring.neighbor_tile(hg, cands, assignment, pad_b=64)
-    t2, tr2 = scoring.neighbor_tile_adj(adj, cands, assignment, pad_b=64)
-    np.testing.assert_array_equal(tr1, tr2)
-    # same sets per row (construction order may differ)
-    for i in range(len(cands)):
-        np.testing.assert_array_equal(np.sort(t1[i][t1[i] >= 0]),
-                                      np.sort(t2[i][t2[i] >= 0]))
-
-
-def test_batched_dext_matches_scalar():
-    """Vectorized d_ext == the numpy engine's per-vertex d_ext."""
-    from repro.core.hype import _HypeState
-    hg = powerlaw_hypergraph(300, 200, seed=5, max_edge=18, max_degree=12)
-    st = _HypeState(hg, 4, HypeParams(seed=0))
-    rng = np.random.default_rng(1)
-    st.assignment[rng.random(hg.n) < 0.25] = 1
-    fr = rng.choice(np.flatnonzero(st.assignment < 0), 8, replace=False)
-    st.in_fringe[fr] = True
-    vs = rng.integers(0, hg.n, 50)
-    batch = scoring.batched_dext_numpy(hg, vs, st.in_fringe, st.assignment)
-    scalar = np.asarray([st.d_ext(int(v)) for v in vs])
-    np.testing.assert_allclose(batch, scalar)
-    # adjacency path agrees too
-    adj = hg.vertex_adjacency()
-    np.testing.assert_allclose(
-        scoring.batched_dext_adj(adj, vs, st.in_fringe, st.assignment),
-        scalar)
-
-
-def test_padded_hypergraph_vectorized_matches_loop():
-    """from_hypergraph: numpy scatter == the per-row loop, bit for bit."""
-    for seed in range(4):
-        hg = powerlaw_hypergraph(120, 90, seed=seed, max_edge=14,
-                                 max_degree=9)
-        ph = PaddedHypergraph.from_hypergraph(hg)
-        max_deg = max(1, int(hg.vertex_degrees.max()))
-        max_size = max(1, int(hg.edge_sizes.max()))
-        v2e = np.full((hg.n, max_deg), -1, dtype=np.int32)
-        e2v = np.full((hg.m, max_size), -1, dtype=np.int32)
-        for v in range(hg.n):
-            es = hg.vertex_edges(v)
-            v2e[v, :es.size] = es
-        for e in range(hg.m):
-            ps = hg.edge_pins(e)
-            e2v[e, :ps.size] = ps
-        np.testing.assert_array_equal(np.asarray(ph.v2e), v2e)
-        np.testing.assert_array_equal(np.asarray(ph.e2v), e2v)
-    # degenerate: vertices/edges with no pins at all
-    hg0 = Hypergraph.from_edge_lists(3, [[], [0]])
-    ph0 = PaddedHypergraph.from_hypergraph(hg0)
-    assert ph0.v2e.shape == (3, 1) and ph0.e2v.shape == (2, 1)
-
-
-def test_vertex_adjacency_matches_neighbors():
-    hg = powerlaw_hypergraph(150, 100, seed=6, max_edge=12, max_degree=8)
-    indptr, indices = hg.vertex_adjacency()
-    for v in (0, 7, int(np.argmax(hg.vertex_degrees)), hg.n - 1):
-        row = indices[indptr[v]:indptr[v + 1]]
-        np.testing.assert_array_equal(np.sort(row), hg.neighbors(v))
-
-
-# ------------------------------------------------------ superstep engine
-
-@pytest.mark.parametrize("k", [2, 5, 16])
-def test_superstep_complete_and_balanced(hg, k):
-    a = hype_superstep_partition(hg, k, SuperstepParams(seed=0))
-    assert a.shape == (hg.n,)
-    assert a.dtype == np.int32
-    assert a.min() >= 0 and a.max() < k
-    sizes = metrics.partition_sizes(a, k)
-    assert sizes.max() - sizes.min() <= 1
-
-
-def test_superstep_deterministic(hg):
-    a1 = hype_superstep_partition(hg, 6, SuperstepParams(seed=3))
-    a2 = hype_superstep_partition(hg, 6, SuperstepParams(seed=3))
-    np.testing.assert_array_equal(a1, a2)
-
-
-def test_superstep_registered_in_api(hg):
-    assert "hype_superstep" in METHODS
-    a = partition(hg, 4, "hype_superstep", seed=0)
-    assert a.min() >= 0 and a.max() < 4
-
-
-def test_superstep_quality_regime(hg):
-    """Concurrent k-way growth stays in the sequential engines' quality
-    regime (same tolerance as the batched engine's agreement tests)."""
-    k = 8
-    a_s = hype_superstep_partition(hg, k, SuperstepParams(seed=0))
-    a_n = hype_partition(hg, k, HypeParams(seed=0))
-    km_s = metrics.k_minus_1(hg, a_s)
-    km_n = metrics.k_minus_1(hg, a_n)
-    assert km_s <= 1.35 * km_n + 20
-
-
-def test_superstep_edge_cases():
-    hg = Hypergraph.from_edge_lists(6, [[0, 1], [1, 2, 3], []])
-    for k in (1, 2, 3, 8):
-        a = hype_superstep_partition(hg, k, SuperstepParams(seed=0))
-        assert (a >= 0).all() and (a < k).all()
-        sizes = np.bincount(a, minlength=min(k, 6))
-        assert sizes.max() - sizes.min() <= 1
-
-
-def test_superstep_stats_counters(hg):
-    """The superstep/transfer counters must measure the device traffic."""
-    _, stt = hype_superstep_partition(hg, 8, SuperstepParams(seed=0),
-                                      return_stats=True)
-    assert stt.supersteps > 0
-    assert stt.kernel_calls == stt.supersteps
-    assert stt.kernel_rows > 0
-    assert stt.device_image_bytes > 0
-    assert stt.host_to_device_bytes > 0
-    assert stt.cache_invalidations > 0
-    assert stt.host_rows == 0            # no host-scoring fallback path
-    # per-superstep traffic is ids + small bias buffers, not (B, L) tiles
-    per_step = (stt.host_to_device_bytes / stt.supersteps)
-    assert per_step < 8 * 64 * scoring.L_BUCKETS[-1]
-
-
-def test_superstep_cache_exact_after_admissions():
-    """Property check for decrement-based invalidation: after ANY
-    admission sequence — device-selected winners (clipped decrements +
-    host-queued tails) and host injections alike — every cached score
-    equals a fresh ``batched_dext_adj`` recompute: the stale-score
-    drift the old per-phase wipe was hiding cannot exist."""
-    for seed in (0, 1, 2):
-        hg = powerlaw_hypergraph(300, 200, seed=10 + seed, max_edge=18,
-                                 max_degree=12)
-        k, R, t = 4, 8, 2
-        rng = np.random.default_rng(seed)
-        st = _SuperstepState(hg, k, SuperstepParams(seed=seed))
-        fringe = np.full((k, 1), -1, np.int32)
-        empty_pool = np.full((k, 4), -1, np.int32)
-        acc = np.zeros(k, dtype=np.int64)
-        targets = np.full(k, hg.n, dtype=np.int64)
-        for step in range(10):
-            # score a random batch of never-scored vertices; the device
-            # admits up to a random per-phase cap of them (cap 0 phases
-            # exercise the selection-without-admission path) ...
-            cand = np.flatnonzero(~st.cache_scored & (st.assignment < 0))
-            fresh = np.full((k, R), -1, np.int32)
-            if cand.size:
-                pick = rng.choice(cand, size=min(k * R, cand.size),
-                                  replace=False)
-                fresh.reshape(-1)[:pick.size] = pick
-            bias = np.where(fresh >= 0, 0, np.inf).astype(np.float32)
-            cap = rng.integers(0, t + 1, size=k)
-            tgt = (acc + cap).astype(np.int32)
-            handle = st.dispatch(fresh, bias, empty_pool, fringe,
-                                 fresh[fresh >= 0].astype(np.int64),
-                                 tgt, 32, t)
-            st.harvest(handle, acc, targets)
-            # ... then admit a random batch by host injection too
-            un = np.flatnonzero(st.assignment < 0)
-            if un.size == 0:
-                break
-            vs = rng.choice(un, size=min(int(rng.integers(1, 8)),
-                                         un.size), replace=False)
-            g = int(rng.integers(0, k))
-            st.assign_now(vs, g)
-            acc[g] += vs.size
-        while st.delta_ids or st.pending_dirty:    # flush tails + deltas
-            handle = st.dispatch(np.full((k, 1), -1, np.int32),
-                                 np.full((k, 1), np.inf, np.float32),
-                                 np.full((k, 1), -1, np.int32), fringe,
-                                 np.empty(0, dtype=np.int64),
-                                 acc.astype(np.int32), 32, 1)
-            st.harvest(handle, acc, targets)
-        cache = np.asarray(st.dev_cache, dtype=np.float64)
-        # rows wider than the run's tile width are truncated hubs parked
-        # at ~1e12 — the exactness contract covers everything else
-        scored = np.flatnonzero(st.cache_scored & (st.deg <= st.tile_l))
-        assert scored.size > 50
-        ref = scoring.batched_dext_adj(st.adj, scored,
-                                       np.zeros(hg.n, dtype=bool),
-                                       st.assignment)
-        assert (ref > 0).any()           # the recompute is not trivial
-        np.testing.assert_allclose(cache[scored], ref)
-        # device/host assignment + totals parity after the flush
-        np.testing.assert_array_equal(np.asarray(st.dev_assign),
-                                      st.assignment)
-        np.testing.assert_array_equal(
-            np.asarray(st.dev_acc),
-            np.bincount(st.assignment[st.assignment >= 0],
-                        minlength=k))
-
-
-def test_superstep_cross_phase_cache_reuse():
-    """Scores survive phase completion: when a finished phase releases
-    its pool and another phase redraws those vertices, they are cache
-    hits — impossible under the old per-phase wipe."""
-    for seed in range(3):
-        hg = powerlaw_hypergraph(300, 500, seed=21 + seed, max_edge=10,
-                                 max_degree=30)
-        _, stt = hype_superstep_partition(
-            hg, 24, SuperstepParams(seed=seed, pool_cap=16),
-            return_stats=True)
-        assert stt.cache_hits > 0
-
-
-# --------------------------------------------- fringe-release regression
-
-def test_seq_grow_releases_fringe():
-    """After each phase the jittable engine must leave in_fringe all-False
-    (the old `.at[].set(x & (idx < 0))` eviction raced on vertex 0)."""
-    import jax
-    import jax.numpy as jnp
-    from repro.core import hype_jax as hj
-
-    hg = powerlaw_hypergraph(200, 140, seed=7, max_edge=14, max_degree=10)
-    ph = PaddedHypergraph.from_hypergraph(hg)
-    n, s, r = ph.n, 10, 2
-    state = hj._SeqState(
-        assignment=jnp.full((n,), -1, jnp.int32),
-        in_fringe=jnp.zeros((n,), bool),
-        fringe=jnp.full((s,), -1, jnp.int32),
-        cache=jnp.full((n,), -1.0, jnp.float32),
-        edge_active=jnp.zeros((ph.m,), bool),
-        core_size=jnp.int32(0),
-        rand_key=jax.random.PRNGKey(0),
-    )
-    grow = jax.jit(hj._seq_grow, static_argnames=("part", "s", "r"))
-    for part in range(3):
-        state = grow(ph, state, part=part, target=jnp.int32(n // 4),
-                     s=s, r=r)
-        state = hj._release_fringe(state, n, s)
-        assert not bool(np.asarray(state.in_fringe).any()), \
-            f"in_fringe leaked after phase {part}"
-        assert (np.asarray(state.fringe) == -1).all()

@@ -10,8 +10,8 @@ import numpy as np
 import pytest
 
 from repro.core import metrics, resilience
-from repro.core.hype_batched import (DeviceParams, SuperstepParams,
-                                     hype_device_partition,
+from repro.engines.device import DeviceParams, hype_device_partition
+from repro.engines.superstep import (SuperstepParams,
                                      hype_superstep_partition)
 from repro.data.synthetic import powerlaw_hypergraph, reddit_like
 

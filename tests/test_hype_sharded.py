@@ -6,9 +6,10 @@ import numpy as np
 import pytest
 
 from repro.core import metrics, scoring
-from repro.core.hype_batched import (ShardedParams, SuperstepParams,
-                                     _ShardedState,
-                                     hype_sharded_partition,
+from repro.engines import sharded
+from repro.engines.sharded import (ShardedParams, ShardedState,
+                                   hype_sharded_partition)
+from repro.engines.superstep import (SuperstepParams,
                                      hype_superstep_partition)
 from repro.core.hypergraph import Hypergraph
 from repro.core.partition_api import METHODS, partition
@@ -136,7 +137,7 @@ def test_conflict_lowest_phase_wins_program():
     empty_i = np.full(4, -1, np.int32)
     poison = jnp.zeros((1,), jnp.int32)
     (a2, c2, acc2, poison2, winners, ncf,
-     n_stale) = scoring.sharded_superstep_device(
+     n_stale) = sharded.sharded_superstep_device(
         dev[0], dev[1], assign, cache, acc, poison, empty_i,
         np.zeros(4, np.int32), empty_i, np.zeros(4, np.float32),
         fresh, bias, pool, fringe, targets, np.zeros(1, np.int32),
@@ -195,7 +196,7 @@ def test_sharded_cache_exact_after_admissions():
         k, D, R, t = 4, 2, 8, 2
         rng = np.random.default_rng(seed)
         p = ShardedParams(seed=seed, t=t, rows=R, devices=D)
-        st = _ShardedState(hg, k, p, D)
+        st = ShardedState(hg, k, p, D)
         fringe = np.full((k, 1), -1, np.int32)
         empty_pool = np.full((k, 4), -1, np.int32)
         acc = np.zeros(k, dtype=np.int64)

@@ -27,7 +27,7 @@ import numpy as np
 import pytest
 
 from repro.core import membudget, metrics, refine, scoring
-from repro.core.hype_batched import SuperstepParams, hype_superstep_partition
+from repro.engines.superstep import SuperstepParams, hype_superstep_partition
 from repro.core.hype_stream import (STREAM_KM1_BOUND, StreamParams,
                                     apply_updates, hype_stream_partition,
                                     recompute_sketch)

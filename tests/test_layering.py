@@ -1,0 +1,86 @@
+"""The import-layering lint (tools/check_layering.py) must hold on the
+real tree AND actually detect violations — each rule is probed with a
+synthetic offending module so a silently broken lint fails here."""
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+from check_layering import check_tree, violations_for_source  # noqa: E402
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def test_real_tree_is_clean():
+    assert check_tree(SRC) == []
+
+
+def test_core_may_not_import_engines():
+    bad = "from repro.engines.batched import BatchedParams\n"
+    v = violations_for_source("repro.core.partition_api", bad)
+    assert len(v) == 1 and "layering rule 1" in v[0][1]
+    v = violations_for_source("repro.core.partition_api",
+                              "import repro.engines\n")
+    assert len(v) == 1
+
+
+def test_core_lazy_import_is_sanctioned():
+    ok = ("def run():\n"
+          "    from repro.engines.batched import BatchedParams\n"
+          "    return BatchedParams\n")
+    assert violations_for_source("repro.core.partition_api", ok) == []
+
+
+def test_engine_sibling_public_import_ok_private_rejected():
+    mod = "repro.engines.superstep"
+    assert violations_for_source(
+        mod, "from .batched import BatchedParams\n") == []
+    v = violations_for_source(
+        mod, "from .batched import _grow_partition\n")
+    assert len(v) == 1 and "non-public" in v[0][1]
+    v = violations_for_source(mod, "from .batched import *\n")
+    assert len(v) == 1
+
+
+def test_engine_may_not_bind_sibling_module_object():
+    mod = "repro.engines.device"
+    v = violations_for_source(mod, "import repro.engines.superstep\n")
+    assert len(v) == 1 and "binds sibling" in v[0][1]
+    v = violations_for_source(mod, "from repro.engines import superstep\n")
+    assert len(v) == 1
+    # ... but the shared layer is importable as a module
+    assert violations_for_source(
+        mod, "from repro.engines import runtime\n") == []
+    assert violations_for_source(mod, "from .runtime import run_pipeline\n") == []
+
+
+def test_shared_layer_below_every_engine():
+    v = violations_for_source("repro.engines.runtime",
+                              "from .batched import BatchedParams\n")
+    assert len(v) == 1 and "shared engine layer" in v[0][1]
+    assert violations_for_source("repro.engines.pipeline",
+                                 "from .runtime import EngineRuntime\n") == []
+
+
+def test_core_and_kernel_imports_unrestricted():
+    mod = "repro.engines.sharded"
+    ok = ("from repro.core.scoring import gather_csr_rows\n"
+          "from repro.kernels.hype_score.ops import hype_score_select\n"
+          "import numpy as np\n")
+    assert violations_for_source(mod, ok) == []
+
+
+@pytest.mark.parametrize("snippet", [
+    "from repro.engines.superstep import SuperstepParams\n",
+    "import repro.engines.superstep\n",
+])
+def test_cli_entry_detects_violation(tmp_path, snippet):
+    """End-to-end: a violating file under a scratch src tree is caught
+    by the same tree walker the CI entry point runs."""
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text(snippet)
+    msgs = check_tree(tmp_path / "src")
+    assert len(msgs) == 1 and "bad.py" in msgs[0]

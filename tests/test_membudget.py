@@ -11,10 +11,10 @@ import signal
 import numpy as np
 import pytest
 
-from repro.core import hype_batched as hb
 from repro.core import membudget as mb
 from repro.core import metrics, partition_api, resilience
-from repro.core.hype_batched import (SuperstepParams,
+from repro.engines import runtime, superstep
+from repro.engines.superstep import (SuperstepParams,
                                      hype_superstep_partition)
 from repro.core.hypergraph import Hypergraph
 from repro.data.synthetic import powerlaw_hypergraph
@@ -219,7 +219,7 @@ def _synthetic_csr(n=200_000, deg=4, seed=0):
 
 def test_paged_gather_matches_dense_reference():
     indptr, indices = _synthetic_csr()
-    stats = hb.BatchedStats()
+    stats = runtime.BatchedStats()
     pa = mb.PagedAdjacency((indptr, indices), page_bytes=1, stats=stats)
     assert pa.n_chunks > 4                    # floor forces real paging
     rng = np.random.default_rng(1)
@@ -239,7 +239,7 @@ def test_paged_gather_matches_dense_reference():
 
 def test_paged_lru_hits_and_evictions():
     indptr, indices = _synthetic_csr()
-    stats = hb.BatchedStats()
+    stats = runtime.BatchedStats()
     pa = mb.PagedAdjacency((indptr, indices), page_bytes=1, stats=stats)
     # touch every chunk: more chunks than fit under the byte budget
     ids = (np.arange(pa.n_chunks) * pa.chunk_rows).astype(np.int32)
@@ -290,7 +290,7 @@ def test_forced_rungs_bit_exact(hg, base_d2, base_d1, rung):
     rungs 1-2 keep the depth-2 schedule (phase chunking and the tile_l
     drop are bit-exact on this graph), rungs 3-5 clamp the pipeline to
     depth 1 and land on the lock-step baseline."""
-    a, st = hb._run_pipeline(
+    a, st = superstep.run_pipeline(
         hg, 5, SuperstepParams(seed=0, t=8, rows=8), mem_rung=rung)
     want = base_d2[0] if rung <= 2 else base_d1
     assert _digest(a) == _digest(want), rung

@@ -50,39 +50,59 @@ def test_registry_metadata_complete():
 
 
 def test_registered_knobs_match_engine_signatures():
-    """Every knob the registry documents must exist on the engine it is
-    forwarded to — a renamed dataclass field or keyword drifts here."""
+    """Two-way drift guard between the registry and the engines.
+
+    Registry -> engine: every knob ``method_knobs`` documents must exist
+    on the params dataclass / callable it is forwarded to (a renamed
+    field drifts here). Engine -> registry: every params field except
+    ``seed`` (owned by ``partition()``) and the method's own
+    ``knob_exclude`` pins must surface as a documented knob — an engine
+    can no longer grow a field the registry silently hides. The classes
+    are imported from their engine modules directly, so the test also
+    pins the ``params`` specs in ``METHOD_INFO`` to the real classes."""
     from repro.core.hype import HypeParams
-    from repro.core.hype_batched import (BatchedParams, DeviceParams,
-                                         ShardedParams, SuperstepParams)
     from repro.core.hype_stream import StreamParams
     from repro.core.minmax import minmax_partition
     from repro.core.multilevel import hype_multilevel_partition
     from repro.core.shp import shp_partition
+    from repro.engines.batched import BatchedParams
+    from repro.engines.device import DeviceParams
+    from repro.engines.sharded import ShardedParams
+    from repro.engines.superstep import SuperstepParams
 
-    param_fields = {
-        "hype": {f.name for f in dataclasses.fields(HypeParams)},
-        "hype_batched": {f.name
-                         for f in dataclasses.fields(BatchedParams)},
-        "hype_superstep": {f.name
-                           for f in dataclasses.fields(SuperstepParams)},
-        "hype_sharded": {f.name
-                         for f in dataclasses.fields(ShardedParams)},
-        "hype_device": {f.name
-                        for f in dataclasses.fields(DeviceParams)},
-        "hype_stream": {f.name
-                        for f in dataclasses.fields(StreamParams)},
+    param_cls = {
+        "hype": HypeParams,
+        "hype_weighted": HypeParams,
+        "hype_batched": BatchedParams,
+        "hype_superstep": SuperstepParams,
+        "hype_sharded": ShardedParams,
+        "hype_device": DeviceParams,
+        "hype_stream": StreamParams,
+    }
+    for method, cls in param_cls.items():
+        fields = {f.name for f in dataclasses.fields(cls)}
+        knobs = method_knobs(method)
+        assert isinstance(knobs, tuple), method
+        assert len(set(knobs)) == len(knobs), method       # no dupes
+        assert set(knobs) <= fields, (method, set(knobs) - fields)
+        hidden = {"seed"} | set(METHOD_INFO[method].get("knob_exclude",
+                                                        ()))
+        assert set(knobs) == fields - hidden, \
+            (method, set(knobs) ^ (fields - hidden))
+        # the registered spec must resolve to this very class
+        spec = METHOD_INFO[method].get("params")
+        assert spec is not None, method
+        import importlib
+        assert getattr(importlib.import_module(spec[0]), spec[1]) is cls
+    sig_fields = {
         "hype_multilevel": set(
             inspect.signature(hype_multilevel_partition).parameters),
         "minmax_nb": set(inspect.signature(minmax_partition).parameters),
         "shp": set(inspect.signature(shp_partition).parameters),
     }
-    for method in METHODS:
-        knobs = method_knobs(method)
-        assert isinstance(knobs, tuple), method
-        if method in param_fields:
-            missing = set(knobs) - param_fields[method]
-            assert not missing, (method, missing)
+    for method, fields in sig_fields.items():
+        missing = set(method_knobs(method)) - fields
+        assert not missing, (method, missing)
     # the pipelined scheduler's knob is registered on both engines that
     # share it — the drift test stays exhaustive as knobs are added
     assert "pipeline_depth" in method_knobs("hype_superstep")
@@ -119,6 +139,25 @@ def test_registered_knobs_match_engine_signatures():
     for knob in ("chunk_supersteps", "cache_dtype", "store_cap",
                  "act_cap", "snapshot_every", "resume", "fault_plan"):
         assert knob in method_knobs("hype_device"), knob
+
+
+def test_registered_presets_are_valid_knobs():
+    """Every preset bundle must spell the shared fast/balanced/quality
+    vocabulary and set only knobs the method actually registers;
+    ``fast`` is always empty (bit-identical to the engine defaults)."""
+    from repro.core.partition_api import method_presets
+
+    with_presets = [m for m in METHODS if method_presets(m)]
+    assert set(with_presets) == {"hype_batched", "hype_superstep",
+                                 "hype_sharded", "hype_device"}
+    for method in with_presets:
+        presets = method_presets(method)
+        assert tuple(presets) == ("fast", "balanced", "quality"), method
+        assert presets["fast"] == {}, method
+        knobs = set(method_knobs(method))
+        for name, bundle in presets.items():
+            unknown = set(bundle) - knobs
+            assert not unknown, (method, name, unknown)
 
 
 def test_partition_knobs_match_signatures():

@@ -10,9 +10,8 @@ import numpy as np
 import pytest
 
 from repro.core import metrics, resilience
-from repro.core.hype_batched import (ShardedParams, SuperstepParams,
-                                     _SuperstepState,
-                                     hype_sharded_partition,
+from repro.engines.sharded import ShardedParams, hype_sharded_partition
+from repro.engines.superstep import (SuperstepParams, SuperstepState,
                                      hype_superstep_partition)
 from repro.core.hypergraph import Hypergraph
 from repro.data.synthetic import powerlaw_hypergraph, reddit_like
@@ -177,7 +176,7 @@ def test_take_delta_cap_overflow():
     hg = powerlaw_hypergraph(120, 90, seed=3, max_edge=12, max_degree=8)
     # empty plan: these unit tests drive host-side state directly, so
     # an env-injected fault (chaos/low-memory CI) must not fire here
-    st = _SuperstepState(hg, 4, SuperstepParams(
+    st = SuperstepState(hg, 4, SuperstepParams(
         seed=0, fault_plan=resilience.FaultPlan()))
     st.assign_now(np.array([5, 7, 9]), 1)
     st.assign_now(np.array([11, 13]), 2)
@@ -201,7 +200,7 @@ def test_take_delta_exact_cap_boundary():
     hg = powerlaw_hypergraph(120, 90, seed=3, max_edge=12, max_degree=8)
     # empty plan: these unit tests drive host-side state directly, so
     # an env-injected fault (chaos/low-memory CI) must not fire here
-    st = _SuperstepState(hg, 4, SuperstepParams(
+    st = SuperstepState(hg, 4, SuperstepParams(
         seed=0, fault_plan=resilience.FaultPlan()))
     st.assign_now(np.array([1, 2, 3]), 0)
     ids, vals = st.take_delta(3)        # exactly cap: no leftover

@@ -1,0 +1,95 @@
+"""The ``preset`` knob of ``partition()`` (fast | balanced | quality).
+
+Contract under test: ``fast`` is bit-identical to the engine's own
+defaults, ``quality`` is exactly the explicit refinement knobs it
+documents (golden-compared by digest), explicit knobs override the
+preset, and misuse raises a clear ``ValueError``."""
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.partition_api import method_presets, partition
+from repro.data.synthetic import powerlaw_hypergraph
+
+PRESET_METHODS = ("hype_batched", "hype_superstep", "hype_device",
+                  "hype_sharded")
+
+
+def _digest(a):
+    return hashlib.sha256(
+        np.ascontiguousarray(a, dtype=np.int32).tobytes()).hexdigest()[:16]
+
+
+@pytest.fixture(scope="module")
+def hg():
+    return powerlaw_hypergraph(300, 200, seed=7, max_edge=16,
+                               max_degree=12)
+
+
+@pytest.fixture(scope="module")
+def hg_large():
+    # the device-loop engine needs the standard 600-vertex fixture: its
+    # ring capacities mis-broadcast on very small graphs (pre-existing,
+    # see test_hype_device.py for the supported envelope)
+    return powerlaw_hypergraph(600, 400, seed=11, max_edge=30,
+                               max_degree=20)
+
+
+@pytest.mark.parametrize("method", PRESET_METHODS)
+def test_fast_preset_bit_identical_to_defaults(hg, hg_large, method):
+    g = hg_large if method == "hype_device" else hg
+    base = partition(g, 8, method, seed=0)
+    fast = partition(g, 8, method, seed=0, preset="fast")
+    assert _digest(fast) == _digest(base)
+
+
+@pytest.mark.parametrize("method", ("hype_batched", "hype_superstep"))
+def test_quality_preset_is_explicit_knobs(hg, method):
+    """quality == spelling out the registered preset bundle by hand —
+    the preset is sugar, not a separate code path."""
+    bundle = method_presets(method)["quality"]
+    assert bundle["refine_passes"] > 0
+    quality = partition(hg, 8, method, seed=0, preset="quality")
+    explicit = partition(hg, 8, method, seed=0, **bundle)
+    assert _digest(quality) == _digest(explicit)
+
+
+def test_quality_preset_changes_result_when_refine_bites(hg):
+    """refine_passes=4 must actually engage: quality differs from fast
+    on a graph where the post-pass finds positive-gain moves (guards
+    against a preset that is silently dropped on the floor)."""
+    fast = partition(hg, 8, "hype_batched", seed=0, preset="fast")
+    quality = partition(hg, 8, "hype_batched", seed=0, preset="quality")
+    from repro.core import metrics
+    km1_fast = metrics.k_minus_1(hg, fast)
+    km1_quality = metrics.k_minus_1(hg, quality)
+    assert km1_quality <= km1_fast
+
+
+def test_explicit_knob_overrides_preset(hg):
+    over = partition(hg, 8, "hype_batched", seed=0, preset="quality",
+                     refine_passes=0)
+    base = partition(hg, 8, "hype_batched", seed=0)
+    assert _digest(over) == _digest(base)
+
+
+def test_unknown_preset_raises(hg):
+    with pytest.raises(ValueError, match="unknown preset"):
+        partition(hg, 8, "hype_batched", seed=0, preset="turbo")
+
+
+def test_preset_on_presetless_method_raises(hg):
+    with pytest.raises(ValueError, match="does not support presets"):
+        partition(hg, 8, "shp", seed=0, preset="fast")
+    with pytest.raises(ValueError, match="does not support presets"):
+        partition(hg, 8, "hype", seed=0, preset="quality")
+
+
+def test_partition_and_report_forwards_preset(hg):
+    from repro.core.partition_api import partition_and_report
+    rep, a = partition_and_report(hg, 8, "hype_batched", seed=0,
+                                  preset="quality")
+    explicit = partition(hg, 8, "hype_batched", seed=0, refine_passes=4)
+    assert _digest(a) == _digest(explicit)
+    assert rep["method"] == "hype_batched"

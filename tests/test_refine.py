@@ -12,8 +12,8 @@ import pytest
 from _hyp_compat import given, settings, st
 
 from repro.core import metrics
-from repro.core.hype_batched import (BatchedParams, SuperstepParams,
-                                     hype_batched_partition,
+from repro.engines.batched import BatchedParams, hype_batched_partition
+from repro.engines.superstep import (SuperstepParams,
                                      hype_superstep_partition)
 from repro.core.hypergraph import Hypergraph
 from repro.core.refine import (RefineStats, _cut_boundary, _host_gains,
@@ -305,8 +305,8 @@ def test_engine_refine_stats_surfaced(hg):
 
 def test_sharded_refine_knob(hg):
     import jax
-    from repro.core.hype_batched import (ShardedParams,
-                                         hype_sharded_partition)
+    from repro.engines.sharded import (ShardedParams,
+                                       hype_sharded_partition)
     if len(jax.devices()) < 2:
         pytest.skip("needs a simulated multi-device mesh")
     a0 = hype_sharded_partition(hg, 16, ShardedParams(seed=0, devices=2))

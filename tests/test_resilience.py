@@ -13,10 +13,9 @@ import pytest
 
 from repro.core import partition_api, resilience
 from repro.core.hype import HypeParams, hype_partition
-from repro.core.hype_batched import (BatchedParams, ShardedParams,
-                                     SuperstepParams, _SuperstepState,
-                                     hype_batched_partition,
-                                     hype_sharded_partition,
+from repro.engines.batched import BatchedParams, hype_batched_partition
+from repro.engines.sharded import ShardedParams, hype_sharded_partition
+from repro.engines.superstep import (SuperstepParams, SuperstepState,
                                      hype_superstep_partition)
 from repro.core.hypergraph import Hypergraph
 from repro.core import metrics
@@ -368,7 +367,7 @@ def test_abort_mid_pipeline_engine_reusable(hg, monkeypatch):
     down the in-flight donated-buffer chains; the process stays healthy
     and a fresh run still reproduces the golden digest."""
     calls = {"n": 0}
-    real = _SuperstepState.harvest
+    real = SuperstepState.harvest
 
     def exploding(self, handle, acc, targets, exclude=()):
         calls["n"] += 1
@@ -376,11 +375,11 @@ def test_abort_mid_pipeline_engine_reusable(hg, monkeypatch):
             raise KeyboardInterrupt
         return real(self, handle, acc, targets, exclude)
 
-    monkeypatch.setattr(_SuperstepState, "harvest", exploding)
+    monkeypatch.setattr(SuperstepState, "harvest", exploding)
     with pytest.raises(KeyboardInterrupt):
         hype_superstep_partition(
             hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=2))
-    monkeypatch.setattr(_SuperstepState, "harvest", real)
+    monkeypatch.setattr(SuperstepState, "harvest", real)
     a = hype_superstep_partition(
         hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=1))
     assert _digest(a) == _GOLD_PL600_16_8
@@ -390,7 +389,7 @@ def test_abort_via_injected_exception_leaves_no_debris(hg, monkeypatch):
     """Same teardown path driven by an arbitrary error inside harvest:
     the raised exception propagates unchanged (not masked by a
     teardown failure) and a rerun is exact."""
-    real = _SuperstepState.harvest
+    real = SuperstepState.harvest
 
     class Boom(RuntimeError):
         pass
@@ -398,11 +397,11 @@ def test_abort_via_injected_exception_leaves_no_debris(hg, monkeypatch):
     def exploding(self, handle, acc, targets, exclude=()):
         raise Boom("host-side failure mid-harvest")
 
-    monkeypatch.setattr(_SuperstepState, "harvest", exploding)
+    monkeypatch.setattr(SuperstepState, "harvest", exploding)
     with pytest.raises(Boom):
         hype_superstep_partition(
             hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=2))
-    monkeypatch.setattr(_SuperstepState, "harvest", real)
+    monkeypatch.setattr(SuperstepState, "harvest", real)
     a = hype_superstep_partition(
         hg, 16, SuperstepParams(seed=0, t=8, pipeline_depth=1))
     assert _digest(a) == _GOLD_PL600_16_8
@@ -415,7 +414,7 @@ def test_superstep_interpret_not_cached(hg, monkeypatch):
     value would pin the whole run to the mode active at __init__."""
     # empty plan: state is constructed directly, so an env-injected
     # fault (chaos/low-memory CI) must not fire at __init__
-    st = _SuperstepState(hg, 4, SuperstepParams(
+    st = SuperstepState(hg, 4, SuperstepParams(
         seed=0, fault_plan=resilience.FaultPlan()))
     monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
     assert st.interpret is True

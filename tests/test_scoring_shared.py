@@ -1,0 +1,113 @@
+"""Shared scoring-layer equivalences and the jittable-engine fringe
+regression: tile construction paths, vectorized d_ext vs the scalar
+reference, PaddedHypergraph construction, and CSR adjacency."""
+import numpy as np
+
+from repro.core import scoring
+from repro.core.hype import HypeParams
+from repro.core.hype_jax import PaddedHypergraph
+from repro.core.hypergraph import Hypergraph
+from repro.data.synthetic import powerlaw_hypergraph
+
+# ------------------------------------------- shared scoring equivalence
+
+def test_tile_paths_agree():
+    """Adjacency fast path == per-batch dedup path, row for row."""
+    hg = powerlaw_hypergraph(300, 200, seed=4, max_edge=18, max_degree=12)
+    rng = np.random.default_rng(0)
+    assignment = np.where(rng.random(hg.n) < 0.3,
+                          rng.integers(0, 4, hg.n), -1).astype(np.int32)
+    cands = rng.choice(np.flatnonzero(assignment < 0), 40, replace=False)
+    adj = hg.vertex_adjacency()
+    t1, tr1 = scoring.neighbor_tile(hg, cands, assignment, pad_b=64)
+    t2, tr2 = scoring.neighbor_tile_adj(adj, cands, assignment, pad_b=64)
+    np.testing.assert_array_equal(tr1, tr2)
+    # same sets per row (construction order may differ)
+    for i in range(len(cands)):
+        np.testing.assert_array_equal(np.sort(t1[i][t1[i] >= 0]),
+                                      np.sort(t2[i][t2[i] >= 0]))
+
+
+def test_batched_dext_matches_scalar():
+    """Vectorized d_ext == the numpy engine's per-vertex d_ext."""
+    from repro.core.hype import _HypeState
+    hg = powerlaw_hypergraph(300, 200, seed=5, max_edge=18, max_degree=12)
+    st = _HypeState(hg, 4, HypeParams(seed=0))
+    rng = np.random.default_rng(1)
+    st.assignment[rng.random(hg.n) < 0.25] = 1
+    fr = rng.choice(np.flatnonzero(st.assignment < 0), 8, replace=False)
+    st.in_fringe[fr] = True
+    vs = rng.integers(0, hg.n, 50)
+    batch = scoring.batched_dext_numpy(hg, vs, st.in_fringe, st.assignment)
+    scalar = np.asarray([st.d_ext(int(v)) for v in vs])
+    np.testing.assert_allclose(batch, scalar)
+    # adjacency path agrees too
+    adj = hg.vertex_adjacency()
+    np.testing.assert_allclose(
+        scoring.batched_dext_adj(adj, vs, st.in_fringe, st.assignment),
+        scalar)
+
+
+def test_padded_hypergraph_vectorized_matches_loop():
+    """from_hypergraph: numpy scatter == the per-row loop, bit for bit."""
+    for seed in range(4):
+        hg = powerlaw_hypergraph(120, 90, seed=seed, max_edge=14,
+                                 max_degree=9)
+        ph = PaddedHypergraph.from_hypergraph(hg)
+        max_deg = max(1, int(hg.vertex_degrees.max()))
+        max_size = max(1, int(hg.edge_sizes.max()))
+        v2e = np.full((hg.n, max_deg), -1, dtype=np.int32)
+        e2v = np.full((hg.m, max_size), -1, dtype=np.int32)
+        for v in range(hg.n):
+            es = hg.vertex_edges(v)
+            v2e[v, :es.size] = es
+        for e in range(hg.m):
+            ps = hg.edge_pins(e)
+            e2v[e, :ps.size] = ps
+        np.testing.assert_array_equal(np.asarray(ph.v2e), v2e)
+        np.testing.assert_array_equal(np.asarray(ph.e2v), e2v)
+    # degenerate: vertices/edges with no pins at all
+    hg0 = Hypergraph.from_edge_lists(3, [[], [0]])
+    ph0 = PaddedHypergraph.from_hypergraph(hg0)
+    assert ph0.v2e.shape == (3, 1) and ph0.e2v.shape == (2, 1)
+
+
+def test_vertex_adjacency_matches_neighbors():
+    hg = powerlaw_hypergraph(150, 100, seed=6, max_edge=12, max_degree=8)
+    indptr, indices = hg.vertex_adjacency()
+    for v in (0, 7, int(np.argmax(hg.vertex_degrees)), hg.n - 1):
+        row = indices[indptr[v]:indptr[v + 1]]
+        np.testing.assert_array_equal(np.sort(row), hg.neighbors(v))
+
+
+
+
+# --------------------------------------------- fringe-release regression
+
+def test_seq_grow_releases_fringe():
+    """After each phase the jittable engine must leave in_fringe all-False
+    (the old `.at[].set(x & (idx < 0))` eviction raced on vertex 0)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import hype_jax as hj
+
+    hg = powerlaw_hypergraph(200, 140, seed=7, max_edge=14, max_degree=10)
+    ph = PaddedHypergraph.from_hypergraph(hg)
+    n, s, r = ph.n, 10, 2
+    state = hj._SeqState(
+        assignment=jnp.full((n,), -1, jnp.int32),
+        in_fringe=jnp.zeros((n,), bool),
+        fringe=jnp.full((s,), -1, jnp.int32),
+        cache=jnp.full((n,), -1.0, jnp.float32),
+        edge_active=jnp.zeros((ph.m,), bool),
+        core_size=jnp.int32(0),
+        rand_key=jax.random.PRNGKey(0),
+    )
+    grow = jax.jit(hj._seq_grow, static_argnames=("part", "s", "r"))
+    for part in range(3):
+        state = grow(ph, state, part=part, target=jnp.int32(n // 4),
+                     s=s, r=r)
+        state = hj._release_fringe(state, n, s)
+        assert not bool(np.asarray(state.in_fringe).any()), \
+            f"in_fringe leaked after phase {part}"
+        assert (np.asarray(state.fringe) == -1).all()

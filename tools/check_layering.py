@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Static import-layering lint for the engine split (DESIGN.md §1).
+
+The package layout separates the shared core (``repro.core``,
+``repro.kernels``) from the per-engine modules in ``repro.engines``.
+Two rules keep the layering acyclic and the engines independent, and
+this lint enforces them on *module top-level* imports only (function-
+level lazy imports are the sanctioned escape hatch — dispatch tables
+and fallback chains resolve engines at call time):
+
+  1. ``repro.core`` (and anything under it) never imports
+     ``repro.engines`` at module level. The core is the layer below;
+     ``partition_api`` reaches the engines through lazy resolvers.
+  2. Engine modules may import the shared engine layer
+     (``repro.engines.runtime``, ``repro.engines.pipeline``) and the
+     core/kernels freely, but from a *sibling* engine module they may
+     only ``from``-import public (non-underscore) names — the Params
+     inheritance chain and the fallback entry points. Binding a sibling
+     module object (``import repro.engines.batched`` or
+     ``from repro.engines import batched``) or importing a private
+     name reaches into another engine's internals and is rejected.
+     ``runtime``/``pipeline`` themselves sit below every engine and may
+     not import any of them.
+
+Exit status 0 when ``src/repro`` is clean, 1 with one line per
+violation otherwise. ``violations_for_source`` is importable for tests.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+from typing import List, Tuple
+
+ENGINES_PKG = "repro.engines"
+# the shared engine layer: importable from every engine module
+SHARED = {f"{ENGINES_PKG}.runtime", f"{ENGINES_PKG}.pipeline"}
+
+
+def _resolve(modname: str, node: ast.ImportFrom) -> str:
+    """Absolute target of an ``ImportFrom`` found in module ``modname``."""
+    if node.level == 0:
+        return node.module or ""
+    parts = modname.split(".")[:-node.level]
+    if node.module:
+        parts.append(node.module)
+    return ".".join(parts)
+
+
+def _in_pkg(target: str, pkg: str) -> bool:
+    return target == pkg or target.startswith(pkg + ".")
+
+
+def _top_level_imports(tree: ast.Module):
+    """Yield Import/ImportFrom nodes outside any function body."""
+    stack = list(tree.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            yield node
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue                      # lazy imports are sanctioned
+        else:
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def violations_for_source(modname: str,
+                          source: str) -> List[Tuple[int, str]]:
+    """Lint one module; returns ``[(lineno, message), ...]``."""
+    tree = ast.parse(source)
+    out: List[Tuple[int, str]] = []
+    in_core = _in_pkg(modname, "repro.core")
+    is_shared = modname in SHARED
+    is_engine = (_in_pkg(modname, ENGINES_PKG)
+                 and modname != ENGINES_PKG and not is_shared)
+
+    for node in _top_level_imports(tree):
+        if isinstance(node, ast.Import):
+            targets = [(a.name, None) for a in node.names]
+        else:
+            tgt = _resolve(modname, node)
+            targets = [(tgt, a.name) for a in node.names]
+        for tgt, name in targets:
+            if not _in_pkg(tgt, ENGINES_PKG):
+                continue
+            if in_core:
+                out.append((node.lineno,
+                            f"{modname}: repro.core may not import "
+                            f"{tgt} at module level (layering rule 1)"))
+            elif is_shared and tgt != modname and not (
+                    tgt in SHARED or tgt == ENGINES_PKG):
+                out.append((node.lineno,
+                            f"{modname}: the shared engine layer may "
+                            f"not import engine module {tgt}"))
+            elif is_engine:
+                # sibling = engine module other than self / shared layer
+                if tgt == ENGINES_PKG:
+                    sib = name is not None and name != "*" and \
+                        f"{ENGINES_PKG}.{name}" not in SHARED
+                    if isinstance(node, ast.Import) or sib:
+                        out.append((node.lineno,
+                                    f"{modname}: binds engine module "
+                                    f"object {tgt}.{name or ''} — "
+                                    f"import its public names instead"))
+                    continue
+                if tgt in SHARED or tgt == modname:
+                    continue
+                if isinstance(node, ast.Import):
+                    out.append((node.lineno,
+                                f"{modname}: binds sibling engine "
+                                f"module {tgt} — from-import its "
+                                f"public names instead"))
+                elif name == "*" or name.startswith("_"):
+                    out.append((node.lineno,
+                                f"{modname}: imports non-public name "
+                                f"{name!r} from sibling engine {tgt}"))
+    return out
+
+
+def check_tree(src_root: pathlib.Path) -> List[str]:
+    """Lint every module under ``src_root/repro``; returns messages."""
+    msgs = []
+    for path in sorted((src_root / "repro").rglob("*.py")):
+        rel = path.relative_to(src_root).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        modname = ".".join(parts)
+        for lineno, msg in violations_for_source(modname,
+                                                 path.read_text()):
+            msgs.append(f"{path}:{lineno}: {msg}")
+    return msgs
+
+
+def main(argv=None) -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent / "src"
+    msgs = check_tree(root)
+    for msg in msgs:
+        print(msg, file=sys.stderr)
+    if msgs:
+        print(f"check_layering: {len(msgs)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print("check_layering: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
